@@ -1,0 +1,67 @@
+"""Roofline report: reads experiments/dryrun/*.json -> per-cell terms.
+
+Emits CSV rows (for benchmarks.run) and a markdown table
+(experiments/roofline.md) consumed by EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+OUT_MD = Path(__file__).resolve().parents[1] / "experiments" / "roofline.md"
+
+
+def load_cells(mesh: str = "singlepod"):
+    cells = []
+    for f in sorted(ART.glob(f"*__{mesh}.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") == "ok":
+            cells.append(d)
+    return cells
+
+
+def markdown_table(cells) -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | "
+           "dominant | MODEL/HLO flops | frac | frac (VMEM-fused kernels)"
+           " | HBM GiB/dev (structural) |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = [hdr]
+    for d in cells:
+        r = d["roofline"]
+        rf = d.get("roofline_vmem_fused", r)
+        mem = d.get("memory_structural", {})
+        sm = mem.get("structural_total_per_dev", 0) / 2**30
+        xm = d["memory_analysis"].get("total_per_device", 0) / 2**30
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{rf['roofline_fraction']:.3f} | {xm:.1f} ({sm:.1f}) |\n")
+    return "".join(lines)
+
+
+def run():
+    rows = []
+    for mesh in ("singlepod", "multipod"):
+        cells = load_cells(mesh)
+        for d in cells:
+            r = d["roofline"]
+            key = f"roofline.{mesh}.{d['arch']}.{d['shape']}"
+            rows.append((f"{key}.dominant_term_s",
+                         max(r["compute_s"], r["memory_s"],
+                             r["collective_s"]),
+                         f"dominant={r['dominant']}"))
+            rows.append((f"{key}.roofline_frac",
+                         r["roofline_fraction"], ""))
+    # write the markdown table (single-pod per the assignment)
+    cells = load_cells("singlepod")
+    OUT_MD.parent.mkdir(parents=True, exist_ok=True)
+    OUT_MD.write_text(
+        "# Roofline (single-pod 16x16, v5e constants)\n\n"
+        + markdown_table(cells))
+    rows.append(("roofline.cells_ok.singlepod", len(cells), "cells"))
+    rows.append(("roofline.cells_ok.multipod",
+                 len(load_cells("multipod")), "cells"))
+    return rows

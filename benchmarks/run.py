@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV.  Modules:
+  tier_characterization  Figs. 2-4 + Sec. III stream packing
+  transfer_paths         Figs. 5-6 accelerator<->tier path
+  zero_offload_train     Figs. 8-9 ZeRO-Offload policies
+  flexgen_serve          Figs. 11-12 + Table II serving
+  oli_hpc                Figs. 13-15 + Table III OLI
+  tiering_migration      Figs. 16-17 migration x placement
+  kernel_bench           Pallas kernel microbenches
+  roofline               per-cell roofline from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = [
+    "tier_characterization",
+    "transfer_paths",
+    "zero_offload_train",
+    "flexgen_serve",
+    "oli_hpc",
+    "tiering_migration",
+    "kernel_bench",
+    "roofline",
+]
+
+
+def main() -> None:
+    only = sys.argv[1:] or MODULES
+    failures = 0
+    for name in MODULES:
+        if name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            rows = mod.run()
+            for key, val, derived in rows:
+                if isinstance(val, float):
+                    print(f"{key},{val:.6g},{derived}")
+                else:
+                    print(f"{key},{val},{derived}")
+            print(f"# {name}: {len(rows)} rows in "
+                  f"{time.time() - t0:.1f}s", file=sys.stderr)
+        except Exception:
+            failures += 1
+            print(f"# {name}: FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Paper Figs. 16-17: page-migration policies x static placement.
+
+Reproduces the §VI study: {NoBalance, AutoNUMA, Tiering-0.8, TPP} x
+{first-touch, uniform interleave, OLI} on the paper's four workload
+archetypes (stable / scattered / uniform hot sets), including PMO 3
+(interleaved pages never fault) and PMO 4 (migration degrades OLI).
+"""
+from __future__ import annotations
+
+from repro.core import (AutoNUMA, Block, MigrationSim, NoBalance, TPP,
+                        Tiering08, make_blocks_from_plan, paper_system,
+                        trace_scattered_hotset, trace_stable_hotset,
+                        trace_uniform)
+
+MB64 = 64 * 1024**2
+POLICIES = [NoBalance, AutoNUMA, Tiering08, TPP]
+TRACES = {
+    "pagerank_stable": lambda ids: trace_stable_hotset(ids, 30, 0.12),
+    "graph500_scattered": lambda ids: trace_scattered_hotset(ids, 30, 0.3),
+    "ft_uniform": lambda ids: trace_uniform(ids, 30),
+}
+
+
+def _blocks_first_touch(n=104, fast_n=40):
+    return ([Block("a", i, MB64, "LDRAM") for i in range(fast_n)]
+            + [Block("a", i, MB64, "CXL") for i in range(fast_n, n)])
+
+
+def _blocks_interleaved(n=104):
+    shares = {"a": [("LDRAM", 0.4), ("CXL", 0.6)]}
+    return make_blocks_from_plan(shares, {"a": n * MB64},
+                                 block_bytes=MB64,
+                                 interleaved_objs=["a"])
+
+
+def fig16_rows():
+    rows = []
+    tiers = paper_system("A")
+    for tname, tfn in TRACES.items():
+        for place, mk in (("first_touch", _blocks_first_touch),
+                          ("interleave", _blocks_interleaved)):
+            for P in POLICIES:
+                blocks = mk()
+                ids = [(b.obj, b.idx) for b in blocks]
+                sim = MigrationSim(blocks, tiers, "LDRAM", P(),
+                                   fast_capacity_bytes=40 * MB64)
+                r = sim.run(tfn(ids))
+                rows.append((f"fig16.{tname}.{place}.{P().name}.time",
+                             r.exec_time_s, "s"))
+                rows.append((f"fig16.{tname}.{place}.{P().name}.faults",
+                             r.stats.hint_faults, "hint_faults"))
+    return rows
+
+
+def pmo3_rows():
+    """Interleaved placement suppresses hint faults entirely."""
+    tiers = paper_system("A")
+    rows = []
+    for P in (AutoNUMA, TPP):
+        b_ft = _blocks_first_touch()
+        b_il = _blocks_interleaved()
+        tr = trace_stable_hotset([(b.obj, b.idx) for b in b_ft], 20, 0.2)
+        r_ft = MigrationSim(b_ft, tiers, "LDRAM", P(),
+                            fast_capacity_bytes=40 * MB64).run(tr)
+        tr2 = trace_stable_hotset([(b.obj, b.idx) for b in b_il], 20, 0.2)
+        r_il = MigrationSim(b_il, tiers, "LDRAM", P(),
+                            fast_capacity_bytes=40 * MB64).run(tr2)
+        rows.append((f"pmo3.{P().name}.faults_first_touch",
+                     r_ft.stats.hint_faults, ""))
+        rows.append((f"pmo3.{P().name}.faults_interleaved",
+                     r_il.stats.hint_faults, "(paper: ~0)"))
+    return rows
+
+
+def _blocks_oli_mixed(n=104):
+    """OLI-realistic population: bandwidth-hungry object interleaved
+    (unmigratable, PMO 3) + latency-sensitive residue first-touch on
+    LDRAM (migratable) — migration can only churn the residue."""
+    hungry = make_blocks_from_plan(
+        {"hungry": [("LDRAM", 0.3), ("CXL", 0.7)]},
+        {"hungry": (n - 24) * MB64}, block_bytes=MB64,
+        interleaved_objs=["hungry"])
+    rest = [Block("rest", i, MB64, "LDRAM") for i in range(16)] + \
+        [Block("rest", 100 + i, MB64, "CXL") for i in range(8)]
+    return hungry + rest
+
+
+def pmo4_rows():
+    """PMO 4: migration degrades OLI (paper: -46%..-88%) — it churns the
+    residue blocks and steals fast capacity from the interleaved shares."""
+    tiers = paper_system("A")
+    rows = []
+    blocks = _blocks_oli_mixed()
+    ids = [(b.obj, b.idx) for b in blocks]
+    tr = trace_scattered_hotset(ids, 30, hot_fraction=0.5)
+    base = MigrationSim(_blocks_oli_mixed(), tiers, "LDRAM",
+                        NoBalance(),
+                        fast_capacity_bytes=42 * MB64).run(tr)
+    for P in (AutoNUMA, Tiering08, TPP):
+        r = MigrationSim(_blocks_oli_mixed(), tiers, "LDRAM", P(),
+                         fast_capacity_bytes=42 * MB64).run(tr)
+        rows.append((f"pmo4.oli_plus_{P().name}.slowdown",
+                     r.exec_time_s / base.exec_time_s, "x_vs_no_migration"))
+    return rows
+
+
+def run():
+    return fig16_rows() + pmo3_rows() + pmo4_rows()

@@ -1,0 +1,40 @@
+"""Tour of the paper's placement policies on the HPC dwarfs (Figs 13-15).
+
+    PYTHONPATH=src python examples/interleave_policy_tour.py
+"""
+import dataclasses
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (ObjectLevelInterleave, TierPreferred,  # noqa: E402
+                        UniformInterleave, compare_policies,
+                        hpc_workload_objects, paper_system)
+
+
+def main():
+    for cap, tag in ((128, "sufficient"), (64, "insufficient")):
+        tiers = {k: v for k, v in paper_system("A").items()
+                 if k in ("LDRAM", "CXL")}
+        tiers["LDRAM"] = dataclasses.replace(tiers["LDRAM"],
+                                             capacity_GiB=cap)
+        print(f"\n=== LDRAM {cap} GB ({tag}) + CXL, system A ===")
+        print(f"{'workload':10s} {'preferred':>10s} {'uniform':>10s} "
+              f"{'OLI':>10s}  best")
+        for wl in ("BT", "LU", "CG", "MG", "SP", "FT", "XSBench"):
+            objs = hpc_workload_objects(wl)
+            costs = compare_policies(
+                objs,
+                [TierPreferred("LDRAM"),
+                 UniformInterleave(["LDRAM", "CXL"]),
+                 ObjectLevelInterleave("LDRAM", ["CXL"])],
+                tiers)
+            p = costs["LDRAM_preferred"].step_s
+            u = costs["uniform_interleave[LDRAM+CXL]"].step_s
+            o = costs["oli[LDRAM+CXL]"].step_s
+            best = min((p, "preferred"), (u, "uniform"), (o, "OLI"))[1]
+            print(f"{wl:10s} {p:9.2f}s {u:9.2f}s {o:9.2f}s  {best}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""End-to-end driver: ZeRO-Offload training (~100M model, few hundred
+steps), optimizer state on the HOST tier — the paper's Sec. IV-A use case
+with real memory-kind placement, checkpoint/restart included.
+
+    PYTHONPATH=src python examples/train_zero_offload.py \
+        --steps 300 --policy ldram+cxl
+"""
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro.checkpoint import store                      # noqa: E402
+from repro.configs.base import LayerSpec, ModelConfig   # noqa: E402
+from repro.data.pipeline import DataConfig, DataIterator  # noqa: E402
+from repro.models import lm                              # noqa: E402
+from repro.offload.train_engine import (OffloadConfig,  # noqa: E402
+                                        ZeroOffloadEngine)
+
+POLICIES = {
+    "ldram_only": [("device", 1.0)],
+    "ldram+cxl": [("device", 0.5), ("unpinned_host", 0.5)],
+    "ldram+rdram": [("device", 0.5), ("pinned_host", 0.5)],
+    "interleave_all": [("device", 0.34), ("pinned_host", 0.33),
+                       ("unpinned_host", 0.33)],
+    "host_only": [("pinned_host", 1.0)],
+}
+
+# ~100M-parameter GPT-style model
+CFG = ModelConfig(
+    name="gpt-100m", family="dense", n_layers=12, d_model=768,
+    n_heads=12, n_kv=12, d_ff=3072, vocab=32000, head_dim=64,
+    pattern=(LayerSpec(kind="attn"),), norm="ln", act="gelu",
+    pos_emb="learned", max_pos=1024, tie_embeddings=True, remat=False,
+    attn_chunk=256, loss_chunk=128)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--policy", default="host_only",
+                    choices=list(POLICIES))
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    print(f"~{CFG.param_count()/1e6:.0f}M params; opt-state policy: "
+          f"{args.policy}")
+    params = lm.init_params(jax.random.PRNGKey(0), CFG)
+    eng = ZeroOffloadEngine(CFG, params, OffloadConfig(
+        opt_state_shares=POLICIES[args.policy]))
+
+    dc = DataConfig(vocab=CFG.vocab, seq_len=args.seq,
+                    global_batch=args.batch)
+    it = DataIterator(dc)
+    start = 0
+    if store.latest_step(args.ckpt_dir) is not None:
+        state, meta = store.restore(args.ckpt_dir, eng.params)
+        eng.params = state
+        start = meta["step"]
+        it.restore({"step": start})
+        print(f"restored at step {start}")
+
+    t_hist = []
+    for i in range(start, args.steps):
+        b = next(it)
+        t = eng.train_step({"tokens": jnp.asarray(b["tokens"]),
+                            "labels": jnp.asarray(b["labels"])})
+        t_hist.append(t)
+        if i % 20 == 0:
+            print(f"step {i:4d} loss={t.loss:.4f} total={t.total_s*1e3:6.1f}ms "
+                  f"[fwd/bwd {t.fwd_bwd_s*1e3:6.1f} | grad→host "
+                  f"{t.grad_xfer_s*1e3:5.1f} | adam(host) "
+                  f"{t.optimizer_s*1e3:6.1f} | params→dev "
+                  f"{t.param_xfer_s*1e3:5.1f}]")
+        if args.ckpt_every and i and i % args.ckpt_every == 0:
+            store.save(args.ckpt_dir, i, eng.params,
+                       metadata={"step": i})
+    host = eng.opt_state_bytes_on("pinned_host") \
+        + eng.opt_state_bytes_on("unpinned_host")
+    print(f"\nopt state on host tiers: {host/2**20:.0f} MiB; "
+          f"mean step {sum(x.total_s for x in t_hist)/len(t_hist)*1e3:.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro: tiered-memory-aware JAX training/serving framework.
+
+Reproduction + TPU adaptation of "Exploring and Evaluating Real-world
+CXL: Use Cases and System Adoption" (IPDPS'25).  See DESIGN.md.
+"""
+__version__ = "1.0.0"

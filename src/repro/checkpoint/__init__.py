@@ -1,0 +1,1 @@
+from .store import save, restore, latest_step

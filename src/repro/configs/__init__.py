@@ -1,0 +1,4 @@
+from .base import (LayerSpec, ModelConfig, ShapeConfig, SHAPES,
+                   smoke_variant)
+from .registry import (ARCH_IDS, ASSIGNED_ARCHS, get_config,
+                       get_smoke_config, assigned_cells)

@@ -1,0 +1,27 @@
+"""Core library: the paper's contribution as composable pieces.
+
+- tiers: memory-tier descriptors + measured performance models (Figs. 2-4)
+- objects: data-object metadata (the unit of OLI placement)
+- policies: preferred / first-touch / uniform interleave / OLI (§V-B)
+- costmodel: analytic step-time model + FlexGen-style policy search
+- migration: AutoNUMA / Tiering-0.8 / TPP tiering runtimes (§VI)
+- tiered_array: block-granular placement over JAX memory kinds
+- interleave: policy -> placement orchestration
+"""
+from .tiers import (MemoryTier, paper_system, tpu_v5e_tiers, assign_streams,
+                    interleave_bandwidth, GiB, GB)
+from .objects import (DataObject, total_footprint,
+                      select_interleave_candidates, hpc_workload_objects,
+                      llm_train_objects, llm_serve_objects)
+from .policies import (Policy, PlacementPlan, TierPreferred, FirstTouch,
+                       UniformInterleave, ObjectLevelInterleave, make_policy)
+from .costmodel import (StepCost, plan_step_cost, compare_policies,
+                        policy_search, SearchResult)
+from .migration import (Block, MigrationSim, MigrationStats, NoBalance,
+                        AutoNUMA, Tiering08, TPP, make_blocks_from_plan,
+                        trace_stable_hotset, trace_scattered_hotset,
+                        trace_uniform, SimResult)
+from .tiered_array import (TieredArray, place_pytree, gather_pytree,
+                           available_memory_kinds, TIER_TO_MEMORY_KIND)
+from .interleave import (objects_from_pytree, realize_plan, plan_and_place,
+                         recommend_streams)

@@ -1,0 +1,70 @@
+"""Interleaving orchestration: policy -> concrete TieredArray placements.
+
+Bridges the analytic layer (objects/policies/costmodel) and the JAX layer
+(tiered_array): given a pytree of arrays with object metadata, plan with a
+policy and realize per-leaf block placements, with the Sec. III stream-
+assignment used to size the block granularity.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from .objects import DataObject
+from .policies import PlacementPlan, Policy
+from .tiers import MemoryTier, assign_streams
+from .tiered_array import TieredArray, TIER_TO_MEMORY_KIND
+
+
+def objects_from_pytree(tree, traffic_fn=None,
+                        group: str = "params") -> List[DataObject]:
+    """Derive DataObjects from pytree leaves.
+
+    traffic_fn(name, leaf) -> (read_bytes, write_bytes, random_fraction);
+    default: one streaming read per step (weights-like).
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    objs = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        if traffic_fn is None:
+            r, w, rf = nbytes, 0, 0.0
+        else:
+            r, w, rf = traffic_fn(name, leaf)
+        objs.append(DataObject(name, nbytes, r, w, rf, group=group))
+    return objs
+
+
+def realize_plan(tree, plan: PlacementPlan,
+                 block_rows: Optional[int] = 64) -> Dict[str, TieredArray]:
+    """Place each pytree leaf according to the plan's shares."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out: Dict[str, TieredArray] = {}
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        shares = plan.shares.get(name, [("HBM", 1.0)])
+        n_kinds = len({TIER_TO_MEMORY_KIND.get(t, "device")
+                       for t, _ in shares})
+        br = block_rows if n_kinds > 1 else None
+        out[name] = TieredArray.from_plan(leaf, shares, block_rows=br)
+    return out
+
+
+def plan_and_place(tree, policy: Policy, tiers: Mapping[str, MemoryTier],
+                   traffic_fn=None, block_rows: Optional[int] = 64
+                   ) -> Tuple[PlacementPlan, Dict[str, TieredArray]]:
+    objs = objects_from_pytree(tree, traffic_fn)
+    plan = policy.plan(objs, tiers)
+    return plan, realize_plan(tree, plan, block_rows)
+
+
+def recommend_streams(tiers: Mapping[str, MemoryTier],
+                      total_streams: int = 32) -> Dict[str, int]:
+    """Sec. III bandwidth packing: DMA streams per tier (the 6/23/23 trick)."""
+    alloc, _ = assign_streams(tiers, total_streams)
+    return alloc

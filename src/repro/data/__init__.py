@@ -1,0 +1,2 @@
+from .pipeline import DataConfig, DataIterator, batch_for_step, \
+    global_batch_for_step

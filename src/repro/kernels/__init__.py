@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+fused_adam       -- ZeRO-Offload optimizer hot loop (Sec. IV-A)
+flash_attention  -- blocked prefill attention
+decode_attention -- GQA decode over (tier-resident) KV cache (Sec. IV-B)
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper), ref.py (pure-jnp oracle used by the allclose tests).
+"""
+from . import ops, ref

@@ -1,0 +1,110 @@
+"""Fused AdamW Pallas kernel — the ZeRO-Offload hot loop (Sec. IV-A).
+
+The paper shows the CPU-side ADAM step is the bandwidth-bound critical
+path of offloaded training ("the optimizer ... is sensitive to memory
+latency/bandwidth"; 2-18% slowdown on CXL).  A fused single-pass update
+touches each of (master, m, v, g) exactly once — 4 reads + 3 writes per
+element instead of the ~10 reads + 6 writes of an unfused chain, moving
+the tier-bandwidth bottleneck down by ~2.3x.
+
+TPU mapping: 1D parameter tensors are viewed as (rows, 128) lanes; the
+grid walks row-blocks sized to keep all four operand tiles resident in
+VMEM (4 tiles x block x 128 x 4 B ≈ 1 MiB per step at block=512).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEF_BLOCK_ROWS = 512
+
+
+def _adam_kernel(master_ref, m_ref, v_ref, g_ref, lr_ref, hyp_ref,
+                 out_master_ref, out_m_ref, out_v_ref):
+    """One (block_rows, LANES) tile; hyp = [b1, b2, eps, wd, b1c, b2c]."""
+    b1 = hyp_ref[0]
+    b2 = hyp_ref[1]
+    eps = hyp_ref[2]
+    wd = hyp_ref[3]
+    b1c = hyp_ref[4]
+    b2c = hyp_ref[5]
+    lr = lr_ref[0]
+
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...]
+    v = v_ref[...]
+    master = master_ref[...]
+
+    m2 = b1 * m + (1.0 - b1) * g
+    v2 = b2 * v + (1.0 - b2) * g * g
+    mh = m2 / b1c
+    vh = v2 / b2c
+    new = master - lr * (mh / (jnp.sqrt(vh) + eps) + wd * master)
+
+    out_master_ref[...] = new
+    out_m_ref[...] = m2
+    out_v_ref[...] = v2
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def fused_adam_2d(master, m, v, g, lr, hyp, *,
+                  block_rows: int = DEF_BLOCK_ROWS,
+                  interpret: bool = True):
+    """master/m/v: (R, LANES) fp32; g: (R, LANES) any float; lr: (1,);
+    hyp: (6,) = [b1, b2, eps, wd, b1c, b2c]."""
+    R = master.shape[0]
+    blk = min(block_rows, R)
+    grid = (-(-R // blk),)
+    spec = pl.BlockSpec((blk, LANES), lambda i: (i, 0))
+    scal = pl.BlockSpec(memory_space=pl.ANY) if False else \
+        pl.BlockSpec((1,), lambda i: (0,))
+    hyp_spec = pl.BlockSpec((6,), lambda i: (0,))
+    out_shape = [jax.ShapeDtypeStruct((R, LANES), jnp.float32)] * 3
+    return pl.pallas_call(
+        _adam_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec, scal, hyp_spec],
+        out_specs=[spec, spec, spec],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(master, m, v, g, lr, hyp)
+
+
+def fused_adam(master: jax.Array, m: jax.Array, v: jax.Array,
+               g: jax.Array, *, lr: float, b1: float, b2: float,
+               eps: float, wd: float, b1c, b2c,
+               block_rows: int = DEF_BLOCK_ROWS,
+               interpret: bool = True
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Arbitrary-shape wrapper: pads/reshapes to (R, 128) lanes."""
+    shape = master.shape
+    n = master.size
+    R = -(-n // LANES)
+    pad = R * LANES - n
+
+    def to2d(x, dt=jnp.float32):
+        x = x.reshape(-1).astype(dt)
+        if pad:
+            x = jnp.pad(x, (0, pad))
+        return x.reshape(R, LANES)
+
+    lr_a = jnp.asarray([lr], jnp.float32)
+    hyp = jnp.stack([jnp.asarray(b1, jnp.float32),
+                     jnp.asarray(b2, jnp.float32),
+                     jnp.asarray(eps, jnp.float32),
+                     jnp.asarray(wd, jnp.float32),
+                     jnp.asarray(b1c, jnp.float32),
+                     jnp.asarray(b2c, jnp.float32)])
+    nm, m2, v2 = fused_adam_2d(to2d(master), to2d(m), to2d(v), to2d(g),
+                               lr_a, hyp, block_rows=block_rows,
+                               interpret=interpret)
+
+    def back(x):
+        return x.reshape(-1)[:n].reshape(shape)
+
+    return back(nm), back(m2), back(v2)

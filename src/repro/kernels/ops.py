@@ -1,0 +1,41 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernel body executes as pure
+JAX on CPU — exactly how the test suite validates against ref.py); on a
+TPU backend the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+from . import fused_adam as _adam
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fused_adam(master, m, v, g, *, lr, b1, b2, eps, wd, b1c, b2c,
+               block_rows: int = 512
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    return _adam.fused_adam(master, m, v, g, lr=lr, b1=b1, b2=b2, eps=eps,
+                            wd=wd, b1c=b1c, b2c=b2c,
+                            block_rows=block_rows,
+                            interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128) -> jax.Array:
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=_interpret())
+
+
+def decode_attention(q, k_cache, v_cache, kv_len, *, block_k: int = 256
+                     ) -> jax.Array:
+    return _dec.decode_attention(q, k_cache, v_cache, kv_len,
+                                 block_k=block_k, interpret=_interpret())

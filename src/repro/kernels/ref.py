@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_adam(master: jax.Array, m: jax.Array, v: jax.Array,
+               g: jax.Array, *, lr: float, b1: float, b2: float,
+               eps: float, wd: float, b1c, b2c
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """AdamW update (fp32). Returns (new_master, new_m, new_v)."""
+    g = g.astype(jnp.float32)
+    m2 = b1 * m + (1.0 - b1) * g
+    v2 = b2 * v + (1.0 - b2) * g * g
+    mh = m2 / b1c
+    vh = v2 / b2c
+    new = master - lr * (mh / (jnp.sqrt(vh) + eps) + wd * master)
+    return new, m2, v2
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, causal: bool = True) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd). Returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    kf = jnp.repeat(k, rep, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf)
+    s = s / math.sqrt(hd)
+    if causal:
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return o.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_len: jax.Array) -> jax.Array:
+    """GQA decode: q (B, H, hd); caches (B, S, KV, hd); kv_len scalar.
+
+    Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    rep = H // KV
+    kf = jnp.repeat(k_cache, rep, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v_cache, rep, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32), kf)
+    s = s / math.sqrt(hd)
+    mask = jnp.arange(S)[None, None, :] < kv_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p, vf).astype(q.dtype)

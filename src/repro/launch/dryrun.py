@@ -1,0 +1,181 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+initialization, and the production meshes need 512 placeholder devices.
+Do NOT import this module from tests/benchmarks (they want 1 device);
+run it as ``python -m repro.launch.dryrun``.
+
+Per cell this produces a JSON artifact with:
+  * memory_analysis (per-device bytes — proves the cell fits),
+  * cost_analysis (FLOPs / bytes for the roofline),
+  * parsed collective wire bytes + op census,
+  * the three roofline terms + dominant bottleneck.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs.base import SHAPES
+from ..configs.registry import ASSIGNED_ARCHS, assigned_cells, get_config
+from ..optim import adam
+from . import hlo_analysis as H
+from .mesh import make_production_mesh
+from .specs import build_cell
+
+ART_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        out["total_per_device"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             adam_cfg: adam.AdamConfig | None = None,
+             save: bool = True, verbose: bool = True) -> dict:
+    mesh_tag = "multipod" if multi_pod else "singlepod"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    cell = build_cell(arch, shape_name, mesh, adam_cfg=adam_cfg)
+
+    with mesh:
+        lowered = cell.jit().lower(*cell.args)
+        compiled = lowered.compile()
+
+    mem = _mem_dict(compiled.memory_analysis())
+    cost = dict(compiled.cost_analysis() or {})
+    hlo = compiled.as_text()
+    stats = H.collective_bytes(hlo, n_chips)
+    # structural memory: exact per-device argument shards + scan stacks
+    import numpy as _np
+
+    def _shard_bytes(s):
+        shsh = s.sharding.shard_shape(s.shape) if getattr(
+            s, "sharding", None) is not None else s.shape
+        return int(_np.prod(shsh)) * s.dtype.itemsize
+
+    arg_bytes = sum(_shard_bytes(l) for l in jax.tree.leaves(cell.args))
+    stacks = H.saved_stack_bytes(hlo)
+    structural = {
+        "argument_bytes_per_dev": arg_bytes,
+        "saved_stack_bytes_per_dev": stacks["total_bytes"],
+        "top_stacks": stacks["top_stacks"],
+        "structural_total_per_dev": arg_bytes + stacks["total_bytes"],
+    }
+    mf = H.model_flops_estimate(cell.model_cfg, cell.shape)
+    # exact-trip-count global flops/bytes from the traced program
+    # (XLA cost_analysis undercounts while bodies; see jaxpr_cost.py)
+    from . import jaxpr_cost as JC
+    jc = JC.step_cost(cell.fn, *cell.args)
+    # VMEM-residency model: block-sized tensors stay on-chip inside the
+    # Pallas-kernel-fused attention/softmax chains (64 MiB budget)
+    jc_fused = JC.step_cost(cell.fn, *cell.args,
+                            vmem_bytes=64 * 1024**2, n_chips=n_chips)
+    roof = H.roofline_terms(jc["flops"], jc["bytes"], stats, n_chips, mf)
+    roof_fused = H.roofline_terms(jc_fused["flops"], jc_fused["bytes"],
+                                  stats, n_chips, mf)
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "n_chips": n_chips, "step": cell.step_name,
+        "status": "ok", "compile_s": round(time.time() - t0, 1),
+        "memory_analysis": mem,
+        "memory_structural": structural,
+        "cost_analysis_raw": {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float))},
+        "jaxpr_cost_global": jc,
+        "jaxpr_cost_vmem_fused": jc_fused,
+        "roofline_vmem_fused": roof_fused.to_dict(),
+        "collectives": {
+            "wire_bytes_per_dev": stats.wire_bytes,
+            "counts": stats.counts,
+            "by_op_bytes": stats.by_op_bytes,
+        },
+        "roofline": roof.to_dict(),
+    }
+    if verbose:
+        hbm = mem.get("total_per_device", 0) / 2**30
+        sm = structural["structural_total_per_dev"] / 2**30
+        print(f"[{arch} x {shape_name} x {mesh_tag}] OK "
+              f"compile={result['compile_s']}s "
+              f"mem/dev={hbm:.2f} GiB (structural {sm:.2f}) "
+              f"flops/dev={jc['flops']/n_chips:.3e} "
+              f"wire/dev={stats.wire_bytes/2**20:.1f} MiB "
+              f"dominant={roof.dominant} "
+              f"useful={roof.useful_flops_ratio:.2f} "
+              f"roofline_frac={roof.roofline_fraction:.3f}")
+    if save:
+        ART_DIR.mkdir(parents=True, exist_ok=True)
+        out = ART_DIR / f"{arch}__{shape_name}__{mesh_tag}.json"
+        out.write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every assigned (arch x shape) cell")
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="bf16+error-feedback gradient compression")
+    args = ap.parse_args(argv)
+
+    adam_cfg = adam.AdamConfig(compress_grads=args.compress_grads) \
+        if args.compress_grads else None
+
+    cells = []
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    for a in archs:
+        shapes = assigned_cells(a) if (args.all or not args.shape) \
+            else [args.shape]
+        for s in shapes:
+            if args.both_meshes:
+                cells.append((a, s, False))
+                cells.append((a, s, True))
+            else:
+                cells.append((a, s, args.multi_pod))
+
+    failures = 0
+    for a, s, mp in cells:
+        try:
+            run_cell(a, s, mp, adam_cfg=adam_cfg)
+        except Exception:
+            failures += 1
+            tag = "multipod" if mp else "singlepod"
+            print(f"[{a} x {s} x {tag}] FAILED", file=sys.stderr)
+            traceback.print_exc()
+            ART_DIR.mkdir(parents=True, exist_ok=True)
+            (ART_DIR / f"{a}__{s}__{tag}.json").write_text(json.dumps(
+                {"arch": a, "shape": s, "mesh": tag, "status": "failed",
+                 "error": traceback.format_exc()[-2000:]}, indent=1))
+    print(f"\ndry-run complete: {len(cells) - failures}/{len(cells)} OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

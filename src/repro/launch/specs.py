@@ -1,0 +1,177 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every cell.
+
+Builds, for a given (arch x shape x mesh), everything the dry-run needs:
+the step callable, its abstract arguments (weak-type-correct, shardable,
+zero allocation), and pinned output shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig, SHAPES
+from ..configs.registry import get_config
+from ..models import lm, shardings as sh
+from ..optim import adam
+from . import steps as steps_mod
+from .mesh import dp_axes as mesh_dp_axes
+
+
+def _struct(tree_shapes, tree_specs, mesh: Mesh, memory_kind=None):
+    """Attach NamedShardings to a ShapeDtypeStruct pytree."""
+    kw = {"memory_kind": memory_kind} if memory_kind else {}
+
+    def one(s, spec):
+        return jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, spec, **kw))
+
+    return jax.tree.map(one, tree_shapes, tree_specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass
+class Cell:
+    """One (arch x shape) dry-run cell, ready to lower."""
+
+    arch: str
+    shape: ShapeConfig
+    step_name: str            # train_step | prefill_step | serve_step
+    fn: Callable
+    args: Tuple               # abstract args with shardings
+    out_shardings: Any        # or None to let XLA infer
+    model_cfg: ModelConfig
+    donate_argnums: Tuple[int, ...] = ()
+
+    def jit(self):
+        return jax.jit(self.fn, out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+
+def param_structs(cfg: ModelConfig, mesh: Mesh,
+                  fsdp: Optional[str] = "data"):
+    shapes = jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    specs = sh.param_pspecs(shapes, mesh, fsdp=fsdp)
+    return shapes, specs
+
+
+# per-device budget under which inference replicates weights over the
+# data axes (TP-only "serving sharding": no per-step FSDP all-gather)
+SERVE_REPLICATED_BUDGET = 8 * 1024**3
+
+
+def _serve_fsdp(cfg: ModelConfig, mesh: Mesh) -> Optional[str]:
+    from .mesh import tp_size
+    per_dev = 2 * cfg.param_count() / max(tp_size(mesh), 1)
+    return None if per_dev <= SERVE_REPLICATED_BUDGET else "data"
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               adam_cfg: Optional[adam.AdamConfig] = None,
+               cfg_override: Optional[ModelConfig] = None,
+               serve_tp_only: bool = True) -> Cell:
+    from ..models import psharding as PS
+
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    dp = mesh_dp_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    # activate logical-axis constraints for everything this cell lowers
+    PS.set_mesh(mesh, dp=dp, tp="model")
+
+    fsdp = "data"
+    if shape.step in ("prefill", "decode") and serve_tp_only:
+        fsdp = _serve_fsdp(cfg, mesh)
+    p_shapes, p_specs = param_structs(cfg, mesh, fsdp=fsdp)
+    params = _struct(p_shapes, p_specs, mesh)
+    tok_spec = sh.batch_pspec(B, mesh, dp)
+
+    if shape.step == "train":
+        adam_cfg = adam_cfg or adam.AdamConfig()
+        opt_shapes = adam.init_state_shapes(p_shapes, adam_cfg)
+        opt_specs = sh.opt_state_pspecs(p_specs, mesh)
+        if adam_cfg.compress_grads:
+            opt_specs = dict(opt_specs)
+            opt_specs["err"] = p_specs
+        opt = _struct(opt_shapes, opt_specs, mesh)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct(
+                (B, S), jnp.int32, sharding=NamedSharding(mesh, tok_spec)),
+            "labels": jax.ShapeDtypeStruct(
+                (B, S), jnp.int32, sharding=NamedSharding(mesh, tok_spec)),
+        }
+        if cfg.n_frontend_tokens:
+            fdim = P(tok_spec[0] if len(tok_spec) else None, None, None)
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16,
+                sharding=NamedSharding(mesh, fdim))
+        fn = steps_mod.make_train_step(cfg, adam_cfg)
+        out_shardings = (
+            jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                         is_leaf=lambda x: isinstance(x, P)),
+            jax.tree.map(lambda s: NamedSharding(mesh, s), opt_specs,
+                         is_leaf=lambda x: isinstance(x, P)),
+            NamedSharding(mesh, P()),
+        )
+        # donate params + opt state: in-place buffer reuse (without it the
+        # step holds OLD and NEW optimizer state simultaneously — +2x).
+        return Cell(arch, shape, "train_step", fn, (params, opt, batch),
+                    out_shardings, cfg, donate_argnums=(0, 1))
+
+    if shape.step == "prefill":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct(
+                (B, S), jnp.int32, sharding=NamedSharding(mesh, tok_spec)),
+        }
+        if cfg.n_frontend_tokens:
+            fdim = P(tok_spec[0] if len(tok_spec) else None, None, None)
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16,
+                sharding=NamedSharding(mesh, fdim))
+        fn = steps_mod.make_prefill_step(cfg)
+        # pin cache output shardings (inference leaves the scan-stacked KV
+        # partially replicated otherwise)
+        out_shapes = jax.eval_shape(fn, params, batch)
+        cache_specs = sh.cache_pspecs(out_shapes[1], mesh, B, dp)
+        out_shardings = (
+            None,
+            jax.tree.map(lambda s: NamedSharding(mesh, s), cache_specs,
+                         is_leaf=lambda x: isinstance(x, P)),
+        )
+        return Cell(arch, shape, "prefill_step", fn, (params, batch),
+                    out_shardings, cfg)
+
+    # decode: serve_step with a KV/state cache of seq_len
+    max_seq = round_up(S + 64, 4096)
+    cache_shapes = jax.eval_shape(
+        lambda: lm.make_decode_cache(cfg, B, max_seq,
+                                     enc_len=cfg.n_frontend_tokens))
+    cache_specs = sh.cache_pspecs(cache_shapes, mesh, B, dp)
+    cache = _struct(cache_shapes, cache_specs, mesh)
+    tokens = jax.ShapeDtypeStruct(
+        (B, 1), jnp.int32, sharding=NamedSharding(mesh, tok_spec))
+    fn = steps_mod.make_serve_step(cfg)
+    out_shardings = (
+        None,  # logits: inferred
+        jax.tree.map(lambda s: NamedSharding(mesh, s), cache_specs,
+                     is_leaf=lambda x: isinstance(x, P)),
+    )
+    # donate the cache: decode updates it in place (KV buffers are the
+    # dominant memory at 32k/500k context).
+    return Cell(arch, shape.__class__(shape.name, S, B, "decode"),
+                "serve_step", fn, (params, cache, tokens), out_shardings,
+                cfg, donate_argnums=(1,))
+
+
+def input_specs(arch: str, shape_name: str, mesh: Mesh, **kw):
+    """The dry-run entry: abstract inputs for the cell's step function."""
+    return build_cell(arch, shape_name, mesh, **kw).args

@@ -1,0 +1,56 @@
+"""Step builders: train_step / prefill_step / serve_step from a config."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import lm
+from ..optim import adam
+
+
+def make_loss_fn(cfg: ModelConfig) -> Callable:
+    def loss_fn(params, batch):
+        return lm.forward_loss(params, cfg, batch["tokens"],
+                               batch["labels"], batch.get("frames"))
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig,
+                    adam_cfg: Optional[adam.AdamConfig] = None) -> Callable:
+    adam_cfg = adam_cfg or adam.AdamConfig()
+    loss_fn = make_loss_fn(cfg)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_state = adam.apply_update(params, opt_state, grads,
+                                                  adam_cfg)
+        return new_params, new_state, loss
+
+    return train_step
+
+
+def make_grad_step(cfg: ModelConfig) -> Callable:
+    """Forward+backward only (the offload engine applies the update)."""
+    loss_fn = make_loss_fn(cfg)
+
+    def grad_step(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    return grad_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch["tokens"],
+                          batch.get("frames"))
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, cache, tokens):
+        return lm.decode_step(params, cfg, cache, tokens)
+    return serve_step

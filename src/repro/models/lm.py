@@ -1,0 +1,503 @@
+"""Unified pattern-based language model.
+
+One implementation drives all ten assigned architectures: a repeating
+*unit* of heterogeneous layers (attention / Mamba / RWKV / cross-attention,
+each optionally MoE) scanned ``n_units`` times over stacked parameters.
+This keeps HLO size O(unit) instead of O(n_layers) — essential for the
+94-layer MoE and 72-layer hybrid dry-runs.
+
+Modes:
+  * forward(..., mode="train")   -> chunked-CE loss (never materializes
+                                    full (B,S,V) logits)
+  * forward(..., mode="prefill") -> last-token logits + decode cache
+  * forward(..., mode="decode")  -> next-token logits + updated cache
+
+Cache layout (pytree of stacked arrays, axis 0 = unit):
+  kv_k/kv_v     (U, n_attn,  B, S_max, KV, hd)
+  conv/ssm      (U, n_mamba, B, K-1, d_inner) / (U, n_mamba, B, H, N, P)
+  wkv/shift_*   (U, n_rwkv,  B, H, P, P) / (U, n_rwkv, B, D)
+  cross_k/v     (U, n_cross, B, S_enc, KV, hd)
+plus a scalar "index" (tokens already in cache).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import LayerSpec, ModelConfig
+from . import modules as M
+
+Params = Dict[str, Any]
+
+
+# ====================================================================== #
+# Init                                                                   #
+# ====================================================================== #
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {}
+    D = cfg.d_model
+    if spec.kind == "attn":
+        p["norm1"] = M.init_norm(cfg.norm, D)
+        p["attn"] = M.init_attention(ks[0], D, cfg.n_heads, cfg.n_kv,
+                                     cfg.head_dim, cfg.qkv_bias)
+    elif spec.kind == "cross":
+        p["norm1"] = M.init_norm(cfg.norm, D)
+        p["attn"] = M.init_attention(ks[0], D, cfg.n_heads, cfg.n_kv,
+                                     cfg.head_dim, cfg.qkv_bias)
+        p["xkv"] = {  # projections applied to the cross inputs
+            "wk": M.init_attention(ks[1], D, cfg.n_heads, cfg.n_kv,
+                                   cfg.head_dim)["wk"],
+            "wv": M.init_attention(ks[2], D, cfg.n_heads, cfg.n_kv,
+                                   cfg.head_dim)["wv"]}
+        p["gate_attn"] = jnp.zeros((), jnp.float32)
+        p["gate_mlp"] = jnp.zeros((), jnp.float32)
+    elif spec.kind == "mamba":
+        p["norm1"] = M.init_norm(cfg.norm, D)
+        p["mamba"] = M.init_mamba(ks[0], _mdims(cfg))
+    elif spec.kind == "rwkv":
+        p["norm1"] = M.init_norm("ln", D)
+        p["tmix"] = M.init_rwkv_tmix(ks[0], _rdims(cfg))
+        p["norm2"] = M.init_norm("ln", D)
+        p["cmix"] = M.init_rwkv_cmix(ks[1], _rdims(cfg))
+        return p
+    else:
+        raise ValueError(spec.kind)
+
+    if spec.cross_attn:  # whisper-style extra cross sublayer
+        p["cross_norm"] = M.init_norm(cfg.norm, D)
+        p["cross"] = M.init_attention(ks[3], D, cfg.n_heads, cfg.n_kv,
+                                      cfg.head_dim)
+
+    p["norm2"] = M.init_norm(cfg.norm, D)
+    if spec.moe:
+        p["moe"] = M.init_moe(ks[4], D, cfg.d_ff, cfg.n_experts, cfg.act)
+    else:
+        p["mlp"] = M.init_mlp(ks[4], D, cfg.d_ff, cfg.act)
+    return p
+
+
+def _init_unit(key, cfg: ModelConfig) -> Params:
+    keys = jax.random.split(key, len(cfg.pattern))
+    return {"layers": tuple(_init_layer(k, cfg, s)
+                            for k, s in zip(keys, cfg.pattern))}
+
+
+def _mdims(cfg: ModelConfig) -> M.MambaDims:
+    return M.mamba_dims(cfg.d_model, cfg.mamba_expand, cfg.mamba_head_dim,
+                        cfg.mamba_d_state, cfg.mamba_d_conv, cfg.ssd_chunk)
+
+
+def _rdims(cfg: ModelConfig) -> M.RwkvDims:
+    return M.rwkv_dims(cfg.d_model, cfg.d_ff, cfg.rwkv_head_dim,
+                       cfg.rwkv_chunk)
+
+
+ENC_SPEC = LayerSpec(kind="attn")
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    k_e, k_u, k_h, k_enc, k_pos = jax.random.split(key, 5)
+    D = cfg.d_model
+    p: Params = {
+        "embed": (jax.random.normal(k_e, (cfg.vocab, D)) * 0.02
+                  ).astype(jnp.bfloat16),
+        "final_norm": M.init_norm(cfg.norm, D),
+        "units": jax.vmap(lambda k: _init_unit(k, cfg))(
+            jax.random.split(k_u, cfg.n_units)),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(k_h, (cfg.vocab, D)) * 0.02
+                        ).astype(jnp.bfloat16)
+    if cfg.pos_emb == "learned":
+        p["pos_emb"] = (jax.random.normal(k_pos, (cfg.max_pos, D)) * 0.02
+                        ).astype(jnp.bfloat16)
+    if cfg.encoder_layers:
+        enc_cfg = cfg
+        p["encoder"] = {
+            "units": jax.vmap(
+                lambda k: {"layers": (
+                    _init_layer(k, enc_cfg, ENC_SPEC),)})(
+                jax.random.split(k_enc, cfg.encoder_layers)),
+            "final_norm": M.init_norm(cfg.norm, D),
+        }
+    return p
+
+
+# ====================================================================== #
+# Unit forward                                                           #
+# ====================================================================== #
+def _sinusoidal(S: int, D: int, offset=0) -> jax.Array:
+    pos = jnp.arange(S)[:, None] + offset
+    dim = jnp.arange(0, D, 2)[None, :]
+    ang = pos / jnp.power(10000.0, dim / D)
+    out = jnp.zeros((S, D))
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out
+
+
+def _attn_kwargs(cfg: ModelConfig) -> Dict[str, Any]:
+    return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.head_dim,
+                rope_theta=cfg.rope_theta, rotary_pct=cfg.rotary_pct,
+                use_rope=(cfg.pos_emb == "rope"),
+                attn_chunk=cfg.attn_chunk)
+
+
+def _unit_fwd(cfg: ModelConfig, up: Params, x: jax.Array, *,
+              mode: str, positions, cross_inputs, unit_cache,
+              cache_index, causal: bool = True
+              ) -> Tuple[jax.Array, jax.Array, Optional[Params]]:
+    """Forward one repeating unit; returns (x, moe_aux, new_unit_cache)."""
+    decode = mode == "decode"
+    aux_total = jnp.zeros((), jnp.float32)
+    want_cache = mode in ("prefill", "decode")
+    B = x.shape[0]
+    new_cache: Dict[str, list] = {k: [] for k in
+                                  ("kv_k", "kv_v", "kv_k_scale",
+                                   "kv_v_scale", "conv", "ssm", "wkv",
+                                   "shift_t", "shift_c", "cross_k",
+                                   "cross_v")}
+    kv_int8 = cfg.kv_cache_dtype == "int8"
+    i_attn = i_mamba = i_rwkv = i_cross = 0
+    akw = _attn_kwargs(cfg)
+
+    for li, spec in enumerate(cfg.pattern):
+        lp = up["layers"][li]
+
+        if spec.kind == "attn":
+            h = M.apply_norm(cfg.norm, lp["norm1"], x)
+            kv = None
+            if decode:
+                if kv_int8:
+                    kv = (unit_cache["kv_k"][i_attn],
+                          unit_cache["kv_v"][i_attn],
+                          unit_cache["kv_k_scale"][i_attn],
+                          unit_cache["kv_v_scale"][i_attn])
+                else:
+                    kv = (unit_cache["kv_k"][i_attn],
+                          unit_cache["kv_v"][i_attn])
+            out, new_kv = M.attention_fwd(
+                lp["attn"], h, causal=causal, positions=positions,
+                kv_cache=kv, cache_index=cache_index if decode else None,
+                **akw)
+            x = x + out
+            if want_cache:
+                if decode and kv_int8:
+                    new_cache["kv_k"].append(new_kv[0])
+                    new_cache["kv_v"].append(new_kv[1])
+                    new_cache["kv_k_scale"].append(new_kv[2])
+                    new_cache["kv_v_scale"].append(new_kv[3])
+                elif kv_int8:  # prefill: quantize for the cache
+                    kq, ks = M.quantize_kv(new_kv[0])
+                    vq, vs = M.quantize_kv(new_kv[1])
+                    new_cache["kv_k"].append(kq)
+                    new_cache["kv_v"].append(vq)
+                    new_cache["kv_k_scale"].append(ks)
+                    new_cache["kv_v_scale"].append(vs)
+                else:
+                    new_cache["kv_k"].append(
+                        new_kv[0].astype(jnp.bfloat16))
+                    new_cache["kv_v"].append(
+                        new_kv[1].astype(jnp.bfloat16))
+            i_attn += 1
+
+        elif spec.kind == "cross":
+            # cross-only layer (Llama-3.2-Vision image layers)
+            h = M.apply_norm(cfg.norm, lp["norm1"], x)
+            if decode:
+                xk = unit_cache["cross_k"][i_cross]
+                xv = unit_cache["cross_v"][i_cross]
+            else:
+                S_enc = cross_inputs.shape[1]
+                xk = (cross_inputs @ lp["xkv"]["wk"]).reshape(
+                    B, S_enc, cfg.n_kv, cfg.head_dim)
+                xv = (cross_inputs @ lp["xkv"]["wv"]).reshape(
+                    B, S_enc, cfg.n_kv, cfg.head_dim)
+            out, _ = M.attention_fwd(lp["attn"], h, causal=False,
+                                     positions=None,
+                                     cross_kv=(xk, xv), **akw)
+            x = x + jnp.tanh(lp["gate_attn"]).astype(out.dtype) * out
+            if want_cache:
+                new_cache["cross_k"].append(xk.astype(jnp.bfloat16))
+                new_cache["cross_v"].append(xv.astype(jnp.bfloat16))
+            i_cross += 1
+
+        elif spec.kind == "mamba":
+            h = M.apply_norm(cfg.norm, lp["norm1"], x)
+            cs = ss = None
+            if decode:
+                cs = unit_cache["conv"][i_mamba]
+                ss = unit_cache["ssm"][i_mamba]
+            out, (cs2, ss2) = M.mamba_fwd(lp["mamba"], h, _mdims(cfg),
+                                          conv_state=cs, ssm_state=ss)
+            x = x + out
+            if want_cache:
+                new_cache["conv"].append(cs2)
+                new_cache["ssm"].append(ss2)
+            i_mamba += 1
+
+        elif spec.kind == "rwkv":
+            h = M.apply_norm("ln", lp["norm1"], x)
+            ws = sh = None
+            if decode:
+                ws = unit_cache["wkv"][i_rwkv]
+                sh = unit_cache["shift_t"][i_rwkv]
+            out, (ws2, sh2) = M.rwkv_tmix_fwd(lp["tmix"], h, _rdims(cfg),
+                                              wkv_state=ws, shift_state=sh)
+            x = x + out
+            h = M.apply_norm("ln", lp["norm2"], x)
+            shc = unit_cache["shift_c"][i_rwkv] if decode else None
+            out, shc2 = M.rwkv_cmix_fwd(lp["cmix"], h, shift_state=shc)
+            x = x + out
+            if want_cache:
+                new_cache["wkv"].append(ws2)
+                new_cache["shift_t"].append(sh2)
+                new_cache["shift_c"].append(shc2)
+            i_rwkv += 1
+            continue  # rwkv unit has no separate MLP block
+
+        # whisper-style additional cross sublayer
+        if spec.cross_attn:
+            h = M.apply_norm(cfg.norm, lp["cross_norm"], x)
+            if decode:
+                xk = unit_cache["cross_k"][i_cross]
+                xv = unit_cache["cross_v"][i_cross]
+            else:
+                S_enc = cross_inputs.shape[1]
+                xk = (cross_inputs @ lp["cross"]["wk"]).reshape(
+                    B, S_enc, cfg.n_kv, cfg.head_dim)
+                xv = (cross_inputs @ lp["cross"]["wv"]).reshape(
+                    B, S_enc, cfg.n_kv, cfg.head_dim)
+            out, _ = M.attention_fwd(lp["cross"], h, causal=False,
+                                     positions=None,
+                                     cross_kv=(xk, xv), **akw)
+            x = x + out
+            if want_cache:
+                new_cache["cross_k"].append(xk.astype(jnp.bfloat16))
+                new_cache["cross_v"].append(xv.astype(jnp.bfloat16))
+            i_cross += 1
+
+        # MLP / MoE sublayer
+        h = M.apply_norm(cfg.norm, lp["norm2"], x)
+        if spec.moe:
+            out, aux = M.moe_fwd(lp["moe"], h, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 n_groups=cfg.moe_groups, act=cfg.act)
+            aux_total = aux_total + aux
+        else:
+            out = M.mlp_fwd(lp["mlp"], h, cfg.act)
+        if spec.kind == "cross":
+            out = jnp.tanh(lp["gate_mlp"]).astype(out.dtype) * out
+        x = x + out
+
+    cache_out = None
+    if want_cache:
+        cache_out = {k: jnp.stack(v) for k, v in new_cache.items() if v}
+    return x, aux_total, cache_out
+
+
+def _stack_fwd(cfg: ModelConfig, units: Params, x: jax.Array, *,
+               mode: str, positions, cross_inputs,
+               cache_units=None, cache_index=None, causal=True,
+               pattern_override=None):
+    """lax.scan over stacked unit params (and cache, in decode)."""
+
+    from . import psharding as PS
+
+    def body(carry, xs):
+        h, aux = carry
+        if mode == "decode":
+            up, uc = xs
+        else:
+            up, uc = xs, None
+        h, aux_u, new_uc = _unit_fwd(
+            cfg, up, h, mode=mode, positions=positions,
+            cross_inputs=cross_inputs, unit_cache=uc,
+            cache_index=cache_index, causal=causal)
+        # sequence parallelism at the unit boundary (Megatron-SP): the
+        # scan-AD carry stack is S-sharded over the model axis, cutting
+        # saved-activation memory by the TP degree.
+        h = PS.constrain(h, "dp", "tp", None)
+        return (h, aux + aux_u), new_uc
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = (units, cache_units) if mode == "decode" else units
+    (x, aux), caches = lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux, caches
+
+
+# ====================================================================== #
+# Public entry points                                                    #
+# ====================================================================== #
+def _embed_tokens(p: Params, cfg: ModelConfig, tokens: jax.Array,
+                  index=None) -> jax.Array:
+    from . import psharding as PS
+
+    x = PS.constrain(p["embed"][tokens].astype(jnp.bfloat16),
+                     "dp", None, None)
+    S = tokens.shape[1]
+    if cfg.pos_emb == "learned":
+        if index is None:
+            pe = p["pos_emb"][:S]
+        else:
+            pe = lax.dynamic_slice(p["pos_emb"], (index, 0),
+                                   (S, cfg.d_model))
+        x = x + pe[None]
+    elif cfg.pos_emb == "sinusoidal":
+        x = x + _sinusoidal(S, cfg.d_model,
+                            0 if index is None else index
+                            )[None].astype(x.dtype)
+    return x
+
+
+def encode(p: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """Whisper-style encoder over stubbed frame embeddings (B, S_enc, D)."""
+    x = frames.astype(jnp.bfloat16)
+    x = x + _sinusoidal(frames.shape[1], cfg.d_model)[None].astype(x.dtype)
+    enc = p["encoder"]
+    x, _, _ = _stack_fwd(
+        _enc_cfg(cfg), enc["units"], x, mode="train",
+        positions=jnp.arange(frames.shape[1]), cross_inputs=None,
+        causal=False)
+    return M.apply_norm(cfg.norm, enc["final_norm"], x)
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(cfg, pattern=(ENC_SPEC,),
+                               n_layers=cfg.encoder_layers,
+                               pos_emb="sinusoidal")
+
+
+def _lm_head(p: Params, cfg: ModelConfig) -> jax.Array:
+    return p["embed"] if cfg.tie_embeddings else p["lm_head"]
+
+
+def forward_loss(p: Params, cfg: ModelConfig, tokens: jax.Array,
+                 labels: jax.Array,
+                 cross_inputs: Optional[jax.Array] = None) -> jax.Array:
+    """Training loss with chunked cross-entropy (no (B,S,V) logits)."""
+    if cfg.encoder_layers:
+        cross_inputs = encode(p, cfg, cross_inputs)
+    x = _embed_tokens(p, cfg, tokens)
+    S = tokens.shape[1]
+    x, aux, _ = _stack_fwd(cfg, p["units"], x, mode="train",
+                           positions=jnp.arange(S),
+                           cross_inputs=cross_inputs)
+    x = M.apply_norm(cfg.norm, p["final_norm"], x)
+    W = _lm_head(p, cfg)
+
+    C = min(cfg.loss_chunk, S)
+    nC = S // C
+    assert S % C == 0
+    xc = x.reshape(x.shape[0], nC, C, cfg.d_model).swapaxes(0, 1)
+    yc = labels.reshape(labels.shape[0], nC, C).swapaxes(0, 1)
+
+    from . import psharding as PS
+
+    def chunk_ce(carry, xy):
+        xi, yi = xy
+        logits = (xi @ W.T).astype(jnp.float32)          # (B,C,V)
+        logits = PS.constrain(logits, "dp", None, "tp")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yi[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    body = chunk_ce
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    total, _ = lax.scan(body, jnp.zeros((), jnp.float32), (xc, yc))
+    ce = total / (labels.shape[0] * S)
+    return ce + 0.01 * aux
+
+
+def prefill(p: Params, cfg: ModelConfig, tokens: jax.Array,
+            cross_inputs: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Params]:
+    """Prefill: returns (last-token logits (B, V), cache)."""
+    if cfg.encoder_layers:
+        cross_inputs = encode(p, cfg, cross_inputs)
+    x = _embed_tokens(p, cfg, tokens)
+    S = tokens.shape[1]
+    x, _, caches = _stack_fwd(cfg, p["units"], x, mode="prefill",
+                              positions=jnp.arange(S),
+                              cross_inputs=cross_inputs)
+    x = M.apply_norm(cfg.norm, p["final_norm"], x[:, -1:])
+    logits = (x[:, 0] @ _lm_head(p, cfg).T).astype(jnp.float32)
+    caches["index"] = jnp.array(S, jnp.int32)
+    return logits, caches
+
+
+def decode_step(p: Params, cfg: ModelConfig, cache: Params,
+                tokens: jax.Array) -> Tuple[jax.Array, Params]:
+    """One decode step: tokens (B, 1) -> (logits (B, V), new cache)."""
+    idx = cache["index"]
+    x = _embed_tokens(p, cfg, tokens, index=idx)
+    cache_units = {k: v for k, v in cache.items() if k != "index"}
+    x, _, new_units = _stack_fwd(cfg, p["units"], x, mode="decode",
+                                 positions=None, cross_inputs=None,
+                                 cache_units=cache_units, cache_index=idx)
+    x = M.apply_norm(cfg.norm, p["final_norm"], x)
+    logits = (x[:, 0] @ _lm_head(p, cfg).T).astype(jnp.float32)
+    new_units["index"] = idx + tokens.shape[1]
+    return logits, new_units
+
+
+def make_decode_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                      enc_len: int = 0, dtype=jnp.bfloat16) -> Params:
+    """Zero-initialized decode cache (for dry-run serve_step lowering)."""
+    U = cfg.n_units
+    B = batch
+    cache: Params = {"index": jnp.zeros((), jnp.int32)}
+    n_attn = len(cfg.unit_attn_layers)
+    n_mamba = len(cfg.unit_mamba_layers)
+    n_rwkv = len(cfg.unit_rwkv_layers)
+    n_cross = len([s for s in cfg.pattern
+                   if s.cross_attn or s.kind == "cross"])
+    hd, KV = cfg.head_dim, cfg.n_kv
+    if n_attn:
+        kv_dt = jnp.int8 if cfg.kv_cache_dtype == "int8" else dtype
+        cache["kv_k"] = jnp.zeros((U, n_attn, B, max_seq, KV, hd), kv_dt)
+        cache["kv_v"] = jnp.zeros((U, n_attn, B, max_seq, KV, hd), kv_dt)
+        if cfg.kv_cache_dtype == "int8":
+            cache["kv_k_scale"] = jnp.zeros((U, n_attn, B, max_seq, KV),
+                                            dtype)
+            cache["kv_v_scale"] = jnp.zeros((U, n_attn, B, max_seq, KV),
+                                            dtype)
+    if n_mamba:
+        md = _mdims_cfg(cfg)
+        cache["conv"] = jnp.zeros(
+            (U, n_mamba, B, cfg.mamba_d_conv - 1, md.d_inner), dtype)
+        cache["ssm"] = jnp.zeros(
+            (U, n_mamba, B, md.n_heads, md.d_state, md.head_dim),
+            jnp.float32)
+    if n_rwkv:
+        rd = _rdims_cfg(cfg)
+        cache["wkv"] = jnp.zeros(
+            (U, n_rwkv, B, rd.n_heads, rd.head_dim, rd.head_dim),
+            jnp.float32)
+        cache["shift_t"] = jnp.zeros((U, n_rwkv, B, cfg.d_model), dtype)
+        cache["shift_c"] = jnp.zeros((U, n_rwkv, B, cfg.d_model), dtype)
+    if n_cross:
+        cache["cross_k"] = jnp.zeros((U, n_cross, B, enc_len, KV, hd),
+                                     dtype)
+        cache["cross_v"] = jnp.zeros((U, n_cross, B, enc_len, KV, hd),
+                                     dtype)
+    return cache
+
+
+def _mdims_cfg(cfg):
+    return M.mamba_dims(cfg.d_model, cfg.mamba_expand, cfg.mamba_head_dim,
+                        cfg.mamba_d_state, cfg.mamba_d_conv, cfg.ssd_chunk)
+
+
+def _rdims_cfg(cfg):
+    return M.rwkv_dims(cfg.d_model, cfg.d_ff, cfg.rwkv_head_dim,
+                       cfg.rwkv_chunk)

@@ -1,0 +1,813 @@
+"""Model building blocks (pure JAX, shard_map/pjit-friendly).
+
+Everything here is a pure function over explicit parameter pytrees —
+no framework dependency.  Blocks are designed to be stacked and driven by
+``lax.scan`` over layer-stacked parameters (models/lm.py), so all shapes are
+static and HLO stays compact at 94 layers.
+
+Conventions:
+  x        : (B, S, D) activations, compute dtype bf16 unless stated
+  params   : nested dict of jnp arrays
+  cfg      : repro.configs.base.ModelConfig (static dataclass)
+  cache    : per-layer decode state (KV / SSM / shift), updated functionally
+
+Attention uses a pure-JAX chunked flash algorithm (two-level lax.scan with
+running max/sum) so 32k-token prefill never materializes an (S, S) score
+matrix; the Pallas kernel in repro.kernels mirrors the same blocking.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict[str, Any]
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+# ====================================================================== #
+# Norms                                                                  #
+# ====================================================================== #
+def init_rmsnorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def init_layernorm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layer_norm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def apply_norm(kind: str, p: Params, x: jax.Array) -> jax.Array:
+    return rms_norm(p, x) if kind == "rms" else layer_norm(p, x)
+
+
+def init_norm(kind: str, d: int) -> Params:
+    return init_rmsnorm(d) if kind == "rms" else init_layernorm(d)
+
+
+# ====================================================================== #
+# RoPE                                                                   #
+# ====================================================================== #
+def rope_freqs(rotary_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, rotary_dim, 2,
+                                       dtype=jnp.float32) / rotary_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rotary_pct: float = 1.0) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    rotary_dim = int(hd * rotary_pct)
+    rotary_dim -= rotary_dim % 2
+    if rotary_dim == 0:
+        return x
+    freqs = rope_freqs(rotary_dim, theta)                   # (rd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,rd/2)
+    cos = jnp.cos(ang)[:, :, None, :]                        # (B,S,1,rd/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr, xp = x[..., :rotary_dim], x[..., rotary_dim:]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    xf1 = x1.astype(jnp.float32)
+    xf2 = x2.astype(jnp.float32)
+    o1 = xf1 * cos - xf2 * sin
+    o2 = xf2 * cos + xf1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rotary_dim < hd else out
+
+
+# ====================================================================== #
+# Chunked flash attention (pure JAX; oracle for the Pallas kernel)        #
+# ====================================================================== #
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      *, causal: bool, q_offset: int = 0,
+                      chunk_q: int = 1024, chunk_kv: int = 1024,
+                      kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Flash-style attention without materializing (Sq, Sk) scores.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) with H % KV == 0.
+    GQA is handled by repeating each chunk's K/V to H heads (chunk-sized,
+    cheap) so every intermediate keeps a flat head axis — TP-shardable for
+    any KV count.  kv_len: optional dynamic valid length (decode).
+    Returns (B, Sq, H, hd).
+    """
+    from . import psharding as PS
+
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    cq = min(chunk_q, Sq)
+    ck = min(chunk_kv, Sk)
+    nq = -(-Sq // cq)
+    nk = -(-Sk // ck)
+    # pad to multiples
+    qp = jnp.pad(q, ((0, 0), (0, nq * cq - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * ck - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * ck - Sk), (0, 0), (0, 0)))
+    qh = qp.reshape(B, nq, cq, H, hd)
+    kh = kp.reshape(B, nk, ck, KV, hd)
+    vh = vp.reshape(B, nk, ck, KV, hd)
+    valid_k = kv_len if kv_len is not None else Sk
+
+    def q_step(_, qi):
+        qc, iq = qi  # (B,cq,H,hd), scalar
+        qc = PS.constrain(qc, "dp", None, "tp", None)
+        q_pos = q_offset + iq * cq + jnp.arange(cq)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc, vc, ik = ki
+            if rep > 1:  # GQA: expand chunk KV to flat heads
+                kc = jnp.repeat(kc, rep, axis=2)
+                vc = jnp.repeat(vc, rep, axis=2)
+            kc = PS.constrain(kc, "dp", None, "tp", None)
+            vc = PS.constrain(vc, "dp", None, "tp", None)
+            k_pos = ik * ck + jnp.arange(ck)
+            s = jnp.einsum("bqhd,bkhd->bhqk",
+                           qc.astype(jnp.float32),
+                           kc.astype(jnp.float32)) * scale
+            s = PS.constrain(s, "dp", "tp", None, None)
+            mask = k_pos[None, :] < valid_k
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vc.astype(jnp.float32))
+            acc_new = PS.constrain(acc_new, "dp", "tp", None, None)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        a0 = jnp.zeros((B, H, cq, hd), jnp.float32)
+        # nested remat: never save the (cq, ck) score/prob chunk — the
+        # backward recomputes it (flash-attention backward semantics)
+        (m, l, acc), _ = lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0),
+            (kh.swapaxes(0, 1), vh.swapaxes(0, 1), jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # (B,H,cq,hd) -> (B,cq,H,hd)
+        return None, out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+    _, outs = lax.scan(jax.checkpoint(q_step), None,
+                       (qh.swapaxes(0, 1), jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * cq, H, hd)
+    return out[:, :Sq]
+
+
+def dense_attention(q, k, v, *, causal: bool, q_offset: int = 0,
+                    kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Direct softmax attention (decode path / small-S oracle).
+
+    Stays in grouped (KV, rep) layout: the decode cost is the KV-cache
+    read, and repeating the cache to H heads would multiply it.  With a
+    seq-sharded cache this becomes flash-decode (partial softmax combined
+    by GSPMD collectives over the seq shards)."""
+    from . import psharding as PS
+
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    qf = q.reshape(B, Sq, KV, rep, hd).astype(jnp.float32)
+    s = jnp.einsum("bqgrh,bkgh->bgrqk", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    k_pos = jnp.arange(Sk)
+    q_pos = q_offset + jnp.arange(Sq)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if kv_len is not None:
+        mask = mask & (k_pos[None, :] < kv_len)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqk,bkgh->bgrqh", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ====================================================================== #
+# KV-cache quantization (int8, per-(position, head) symmetric scales)    #
+# ====================================================================== #
+def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, KV, hd) -> (int8 values, bf16 scales (B, S, KV))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array,
+                  dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+# ====================================================================== #
+# GQA attention block                                                    #
+# ====================================================================== #
+def init_attention(key, d_model: int, n_heads: int, n_kv: int,
+                   head_dim: int, qkv_bias: bool = False,
+                   dtype=DEFAULT_DTYPE) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    p = {
+        "wq": (jax.random.normal(k1, (d_model, n_heads * head_dim)) * s
+               ).astype(dtype),
+        "wk": (jax.random.normal(k2, (d_model, n_kv * head_dim)) * s
+               ).astype(dtype),
+        "wv": (jax.random.normal(k3, (d_model, n_kv * head_dim)) * s
+               ).astype(dtype),
+        "wo": (jax.random.normal(k4, (n_heads * head_dim, d_model)) * s
+               ).astype(dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def attention_fwd(p: Params, x: jax.Array, *, n_heads: int, n_kv: int,
+                  head_dim: int, rope_theta: float = 10000.0,
+                  rotary_pct: float = 1.0, causal: bool = True,
+                  positions: Optional[jax.Array] = None,
+                  kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  cache_index: Optional[jax.Array] = None,
+                  cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                  use_rope: bool = True,
+                  attn_chunk: int = 1024
+                  ) -> Tuple[jax.Array,
+                             Optional[Tuple[jax.Array, jax.Array]]]:
+    """GQA attention with optional KV cache (decode) or cross-KV.
+
+    Returns (out, new_kv_cache).  Modes:
+      * train/prefill: kv_cache=None           -> causal self-attn
+      * decode:        kv_cache=(K, V) buffers, cache_index=pos
+      * cross:         cross_kv=(K, V) precomputed (encoder/image)
+    """
+    from . import psharding as PS
+
+    B, S, D = x.shape
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    q = PS.constrain(q.reshape(B, S, n_heads, head_dim),
+                     "dp", None, "tp", None)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        if use_rope and positions is not None:
+            q = apply_rope(q, positions, rope_theta, rotary_pct)
+        out = chunked_attention(q, k, v, causal=False,
+                                chunk_q=attn_chunk, chunk_kv=attn_chunk)
+        new_cache = None
+    else:
+        k = x @ p["wk"]
+        v = x @ p["wv"]
+        if "bk" in p:
+            k = k + p["bk"]
+            v = v + p["bv"]
+        k = PS.constrain(k.reshape(B, S, n_kv, head_dim),
+                         "dp", None, "tp", None)
+        v = PS.constrain(v.reshape(B, S, n_kv, head_dim),
+                         "dp", None, "tp", None)
+        if positions is None:
+            positions = jnp.arange(S)
+        if kv_cache is None:
+            if use_rope:
+                q = apply_rope(q, positions, rope_theta, rotary_pct)
+                k = apply_rope(k, positions, rope_theta, rotary_pct)
+            out = chunked_attention(q, k, v, causal=causal,
+                                    chunk_q=attn_chunk, chunk_kv=attn_chunk)
+            new_cache = (k, v)
+        else:
+            idx = cache_index           # scalar: next write position
+            if use_rope:
+                pos = idx + jnp.arange(S)
+                q = apply_rope(q, pos, rope_theta, rotary_pct)
+                k = apply_rope(k, pos, rope_theta, rotary_pct)
+            if len(kv_cache) == 4:      # int8-quantized cache
+                ck, cv, cks, cvs = kv_cache
+                kq, ks = quantize_kv(k)
+                vq, vs = quantize_kv(v)
+                ck = lax.dynamic_update_slice(ck, kq, (0, idx, 0, 0))
+                cv = lax.dynamic_update_slice(cv, vq, (0, idx, 0, 0))
+                cks = lax.dynamic_update_slice(cks, ks, (0, idx, 0))
+                cvs = lax.dynamic_update_slice(cvs, vs, (0, idx, 0))
+                out = dense_attention(q, dequantize_kv(ck, cks),
+                                      dequantize_kv(cv, cvs),
+                                      causal=False, kv_len=idx + S)
+                new_cache = (ck, cv, cks, cvs)
+            else:
+                ck, cv = kv_cache       # (B, S_max, KV, hd)
+                ck = lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, idx, 0, 0))
+                cv = lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, idx, 0, 0))
+                out = dense_attention(q, ck, cv, causal=False,
+                                      kv_len=idx + S)
+                new_cache = (ck, cv)
+
+    out = out.reshape(B, S, n_heads * head_dim)
+    out = PS.constrain(out @ p["wo"], "dp", None, None)
+    return out, new_cache
+
+
+# ====================================================================== #
+# MLP (SwiGLU / GELU)                                                    #
+# ====================================================================== #
+def init_mlp(key, d_model: int, d_ff: int, act: str = "silu",
+             dtype=DEFAULT_DTYPE) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d_model)
+    sf = 1.0 / math.sqrt(d_ff)
+    p = {"w_up": (jax.random.normal(k2, (d_model, d_ff)) * s).astype(dtype),
+         "w_down": (jax.random.normal(k3, (d_ff, d_model)) * sf
+                    ).astype(dtype)}
+    if act == "silu":  # SwiGLU needs the gate
+        p["w_gate"] = (jax.random.normal(k1, (d_model, d_ff)) * s
+                       ).astype(dtype)
+    return p
+
+
+def mlp_fwd(p: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    from . import psharding as PS
+
+    if act == "silu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    h = PS.constrain(h, "dp", None, "tp")
+    return PS.constrain(h @ p["w_down"], "dp", None, None)
+
+
+# ====================================================================== #
+# Mixture of Experts (group-local capacity dispatch, EP-shardable)        #
+# ====================================================================== #
+def init_moe(key, d_model: int, d_ff: int, n_experts: int,
+             act: str = "silu", dtype=DEFAULT_DTYPE) -> Params:
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    sf = 1.0 / math.sqrt(d_ff)
+    p = {
+        "router": (jax.random.normal(k0, (d_model, n_experts)) * s
+                   ).astype(jnp.float32),
+        "w_up": (jax.random.normal(k2, (n_experts, d_model, d_ff)) * s
+                 ).astype(dtype),
+        "w_down": (jax.random.normal(k3, (n_experts, d_ff, d_model)) * sf
+                   ).astype(dtype),
+    }
+    if act == "silu":
+        p["w_gate"] = (jax.random.normal(k1, (n_experts, d_model, d_ff)) * s
+                       ).astype(dtype)
+    return p
+
+
+def moe_fwd(p: Params, x: jax.Array, *, top_k: int, capacity_factor: float,
+            n_groups: int, act: str = "silu",
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Token-choice top-k MoE with group-local capacity and drop.
+
+    Dispatch is scatter-based (no (T, E, C) one-hot einsum): tokens are
+    scattered into a (G, E, C, D) buffer sharded G->data / E->model, so
+    GSPMD realizes the all_to_all between the data and model axes.  Dropped
+    tokens (over capacity) pass through the residual only — standard
+    "dropping" MoE.
+
+    Returns (out, aux_loss) where aux_loss is the load-balancing loss.
+    """
+    from . import psharding as PS
+
+    B, S, D = x.shape
+    E = p["router"].shape[1]
+    N = B * S
+    G = min(n_groups, N)
+    while N % G:  # largest divisor of N not exceeding n_groups
+        G -= 1
+    T = N // G
+    xt = PS.constrain(x.reshape(G, T, D), "dp", None, None)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (G,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = lax.top_k(probs, top_k)                     # (G,T,k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    me = probs.mean(axis=(0, 1))                             # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[topi.reshape(-1)].add(
+        1.0 / (N * top_k))
+    aux = E * jnp.sum(me * ce)
+
+    C = max(int(T * top_k * capacity_factor / E), 4)
+
+    # position of each (token, slot) within its expert bucket, per group
+    oh = jax.nn.one_hot(topi.reshape(G, T * top_k), E,
+                        dtype=jnp.int32)                      # (G,T*k,E)
+    oh = PS.constrain(oh, "dp", None, None)
+    pos_all = jnp.cumsum(oh, axis=1) - 1                      # (G,T*k,E)
+    pos = jnp.take_along_axis(
+        pos_all, topi.reshape(G, T * top_k)[..., None], axis=-1
+    )[..., 0].reshape(G, T, top_k)                            # (G,T,k)
+    keep = pos < C
+    safe_pos = jnp.where(keep, pos, C)                        # dump slot C
+
+    # scatter tokens -> (G, E, C+1, D) buffer.  vmapped per group with a
+    # static top_k loop: keeps the G axis explicit so its 'data' sharding
+    # survives (a flat (G*T*k, D) scatter would replicate ~100 GiB/dev).
+    def disp_group(xg, eg, pg):
+        b = jnp.zeros((E, C + 1, D), x.dtype)
+        for j in range(top_k):
+            b = b.at[eg[:, j], pg[:, j]].add(xg)
+        return b[:, :C]
+
+    buf = jax.vmap(disp_group)(xt, topi, safe_pos)            # (G,E,C,D)
+    # EP boundary: the scatter above is the data->expert all_to_all
+    buf = PS.constrain(buf, "dp", "tp", None, None)
+
+    # expert FFN, batched over experts (EP: E sharded over 'model')
+    if act == "silu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])) \
+            * jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", buf, p["w_up"]))
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["w_down"])    # (G,E,C,D)
+    out_buf = PS.constrain(out_buf, "dp", "tp", None, None)
+
+    # combine: gather each slot's result, weight, sum over k (per group)
+    w_comb = (topw * keep).astype(x.dtype)                    # (G,T,k)
+
+    def comb_group(og, eg, pg, wg):
+        acc = jnp.zeros((T, D), x.dtype)
+        for j in range(top_k):
+            gat = og[eg[:, j], jnp.minimum(pg[:, j], C - 1)]  # (T,D)
+            acc = acc + gat * wg[:, j][:, None]
+        return acc
+
+    out = jax.vmap(comb_group)(out_buf, topi, safe_pos, w_comb)
+    out = PS.constrain(out.reshape(B, S, D), "dp", None, None)
+    return out, aux
+
+
+# ====================================================================== #
+# Mamba (SSD / Mamba-2 form — TPU adaptation, see DESIGN.md §2)           #
+# ====================================================================== #
+@dataclasses.dataclass(frozen=True)
+class MambaDims:
+    d_model: int
+    d_inner: int
+    n_heads: int     # d_inner // head_dim
+    head_dim: int
+    d_state: int
+    d_conv: int = 4
+    chunk: int = 128
+
+
+def mamba_dims(d_model: int, expand: int = 2, head_dim: int = 64,
+               d_state: int = 16, d_conv: int = 4,
+               chunk: int = 128) -> MambaDims:
+    d_inner = expand * d_model
+    return MambaDims(d_model, d_inner, d_inner // head_dim, head_dim,
+                     d_state, d_conv, chunk)
+
+
+def init_mamba(key, dims: MambaDims, dtype=DEFAULT_DTYPE) -> Params:
+    ks = jax.random.split(key, 6)
+    di, H, P, N = dims.d_inner, dims.n_heads, dims.head_dim, dims.d_state
+    s = 1.0 / math.sqrt(dims.d_model)
+    return {
+        # in_proj -> [x (di), z (di), B (H*N), C (H*N), dt (H)]
+        "w_in": (jax.random.normal(
+            ks[0], (dims.d_model, 2 * di + 2 * H * N + H)) * s
+        ).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (dims.d_conv, di)) * 0.1
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "w_out": (jax.random.normal(ks[2], (di, dims.d_model)) /
+                  math.sqrt(di)).astype(dtype),
+        "norm": init_rmsnorm(di),
+    }
+
+
+def _mamba_split(p, x, dims: MambaDims):
+    di, H, N = dims.d_inner, dims.n_heads, dims.d_state
+    proj = x @ p["w_in"]
+    xs, z, Bm, Cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + H * N, 2 * di + 2 * H * N], axis=-1)
+    return xs, z, Bm, Cm, dt
+
+
+def _ssd_chunk_scan(xh, dt, A, Bm, Cm, dims: MambaDims,
+                    init_state: Optional[jax.Array] = None):
+    """Chunked SSD: y_t = C_t^T sum_{s<=t} (prod_{r=s+1..t} a_r) dt_s B_s x_s.
+
+    xh: (B, S, H, P); dt: (B, S, H) (softplus'd); Bm, Cm: (B, S, H, N).
+    a_t = exp(-dt_t * A_h) scalar-per-head decay (Mamba-2 / SSD form).
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    B, S, H, P = xh.shape
+    N = dims.d_state
+    L = min(dims.chunk, S)
+    nC = -(-S // L)
+    Sp = nC * L
+    if Sp != S:
+        # zero-pad: dt=0 gives identity decay and zero input contribution,
+        # so the final carried state is exact.
+        pad = ((0, 0), (0, Sp - S), (0, 0))
+        xh = jnp.pad(xh, pad + ((0, 0),))
+        Bm = jnp.pad(Bm, pad + ((0, 0),))
+        Cm = jnp.pad(Cm, pad + ((0, 0),))
+        dt = jnp.pad(dt, pad)
+    S_out, S = S, Sp
+
+    loga = (-dt * A[None, None, :]).astype(jnp.float32)      # (B,S,H) <= 0
+    x_dt = (xh.astype(jnp.float32) * dt[..., None])          # (B,S,H,P)
+
+    xc = x_dt.reshape(B, nC, L, H, P).swapaxes(0, 1)
+    bc = Bm.reshape(B, nC, L, H, N).swapaxes(0, 1).astype(jnp.float32)
+    cc = Cm.reshape(B, nC, L, H, N).swapaxes(0, 1).astype(jnp.float32)
+    lc = loga.reshape(B, nC, L, H).swapaxes(0, 1)
+
+    if init_state is None:
+        init_state = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def chunk_step(state, inp):
+        from . import psharding as PS
+
+        xk, bk, ck, lk = inp                     # (B,L,H,P/N/N/·)
+        xk = PS.constrain(xk, "dp", None, "tp", None)
+        bk = PS.constrain(bk, "dp", None, "tp", None)
+        ck = PS.constrain(ck, "dp", None, "tp", None)
+        cum = jnp.cumsum(lk, axis=1)             # (B,L,H) log decay to t
+        total = cum[:, -1]                       # (B,H)
+        # intra-chunk: G[t,s] = exp(cum_t - cum_s) * (C_t . B_s), s <= t
+        gmat = cum[:, :, None, :] - cum[:, None, :, :]       # (B,L,L,H)
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        gmat = jnp.where(tri[None, :, :, None], gmat, -jnp.inf)
+        cb = jnp.einsum("blhn,bshn->blsh", ck, bk)           # (B,L,L,H)
+        w = PS.constrain(jnp.exp(gmat) * cb, "dp", None, None, "tp")
+        y_intra = jnp.einsum("blsh,bshp->blhp", w, xk)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("blhn,bhnp->blhp", ck * jnp.exp(
+            cum)[..., None], state)
+        # state update: S' = exp(total) S + sum_s exp(total - cum_s) B_s x_s
+        decay_s = jnp.exp(total[:, None, :] - cum)           # (B,L,H)
+        state_new = (jnp.exp(total)[..., None, None] * state
+                     + jnp.einsum("bshn,bshp->bhnp",
+                                  bk * decay_s[..., None], xk))
+        state_new = PS.constrain(state_new, "dp", "tp", None, None)
+        return state_new, y_intra + y_inter
+
+    final_state, ys = lax.scan(jax.checkpoint(chunk_step), init_state,
+                               (xc, bc, cc, lc))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, P)
+    return y[:, :S_out], final_state
+
+
+def mamba_fwd(p: Params, x: jax.Array, dims: MambaDims,
+              conv_state: Optional[jax.Array] = None,
+              ssm_state: Optional[jax.Array] = None,
+              ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Mamba block forward.
+
+    Train/prefill: states None -> full sequence, returns final states.
+    Decode: S == 1 with states provided -> O(1) step.
+    conv_state: (B, d_conv-1, d_inner); ssm_state: (B, H, N, P).
+    """
+    B, S, D = x.shape
+    di, H, P, N = dims.d_inner, dims.n_heads, dims.head_dim, dims.d_state
+    xs, z, Bm, Cm, dt = _mamba_split(p, x, dims)
+
+    # causal depthwise conv along seq
+    K = dims.d_conv
+    if conv_state is None:
+        pad = jnp.zeros((B, K - 1, di), xs.dtype)
+    else:
+        pad = conv_state.astype(xs.dtype)
+    xpad = jnp.concatenate([pad, xs], axis=1)                # (B,S+K-1,di)
+    conv = sum(xpad[:, i:i + S, :] * p["conv_w"][i] for i in range(K))
+    conv = jax.nn.silu(conv + p["conv_b"])
+    new_conv_state = xpad[:, -(K - 1):, :] if K > 1 else pad
+
+    xh = conv.reshape(B, S, H, P)
+    Bm = Bm.reshape(B, S, H, N)
+    Cm = Cm.reshape(B, S, H, N)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = jnp.exp(p["A_log"])
+
+    if S == 1 and ssm_state is not None:
+        # decode: one recurrence step
+        a = jnp.exp(-dtf[:, 0] * A[None, :])                 # (B,H)
+        bx = jnp.einsum("bhn,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
+                        xh[:, 0].astype(jnp.float32) * dtf[:, 0, :, None])
+        state = a[..., None, None] * ssm_state + bx
+        y = jnp.einsum("bhn,bhnp->bhp", Cm[:, 0].astype(jnp.float32),
+                       state)[:, None]
+        final_state = state
+    else:
+        y, final_state = _ssd_chunk_scan(xh, dtf, A, Bm, Cm, dims,
+                                         init_state=ssm_state)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = rms_norm(p["norm"], y) * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    return out, (new_conv_state.astype(jnp.bfloat16), final_state)
+
+
+# ====================================================================== #
+# RWKV6 ("Finch") — data-dependent decay linear attention                 #
+# ====================================================================== #
+@dataclasses.dataclass(frozen=True)
+class RwkvDims:
+    d_model: int
+    n_heads: int
+    head_dim: int
+    d_ff: int
+    chunk: int = 64
+
+
+def rwkv_dims(d_model: int, d_ff: int, head_dim: int = 64,
+              chunk: int = 64) -> RwkvDims:
+    return RwkvDims(d_model, d_model // head_dim, head_dim, d_ff, chunk)
+
+
+def init_rwkv_tmix(key, dims: RwkvDims, dtype=DEFAULT_DTYPE) -> Params:
+    ks = jax.random.split(key, 8)
+    D, H, P = dims.d_model, dims.n_heads, dims.head_dim
+    s = 1.0 / math.sqrt(D)
+    lora = max(32, D // 64)
+    return {
+        "mix_r": jnp.full((D,), 0.5, dtype),
+        "mix_k": jnp.full((D,), 0.5, dtype),
+        "mix_v": jnp.full((D,), 0.5, dtype),
+        "mix_w": jnp.full((D,), 0.5, dtype),
+        "mix_g": jnp.full((D,), 0.5, dtype),
+        "wr": (jax.random.normal(ks[0], (D, D)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (D, D)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (D, D)) * s).astype(dtype),
+        "wg": (jax.random.normal(ks[3], (D, D)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[4], (D, D)) * s).astype(dtype),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((D,), -2.0, jnp.float32),
+        "wA": (jax.random.normal(ks[5], (D, lora)) * s).astype(dtype),
+        "wB": (jax.random.normal(ks[6], (lora, D)) * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[7], (H, P)) * 0.1).astype(jnp.float32),
+        "ln_x": init_layernorm(D),
+    }
+
+
+def _token_shift(x: jax.Array, shift_state: Optional[jax.Array]):
+    """prev-token features: (B,S,D) -> shifted; carry last token for decode."""
+    B, S, D = x.shape
+    if shift_state is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :S]
+    else:
+        prev = jnp.concatenate([shift_state[:, None, :], x[:, :S - 1]],
+                               axis=1) if S > 1 else shift_state[:, None, :]
+    return prev, x[:, -1, :]
+
+
+def rwkv_tmix_fwd(p: Params, x: jax.Array, dims: RwkvDims,
+                  wkv_state: Optional[jax.Array] = None,
+                  shift_state: Optional[jax.Array] = None,
+                  ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """RWKV6 time-mix.  wkv_state: (B,H,P,P); shift_state: (B,D)."""
+    B, S, D = x.shape
+    H, P = dims.n_heads, dims.head_dim
+    prev, last = _token_shift(x, shift_state)
+
+    def mix(m):
+        return x * p[m] + prev * (1.0 - p[m])
+
+    r = (mix("mix_r") @ p["wr"]).reshape(B, S, H, P)
+    k = (mix("mix_k") @ p["wk"]).reshape(B, S, H, P)
+    v = (mix("mix_v") @ p["wv"]).reshape(B, S, H, P)
+    g = jax.nn.silu(mix("mix_g") @ p["wg"])
+    # data-dependent decay (per channel): logw in (-inf, 0)
+    wx = jnp.tanh(mix("mix_w") @ p["wA"]) @ p["wB"]
+    logw = -jnp.exp(p["w0"] + wx.astype(jnp.float32))        # (B,S,D)
+    logw = logw.reshape(B, S, H, P)
+
+    if wkv_state is None:
+        wkv_state = jnp.zeros((B, H, P, P), jnp.float32)
+
+    if S == 1:
+        rf = r[:, 0].astype(jnp.float32)
+        kf = k[:, 0].astype(jnp.float32)
+        vf = v[:, 0].astype(jnp.float32)
+        kv = jnp.einsum("bhp,bhq->bhpq", kf, vf)
+        y = jnp.einsum("bhp,bhpq->bhq", rf,
+                       wkv_state + p["u"][None, :, :, None] * kv)
+        state = wkv_state * jnp.exp(logw[:, 0])[..., None] + kv
+        out = y[:, None].reshape(B, 1, D)
+    else:
+        out, state = _rwkv_chunk_scan(r, k, v, logw, p["u"], dims,
+                                      wkv_state)
+        out = out.reshape(B, S, D)
+    out = layer_norm(p["ln_x"], out.astype(x.dtype)) * g
+    return out @ p["wo"], (state, last.astype(jnp.bfloat16))
+
+
+def _rwkv_chunk_scan(r, k, v, logw, u, dims: RwkvDims, init_state):
+    """Chunked RWKV6 recurrence.
+
+    state S_t (P_k x P_v per head): S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    Chunked: intra-chunk pairwise decays + inter-chunk carried state.
+    """
+    B, S, H, P = r.shape
+    L = min(dims.chunk, S)
+    nC = -(-S // L)
+    Sp = nC * L
+    if Sp != S:
+        # zero-pad: logw=0 gives identity decay; k=v=0 adds nothing, so the
+        # carried wkv state is exact.
+        pad = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        r, k, v, logw = (jnp.pad(a, pad) for a in (r, k, v, logw))
+    S_out, S = S, Sp
+
+    rc = r.reshape(B, nC, L, H, P).swapaxes(0, 1).astype(jnp.float32)
+    kc = k.reshape(B, nC, L, H, P).swapaxes(0, 1).astype(jnp.float32)
+    vc = v.reshape(B, nC, L, H, P).swapaxes(0, 1).astype(jnp.float32)
+    wc = logw.reshape(B, nC, L, H, P).swapaxes(0, 1)
+
+    def chunk_step(state, inp):
+        from . import psharding as PS
+
+        rk, kk, vk, wk = inp                    # (B,L,H,P)
+        rk = PS.constrain(rk, "dp", None, "tp", None)
+        kk = PS.constrain(kk, "dp", None, "tp", None)
+        vk = PS.constrain(vk, "dp", None, "tp", None)
+        cum = jnp.cumsum(wk, axis=1)            # decay from chunk start to t
+        # r~_t = r_t * exp(cum_{t-1}); cum_{t-1} = cum_t - w_t
+        r_dec = rk * jnp.exp(cum - wk)
+        # k^_s = k_s * exp(-cum_s)  (valid: within-chunk, bounded by L decays)
+        k_dec = kk * jnp.exp(-cum)
+        att = jnp.einsum("blhp,bshp->blsh", r_dec, k_dec)   # (B,L,L,H)
+        tri = jnp.tril(jnp.ones((L, L), bool), k=-1)        # strict: s < t
+        att = PS.constrain(att * tri[None, :, :, None],
+                           "dp", None, None, "tp")
+        y_intra = jnp.einsum("blsh,bshq->blhq", att, vk)
+        # current-token bonus: r_t . (u * k_t) v_t
+        bonus = jnp.einsum("blhp,blhp->blh", rk, u[None, None] * kk)
+        y_bonus = bonus[..., None] * vk
+        # inter: y += (r_t exp(cum_{t-1}))^T S_carry
+        y_inter = jnp.einsum("blhp,bhpq->blhq", r_dec, state)
+        # state update: S' = diag(exp(cum_L)) S + sum_s exp(cum_L-cum_s) k v^T
+        total = cum[:, -1]                                   # (B,H,P)
+        k_tail = kk * jnp.exp(total[:, None] - cum)
+        state_new = state * jnp.exp(total)[..., None] + jnp.einsum(
+            "bshp,bshq->bhpq", k_tail, vk)
+        state_new = PS.constrain(state_new, "dp", "tp", None, None)
+        return state_new, y_intra + y_bonus + y_inter
+
+    final, ys = lax.scan(jax.checkpoint(chunk_step), init_state,
+                         (rc, kc, vc, wc))
+    return ys.swapaxes(0, 1).reshape(B, S, H, P)[:, :S_out], final
+
+
+def init_rwkv_cmix(key, dims: RwkvDims, dtype=DEFAULT_DTYPE) -> Params:
+    k1, k2 = jax.random.split(key)
+    D, F = dims.d_model, dims.d_ff
+    s = 1.0 / math.sqrt(D)
+    return {
+        "mix_k": jnp.full((D,), 0.5, dtype),
+        "wk": (jax.random.normal(k1, (D, F)) * s).astype(dtype),
+        "wv": (jax.random.normal(k2, (F, D)) / math.sqrt(F)).astype(dtype),
+    }
+
+
+def rwkv_cmix_fwd(p: Params, x: jax.Array,
+                  shift_state: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    prev, last = _token_shift(x, shift_state)
+    xk = x * p["mix_k"] + prev * (1.0 - p["mix_k"])
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return h @ p["wv"], last.astype(jnp.bfloat16)

@@ -1,0 +1,67 @@
+"""Logical-axis sharding constraints for model internals.
+
+GSPMD propagation through nested lax.scan bodies is best-effort; without
+hints it can leave big intermediates (attention score chunks, MoE dispatch
+buffers) replicated, exploding per-device memory.  Models call
+``constrain(x, "dp", None, "tp", None)`` with *logical* axes; the launcher
+activates a mapping to concrete mesh axes per run.
+
+Inactive by default, so eager smoke tests and single-device runs are
+untouched.  Dimensions that don't divide their mesh axes are silently
+replicated (same policy as shardings._fit).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = {"mesh": None, "dp": (), "tp": None}
+
+
+def set_mesh(mesh: Optional[Mesh], dp: Sequence[str] = ("data",),
+             tp: Optional[str] = "model") -> None:
+    _STATE["mesh"] = mesh
+    _STATE["dp"] = tuple(dp)
+    _STATE["tp"] = tp
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], dp: Sequence[str] = ("data",),
+             tp: Optional[str] = "model"):
+    old = dict(_STATE)
+    set_mesh(mesh, dp, tp)
+    try:
+        yield
+    finally:
+        _STATE.update(old)
+
+
+def active() -> bool:
+    return _STATE["mesh"] is not None
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Apply with_sharding_constraint using logical axes 'dp'/'tp'/None."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = []
+    for dim, l in zip(x.shape, logical):
+        if l == "dp":
+            axes = [a for a in _STATE["dp"] if a in sizes]
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            spec.append(tuple(axes) if axes and dim % total == 0 else None)
+        elif l == "tp":
+            a = _STATE["tp"]
+            spec.append(a if a in sizes and dim % sizes[a] == 0 else None)
+        else:
+            spec.append(None)
+    spec += [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,3 @@
+from .train_engine import ZeroOffloadEngine, OffloadConfig, StepTiming
+from .serve_engine import (FlexGenEngine, ServeConfig, ServeStats,
+                           search_placement, max_batch_for_capacity)

@@ -1,0 +1,1 @@
+from .adam import AdamConfig, init_state, init_state_shapes, apply_update

@@ -1,0 +1,13 @@
+"""Tests run on the single real CPU device (no forced device count —
+the 512-device override belongs ONLY to the dry-run)."""
+import os
+
+# keep any externally-set XLA_FLAGS from leaking a device-count override
+flags = os.environ.get("XLA_FLAGS", "")
+if "host_platform_device_count" in flags:
+    os.environ["XLA_FLAGS"] = " ".join(
+        f for f in flags.split() if "host_platform_device_count" not in f)
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,75 @@
+"""Checkpoint store: atomic roundtrip, checksums, elastic restore, GC."""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import latest_step, restore, save
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 4)),
+                       "b": jnp.arange(4.0)},
+            "opt": {"m": jnp.zeros((8, 4)), "step": jnp.int32(7)}}
+
+
+def test_roundtrip(tmp_path):
+    st = _state()
+    save(tmp_path, 100, st, metadata={"data_step": 100})
+    got, meta = restore(tmp_path, _state(seed=1))
+    assert meta["data_step"] == 100
+    np.testing.assert_array_equal(np.asarray(got["params"]["w"]),
+                                  np.asarray(st["params"]["w"]))
+    assert int(got["opt"]["step"]) == 7
+
+
+def test_latest_and_gc(tmp_path):
+    for s in (1, 2, 3, 4, 5):
+        save(tmp_path, s, _state(s), keep_last=3)
+    assert latest_step(tmp_path) == 5
+    kept = sorted(p.name for p in Path(tmp_path).glob("step_*"))
+    assert len(kept) == 3 and kept[0].endswith("00000003")
+
+
+def test_atomicity_tmp_ignored(tmp_path):
+    save(tmp_path, 1, _state())
+    # a crashed writer leaves a .tmp dir: restore must ignore it
+    (Path(tmp_path) / "step_00000002.tmp").mkdir()
+    assert latest_step(tmp_path) == 1
+    got, _ = restore(tmp_path, _state(9))
+    assert got is not None
+
+
+def test_checksum_detects_corruption(tmp_path):
+    d = save(tmp_path, 3, _state())
+    manifest = json.loads((d / "manifest.json").read_text())
+    fn = manifest["leaves"]["params/w"]["file"]
+    arr = np.load(d / fn)
+    arr[0, 0] += 1.0
+    np.save(d / fn, arr)
+    with pytest.raises(IOError, match="checksum"):
+        restore(tmp_path, _state(1))
+
+
+def test_elastic_restore_with_sharding(tmp_path):
+    """Restore re-shards onto a (trivial) mesh — the elastic path."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    st = _state()
+    save(tmp_path, 1, st)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    shardings = jax.tree.map(
+        lambda _: NamedSharding(mesh, P()), _state(1))
+    got, _ = restore(tmp_path, _state(1), shardings=shardings)
+    assert got["params"]["w"].sharding == NamedSharding(mesh, P())
+
+
+def test_missing_leaf_rejected(tmp_path):
+    save(tmp_path, 1, {"a": jnp.ones(3)})
+    with pytest.raises(KeyError):
+        restore(tmp_path, {"b": jnp.ones(3)})

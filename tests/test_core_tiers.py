@@ -1,0 +1,93 @@
+"""Tier performance models: reproduce the paper's §III characterization."""
+import math
+
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (MemoryTier, assign_streams, interleave_bandwidth,
+                        paper_system, tpu_v5e_tiers)
+
+
+@pytest.mark.parametrize("sys", ["A", "B", "C"])
+def test_cxl_latency_is_two_hop(sys):
+    """Fig. 2: CXL latency ≈ two NUMA hops (worse than RDRAM's one hop)."""
+    t = paper_system(sys)
+    hop = t["RDRAM"].unloaded_latency_ns - t["LDRAM"].unloaded_latency_ns
+    cxl_delta = t["CXL"].unloaded_latency_ns - t["LDRAM"].unloaded_latency_ns
+    assert cxl_delta > hop, "CXL must be slower than one hop"
+    assert cxl_delta < 3.5 * hop, "CXL ≈ two-hop distance"
+
+
+@pytest.mark.parametrize("sys", ["A", "B", "C"])
+def test_cxl_saturates_early(sys):
+    """Fig. 3: CXL bandwidth saturates by ~4-8 streams; DRAM much later."""
+    t = paper_system(sys)
+    cxl, ld = t["CXL"], t["LDRAM"]
+    # 8 streams reach >=85% of peak on CXL (dual-channel CXL-C is latest)
+    assert cxl.bandwidth(8) >= 0.85 * cxl.peak_bw_GBps
+    # LDRAM at 8 streams is far from peak
+    assert ld.bandwidth(8) < 0.8 * ld.peak_bw_GBps
+
+
+def test_cxl_bandwidth_ratio_range():
+    """Sec. I: CXL peak is 9.8%-80.3% of local DRAM across vendors."""
+    for sysname in "ABC":
+        t = paper_system(sysname)
+        ratio = t["CXL"].peak_bw_GBps / t["LDRAM"].peak_bw_GBps
+        assert 0.05 <= ratio <= 0.85
+
+
+def test_loaded_latency_blowup():
+    """Fig. 4: near peak bandwidth, LDRAM latency approaches CXL levels."""
+    t = paper_system("A")
+    ld = t["LDRAM"]
+    unloaded = ld.loaded_latency(0.0)
+    loaded = ld.loaded_latency(0.97 * ld.peak_bw_GBps)
+    assert loaded > 3 * unloaded
+    # loaded LDRAM is in the ballpark of (or worse than) unloaded CXL
+    assert loaded > t["CXL"].unloaded_latency_ns
+
+
+def test_stream_assignment_matches_paper_shape():
+    """Sec. III: optimal assignment gives CXL few streams, DRAM many
+    (the paper's 6/23/23 trick on system B)."""
+    t = {k: v for k, v in paper_system("B").items() if k != "NVMe"}
+    alloc, agg = assign_streams(t, 52)
+    assert alloc["CXL"] <= 8
+    assert alloc["LDRAM"] >= 15 and alloc["RDRAM"] >= 15
+    # aggregate beats any single tier's peak
+    assert agg > t["LDRAM"].peak_bw_GBps
+
+
+def test_uniform_interleave_gated_by_slow_tier():
+    """Sec. V takeaway: uniform interleave can undermine performance —
+    a slow CXL serving an equal share gates the aggregate."""
+    t = paper_system("A")
+    both = interleave_bandwidth({"LDRAM": t["LDRAM"], "CXL": t["CXL"]})
+    assert both < t["LDRAM"].peak_bw_GBps
+    # bandwidth-proportional shares recover aggregate bandwidth
+    w = {"LDRAM": 0.92, "CXL": 0.08}
+    prop = interleave_bandwidth({"LDRAM": t["LDRAM"], "CXL": t["CXL"]}, w)
+    assert prop > both
+
+
+def test_tpu_tiers_sane():
+    t = tpu_v5e_tiers()
+    assert t["HBM"].peak_bw_GBps > 30 * t["HOST"].peak_bw_GBps
+    assert t["HOST"].capacity_GiB > t["HBM"].capacity_GiB
+
+
+@given(st.floats(0.1, 64.0))
+def test_bandwidth_monotone(streams):
+    tier = paper_system("A")["CXL"]
+    assert tier.bandwidth(streams) <= tier.bandwidth(streams + 1) + 1e-9
+    assert 0 <= tier.bandwidth(streams) <= tier.peak_bw_GBps + 1e-9
+
+
+@given(st.floats(0.0, 1.0))
+def test_loaded_latency_monotone(frac):
+    tier = paper_system("B")["LDRAM"]
+    lo = tier.loaded_latency(frac * tier.peak_bw_GBps * 0.9)
+    hi = tier.loaded_latency(min((frac + 0.05), 1.0)
+                             * tier.peak_bw_GBps * 0.9)
+    assert hi >= lo - 1e-9

@@ -1,0 +1,101 @@
+"""Cost model: qualitative reproduction of the paper's §V/§IV claims."""
+import dataclasses
+
+import pytest
+
+from repro.core import (ObjectLevelInterleave, TierPreferred,
+                        UniformInterleave, compare_policies,
+                        hpc_workload_objects, paper_system, plan_step_cost,
+                        policy_search, llm_serve_objects, GiB)
+
+
+def _tiers(ldram_gib):
+    t = dict(paper_system("A"))
+    t["LDRAM"] = dataclasses.replace(t["LDRAM"], capacity_GiB=ldram_gib)
+    return t
+
+
+@pytest.mark.parametrize("wl", ["BT", "LU", "MG", "SP", "FT"])
+def test_oli_beats_uniform_sufficient_ldram(wl):
+    """OLI observation 1: OLI consistently outperforms uniform
+    interleaving (65% average in the paper) with sufficient LDRAM."""
+    tiers = _tiers(128)
+    objs = hpc_workload_objects(wl)
+    costs = compare_policies(
+        objs,
+        [UniformInterleave(["LDRAM", "CXL"]),
+         ObjectLevelInterleave("LDRAM", ["CXL"])],
+        tiers)
+    uni = costs["uniform_interleave[LDRAM+CXL]"].step_s
+    oli = costs["oli[LDRAM+CXL]"].step_s
+    assert oli <= uni * 1.001, f"{wl}: OLI {oli} worse than uniform {uni}"
+
+
+@pytest.mark.parametrize("wl", ["BT", "LU", "MG"])
+def test_oli_beats_preferred_insufficient_ldram(wl):
+    """OLI observation 2: with insufficient LDRAM (64 GB), OLI beats
+    LDRAM-preferred (1.42x average in the paper).  Setup matches §V-B:
+    LDRAM (limited) + CXL only — the preferred policy pushes the
+    late-allocated latency-sensitive residue onto CXL."""
+    tiers = {k: v for k, v in _tiers(64).items()
+             if k in ("LDRAM", "CXL")}
+    objs = hpc_workload_objects(wl)
+    costs = compare_policies(
+        objs,
+        [TierPreferred("LDRAM"),
+         ObjectLevelInterleave("LDRAM", ["CXL"])],
+        tiers)
+    assert costs["oli[LDRAM+CXL]"].step_s < \
+        costs["LDRAM_preferred"].step_s
+
+
+def test_xsbench_prefers_ldram():
+    """§V-B: XSBench (concentrated latency-sensitive set) favors
+    LDRAM-preferred over both interleaving flavors."""
+    tiers = _tiers(128)
+    objs = hpc_workload_objects("XSBench")
+    costs = compare_policies(
+        objs,
+        [TierPreferred("LDRAM"),
+         UniformInterleave(["LDRAM", "CXL"])],
+        tiers)
+    assert costs["LDRAM_preferred"].step_s <= \
+        costs["uniform_interleave[LDRAM+CXL]"].step_s
+
+
+def test_rdram_cxl_close_to_ldram_cxl():
+    """HPC observation 1: interleave(RDRAM+CXL) ≈ interleave(LDRAM+CXL)
+    (CXL dominates; <9.2% difference in the paper)."""
+    tiers = _tiers(768)
+    objs = hpc_workload_objects("MG")
+    costs = compare_policies(
+        objs,
+        [UniformInterleave(["LDRAM", "CXL"]),
+         UniformInterleave(["RDRAM", "CXL"])],
+        tiers)
+    a = costs["uniform_interleave[LDRAM+CXL]"].step_s
+    b = costs["uniform_interleave[RDRAM+CXL]"].step_s
+    assert abs(a - b) / a < 0.15
+
+
+def test_policy_search_feasible_and_sane():
+    """FlexGen-style search places hot objects fast-first under budget."""
+    tiers = _tiers(196)
+    objs = llm_serve_objects(n_params=65_000_000_000,
+                             kv_bytes=120 * GiB, act_bytes=2 * GiB)
+    res = policy_search(objs, tiers, fast="LDRAM", grid=4)
+    assert res.step_s > 0
+    placed = sum(res.plan.tier_bytes.values())
+    total = sum(o.nbytes for o in objs)
+    assert placed >= 0.98 * total
+
+
+def test_step_cost_bounds():
+    tiers = _tiers(768)
+    objs = hpc_workload_objects("CG")
+    plan = TierPreferred("LDRAM").plan(objs, tiers)
+    c = plan_step_cost(objs, plan, tiers, compute_time_s=100.0)
+    assert c.step_s >= 100.0         # compute floor
+    assert c.bound == "compute"
+    c2 = plan_step_cost(objs, plan, tiers, compute_time_s=0.0)
+    assert c2.bound == "memory"

@@ -1,0 +1,60 @@
+"""Data pipeline: determinism, sharding partition, O(1) resume."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import (DataConfig, DataIterator, batch_for_step,
+                                 global_batch_for_step)
+
+CFG = DataConfig(vocab=1000, seq_len=16, global_batch=8, seed=42)
+
+
+def test_deterministic():
+    a = batch_for_step(CFG, 5)
+    b = batch_for_step(CFG, 5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+def test_steps_differ():
+    a = batch_for_step(CFG, 5)
+    b = batch_for_step(CFG, 6)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_labels_are_shifted_stream():
+    b = batch_for_step(CFG, 0)
+    assert b["tokens"].shape == (8, 16)
+    assert b["labels"].shape == (8, 16)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+@settings(max_examples=20, deadline=None)
+@given(step=st.integers(0, 1000), dp=st.sampled_from([1, 2, 4, 8]))
+def test_shard_rows_disjoint_and_seeded(step, dp):
+    """Different ranks produce different data; shard sizes partition the
+    global batch (stateless index map — any worker can recompute)."""
+    shards = [batch_for_step(CFG, step, r, dp) for r in range(dp)]
+    per = CFG.global_batch // dp
+    for s in shards:
+        assert s["tokens"].shape == (per, CFG.seq_len)
+    if dp > 1:
+        assert not np.array_equal(shards[0]["tokens"],
+                                  shards[1]["tokens"])
+
+
+def test_vocab_bounds():
+    b = batch_for_step(CFG, 3)
+    assert b["tokens"].min() >= 0
+    assert b["tokens"].max() < CFG.vocab
+
+
+def test_iterator_resume():
+    it = DataIterator(CFG, start_step=0)
+    next(it)
+    next(it)
+    state = it.state()
+    b3 = next(it)
+    it2 = DataIterator(CFG)
+    it2.restore(state)
+    b3r = next(it2)
+    np.testing.assert_array_equal(b3["tokens"], b3r["tokens"])

@@ -1,0 +1,121 @@
+"""Integration: prefill + decode_step == full forward, for every family.
+
+This is the system's core numerical invariant — the KV/SSM/WKV caches and
+position handling must be exact across the prefill/decode boundary.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_smoke_config
+from repro.models import lm
+
+
+def _pad_kv(cache, extra=8):
+    out = dict(cache)
+    for k in ("kv_k", "kv_v"):
+        if k in out:
+            pads = [(0, 0)] * out[k].ndim
+            pads[3] = (0, extra)
+            out[k] = jnp.pad(out[k], pads)
+    return out
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_decode_matches_prefill(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    cross = None
+    if cfg.n_frontend_tokens:
+        cross = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.n_frontend_tokens, cfg.d_model))
+
+    logits_p, cache = lm.prefill(params, cfg, toks, cross)
+    cache = _pad_kv(cache)
+    # decode 3 tokens, comparing each against the full-sequence prefill
+    seq = toks
+    for step in range(3):
+        nxt = jnp.argmax(logits_p, -1)[:, None].astype(jnp.int32)
+        logits_d, cache = lm.decode_step(params, cfg, cache, nxt)
+        seq = jnp.concatenate([seq, nxt], axis=1)
+        logits_full, _ = lm.prefill(params, cfg, seq, cross)
+        a = np.asarray(logits_d, np.float32)
+        b = np.asarray(logits_full, np.float32)
+        rel = np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-9)
+        assert rel < 2e-2, f"{arch} step {step}: rel err {rel}"
+        logits_p = logits_d
+
+
+def test_mamba_chunk_vs_step_recurrence():
+    """SSD chunked scan == token-by-token recurrence (oracle check)."""
+    from repro.models import modules as M
+    dims = M.mamba_dims(32, expand=2, head_dim=16, d_state=8, chunk=8)
+    p = M.init_mamba(jax.random.PRNGKey(0), dims)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 19, 32),
+                          jnp.float32) * 0.5
+    y_full, (cs, ss) = M.mamba_fwd(p, x, dims)
+    # token-by-token
+    cs2 = jnp.zeros((2, dims.d_conv - 1, dims.d_inner), jnp.bfloat16)
+    ss2 = jnp.zeros((2, dims.n_heads, dims.d_state, dims.head_dim),
+                    jnp.float32)
+    outs = []
+    for t in range(19):
+        y, (cs2, ss2) = M.mamba_fwd(p, x[:, t:t + 1], dims,
+                                    conv_state=cs2, ssm_state=ss2)
+        outs.append(y)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full, np.float32),
+                               np.asarray(y_step, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(ss, np.float32),
+                               np.asarray(ss2, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_rwkv_chunk_vs_step_recurrence():
+    from repro.models import modules as M
+    dims = M.rwkv_dims(32, d_ff=64, head_dim=16, chunk=8)
+    p = M.init_rwkv_tmix(jax.random.PRNGKey(0), dims)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 21, 32),
+                          jnp.float32) * 0.5
+    y_full, (state, shift) = M.rwkv_tmix_fwd(p, x, dims)
+    st = None
+    sh = None
+    outs = []
+    for t in range(21):
+        y, (st, sh) = M.rwkv_tmix_fwd(p, x[:, t:t + 1], dims,
+                                      wkv_state=st, shift_state=sh)
+        outs.append(y)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full, np.float32),
+                               np.asarray(y_step, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(st),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_int8_kv_cache_decode():
+    """int8-quantized KV cache: decode within quantization tolerance."""
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke_config("llama3-8b"),
+                              kv_cache_dtype="int8")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)
+    logits_p, cache = lm.prefill(params, cfg, toks)
+    out = dict(cache)
+    for k in ("kv_k", "kv_v", "kv_k_scale", "kv_v_scale"):
+        pads = [(0, 0)] * out[k].ndim
+        pads[3] = (0, 8)
+        out[k] = jnp.pad(out[k], pads)
+    assert out["kv_k"].dtype == jnp.int8
+    nxt = jnp.argmax(logits_p, -1)[:, None].astype(jnp.int32)
+    logits_d, _ = lm.decode_step(params, cfg, out, nxt)
+    logits_full, _ = lm.prefill(params, cfg,
+                                jnp.concatenate([toks, nxt], 1))
+    a = np.asarray(logits_d, np.float32)
+    b = np.asarray(logits_full, np.float32)
+    rel = np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-9)
+    assert rel < 0.1, rel

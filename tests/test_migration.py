@@ -1,0 +1,103 @@
+"""Memory-tiering runtimes: reproduce the paper's §VI PMO findings."""
+import pytest
+
+from repro.core import (AutoNUMA, Block, MigrationSim, NoBalance, TPP,
+                        Tiering08, make_blocks_from_plan, paper_system,
+                        trace_scattered_hotset, trace_stable_hotset,
+                        trace_uniform)
+
+MB64 = 64 * 1024**2
+
+
+def _blocks(n_slow=48, n_fast=8):
+    return ([Block("a", i, MB64, "CXL") for i in range(n_slow)]
+            + [Block("a", 1000 + i, MB64, "LDRAM") for i in range(n_fast)])
+
+
+def _run(policy, trace, fast_cap=40):
+    tiers = paper_system("A")
+    sim = MigrationSim([Block(b.obj, b.idx, b.nbytes, b.tier,
+                              b.unmigratable) for b in _blocks()],
+                       tiers, "LDRAM", policy,
+                       fast_capacity_bytes=fast_cap * MB64)
+    return sim.run(trace)
+
+
+def test_migration_helps_stable_hotset():
+    """BT/LU-style: hot pages with locality -> migration wins (PMO 5)."""
+    ids = [(b.obj, b.idx) for b in _blocks()]
+    trace = trace_stable_hotset(ids, epochs=25, hot_fraction=0.15)
+    no = _run(NoBalance(), trace)
+    auto = _run(AutoNUMA(), trace)
+    assert auto.exec_time_s < no.exec_time_s
+    assert auto.fast_hit_fraction > no.fast_hit_fraction
+
+
+def test_migration_hurts_uniform_access():
+    """FT/SP-style uniformly-touched sets: migration only adds traffic
+    and profiling overhead (PMO 5).  Fast tier starts FULL (first touch
+    placed it), so promotion can only churn."""
+    blocks = ([Block("a", i, MB64, "CXL") for i in range(16)]
+              + [Block("a", 100 + i, MB64, "LDRAM") for i in range(40)])
+    ids = [(b.obj, b.idx) for b in blocks]
+    trace = trace_uniform(ids, epochs=25)
+    tiers = paper_system("A")
+
+    def run(policy):
+        sim = MigrationSim([Block(b.obj, b.idx, b.nbytes, b.tier)
+                            for b in blocks], tiers, "LDRAM", policy,
+                           fast_capacity_bytes=40 * MB64)
+        return sim.run(trace)
+
+    no = run(NoBalance())
+    tpp = run(TPP())
+    assert tpp.exec_time_s >= no.exec_time_s * 0.999
+
+
+def test_tiering08_fewer_faults_than_tpp():
+    """PMO 2: Tiering-0.8 profiles far less than TPP (59x in paper).
+    Small fast capacity keeps a large slow-resident population, so TPP
+    faults on every touched slow block every epoch."""
+    ids = [(b.obj, b.idx) for b in _blocks(96, 8)]
+    trace = trace_scattered_hotset(ids, epochs=30, hot_fraction=0.5)
+
+    def run(policy):
+        tiers = paper_system("A")
+        sim = MigrationSim([Block("a", i, MB64, "CXL")
+                            for i in range(96)]
+                           + [Block("a", 1000 + i, MB64, "LDRAM")
+                              for i in range(8)],
+                           tiers, "LDRAM", policy,
+                           fast_capacity_bytes=12 * MB64)
+        return sim.run(trace)
+
+    t08 = run(Tiering08())
+    tpp = run(TPP())
+    assert t08.stats.hint_faults < 0.5 * tpp.stats.hint_faults
+
+
+def test_interleaved_blocks_never_fault():
+    """PMO 3: pages placed by interleaving live in unmigratable regions
+    and produce (orders of magnitude) fewer hint faults."""
+    shares = {"a": [("LDRAM", 0.5), ("CXL", 0.5)]}
+    blocks = make_blocks_from_plan(shares, {"a": 56 * MB64},
+                                   block_bytes=MB64,
+                                   interleaved_objs=["a"])
+    assert all(b.unmigratable for b in blocks)
+    tiers = paper_system("A")
+    ids = [(b.obj, b.idx) for b in blocks]
+    trace = trace_stable_hotset(ids, epochs=20)
+    sim = MigrationSim(blocks, tiers, "LDRAM", AutoNUMA(),
+                       fast_capacity_bytes=40 * MB64)
+    res = sim.run(trace)
+    assert res.stats.hint_faults == 0
+    assert res.stats.promoted == 0
+
+
+def test_capacity_pressure_demotes_coldest():
+    ids = [(b.obj, b.idx) for b in _blocks(48, 8)]
+    trace = trace_scattered_hotset(ids, epochs=30, hot_fraction=0.4)
+    res = _run(AutoNUMA(), trace, fast_cap=12)
+    assert res.stats.demoted > 0
+    # fast tier never exceeded: promoted - demoted bounded by capacity
+    assert res.stats.promoted >= res.stats.demoted

@@ -1,0 +1,80 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch at a
+reduced config of the same family — one forward/train step on CPU with
+shape + finite-ness asserts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_smoke_config
+from repro.models import lm
+
+
+def _inputs(cfg, B=2, S=32):
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    cross = None
+    if cfg.n_frontend_tokens:
+        cross = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.n_frontend_tokens, cfg.d_model))
+    return toks, jnp.roll(toks, -1, axis=1), cross
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    toks, labels, cross = _inputs(cfg)
+
+    loss = lm.forward_loss(params, cfg, toks, labels, cross)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    assert 0.0 < float(loss) < 20.0
+
+    grads = jax.grad(
+        lambda p: lm.forward_loss(p, cfg, toks, labels, cross))(params)
+    leaves = jax.tree.leaves(grads)
+    assert leaves, "no gradients"
+    for leaf in leaves:
+        assert np.isfinite(np.asarray(leaf, np.float32)).all(), \
+            f"{arch}: non-finite grad"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_prefill_shapes(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    toks, _, cross = _inputs(cfg)
+    logits, cache = lm.prefill(params, cfg, toks, cross)
+    assert logits.shape == (2, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert int(cache["index"]) == toks.shape[1]
+    # cache leaves carry the unit axis
+    for k, vv in cache.items():
+        if k != "index":
+            assert vv.shape[0] == cfg.n_units, (arch, k, vv.shape)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_one_train_step_updates_params(arch):
+    from repro.launch.steps import make_train_step
+    from repro.optim import AdamConfig, init_state
+
+    cfg = get_smoke_config(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    acfg = AdamConfig(lr=1e-2)
+    opt = init_state(params, acfg)
+    toks, labels, cross = _inputs(cfg)
+    batch = {"tokens": toks, "labels": labels}
+    if cross is not None:
+        batch["frames"] = cross
+    step = make_train_step(cfg, acfg)
+    new_params, new_opt, loss = step(params, opt, batch)
+    assert np.isfinite(float(loss))
+    assert int(new_opt["step"]) == 1
+    # at least one leaf moved
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32),
+                        np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(new_params)))
+    assert moved, f"{arch}: params did not update"

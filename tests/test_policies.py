@@ -1,0 +1,90 @@
+"""Placement policies: §V-B selection criteria + plan invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DataObject, FirstTouch, ObjectLevelInterleave,
+                        TierPreferred, UniformInterleave, paper_system,
+                        select_interleave_candidates, GiB)
+
+
+def _objs():
+    return [
+        DataObject("big_stream", 50 * GiB, read_bytes_per_step=100 * GiB),
+        DataObject("big_random", 40 * GiB, read_bytes_per_step=80 * GiB,
+                   random_fraction=0.95),
+        DataObject("small", 1 * GiB, read_bytes_per_step=10 * GiB),
+        DataObject("cold", 30 * GiB, read_bytes_per_step=0),
+    ]
+
+
+def test_selection_criteria():
+    """§V-B: ≥10% footprint AND access-intensive AND not latency-bound."""
+    sel = {o.name for o in select_interleave_candidates(_objs())}
+    assert "big_stream" in sel          # big + hot + streaming
+    assert "big_random" not in sel      # latency-sensitive (OLI gathers it)
+    assert "small" not in sel           # < 10% footprint
+    assert "cold" not in sel            # no traffic
+
+
+def test_oli_places_hungry_across_tiers():
+    tiers = paper_system("A")
+    plan = ObjectLevelInterleave("LDRAM", ["CXL"]).plan(_objs(), tiers)
+    assert 0.3 < plan.fraction_on("big_stream", "CXL") < 0.7
+    # latency-sensitive object gathered on the fast tier
+    assert plan.fraction_on("big_random", "LDRAM") > 0.99
+
+
+def test_oli_saves_fast_memory_vs_preferred():
+    """OLI observation 1: OLI reduces fast-memory use (~32% in paper)."""
+    tiers = paper_system("A")
+    objs = _objs()
+    pref = TierPreferred("LDRAM").plan(objs, tiers)
+    oli = ObjectLevelInterleave("LDRAM", ["CXL"]).plan(objs, tiers)
+    assert oli.fast_bytes("LDRAM") < 0.85 * pref.fast_bytes("LDRAM")
+
+
+def test_preferred_spills_in_numa_order():
+    import dataclasses
+    tiers = dict(paper_system("A"))
+    tiers["LDRAM"] = dataclasses.replace(tiers["LDRAM"], capacity_GiB=60)
+    plan = TierPreferred("LDRAM").plan(_objs(), tiers)
+    # first object fills LDRAM (60 of 50 fits); later objects spill to RDRAM
+    assert plan.fraction_on("big_stream", "LDRAM") == 1.0
+    assert plan.fraction_on("big_random", "RDRAM") > 0.5
+
+
+def test_uniform_interleave_equal_shares():
+    tiers = paper_system("A")
+    plan = UniformInterleave(["LDRAM", "CXL"]).plan(_objs(), tiers)
+    f = plan.fraction_on("big_stream", "LDRAM")
+    assert abs(f - 0.5) < 0.02
+
+
+@st.composite
+def _random_objs(draw):
+    n = draw(st.integers(1, 8))
+    out = []
+    for i in range(n):
+        nbytes = draw(st.integers(1, 200)) * GiB
+        traffic = draw(st.integers(0, 400)) * GiB
+        rf = draw(st.sampled_from([0.0, 0.3, 0.9]))
+        out.append(DataObject(f"o{i}", nbytes, traffic,
+                              random_fraction=rf))
+    return out
+
+
+@settings(max_examples=40, deadline=None)
+@given(_random_objs(), st.sampled_from(["A", "B", "C"]),
+       st.sampled_from(["pref", "uniform", "oli", "first"]))
+def test_plans_cover_every_byte(objs, sysname, polname):
+    """Invariant: every plan accounts for 100% of every object."""
+    tiers = paper_system(sysname)
+    pol = {"pref": TierPreferred("LDRAM"),
+           "uniform": UniformInterleave(["LDRAM", "CXL"]),
+           "oli": ObjectLevelInterleave("LDRAM", ["CXL"]),
+           "first": FirstTouch("LDRAM")}[polname]
+    plan = pol.plan(objs, tiers)
+    for o in objs:
+        total = sum(f for _, f in plan.shares[o.name])
+        assert total == pytest.approx(1.0, abs=0.02), \
+            f"{polname} lost bytes of {o.name}: {total}"

@@ -1,0 +1,113 @@
+"""Sharding rules: divisibility fitting, cache regimes, batch fallbacks."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.launch.mesh import make_mesh
+from repro.models import lm, shardings as sh
+
+
+@pytest.fixture(scope="module")
+def mesh11():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def _specs_for(arch, mesh):
+    cfg = get_smoke_config(arch)
+    shapes = jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    return cfg, shapes, sh.param_pspecs(shapes, mesh)
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "qwen3-moe-30b-a3b",
+                                  "jamba-1.5-large-398b", "rwkv6-7b",
+                                  "whisper-large-v3"])
+def test_specs_always_divide(arch, mesh11):
+    """Every assigned axis must divide its dim (here trivially, but the
+    rule engine is exercised end-to-end on every family)."""
+    cfg, shapes, specs = _specs_for(arch, mesh11)
+    sizes = dict(zip(mesh11.axis_names, mesh11.devices.shape))
+
+    def check(path, leaf, spec):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 9):
+            if ax is not None:
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                n = 1
+                for a in axes:
+                    n *= sizes[a]
+                assert dim % n == 0, (path, leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(check, shapes, specs)
+
+
+def test_nondividing_dim_replicated():
+    """25 heads over 16-way TP (gpt2-style) must fall back to replicate."""
+    mesh = make_mesh((1, 1), ("data", "model"))
+    spec = sh._fit((25, 64), ("__fsdp__", "__tp__"), mesh,
+                   "data", "model")
+    # sizes are 1 so everything divides — test the logic with fake mesh:
+    mesh2 = make_mesh((1,), ("model",))
+    spec2 = sh._fit((25, 64), (None, "__tp__"), mesh2, "data", "model")
+    assert spec2 == P(None, "model")  # 64 % 1 == 0
+    # emulate 16-way by direct check of the rule helper
+    import types
+    fake = types.SimpleNamespace(axis_names=("data", "model"),
+                                 devices=types.SimpleNamespace(
+                                     shape=(2, 16)))
+    got = sh._fit((25, 64), ("__tp__", "__fsdp__"), fake, "data", "model")
+    assert got[0] is None          # 25 % 16 != 0 -> replicated
+    assert got[1] == "data"        # 64 % 2 == 0
+
+
+def test_batch_pspec_fallbacks():
+    import types
+    fake = types.SimpleNamespace(axis_names=("pod", "data", "model"),
+                                 devices=types.SimpleNamespace(
+                                     shape=(2, 16, 16)))
+    assert sh.batch_pspec(256, fake, ("pod", "data")) == \
+        P(("pod", "data"))
+    assert sh.batch_pspec(2, fake, ("pod", "data")) == P("pod")
+    assert sh.batch_pspec(1, fake, ("pod", "data")) == P(None)
+
+
+def test_cache_pspecs_regimes():
+    import types
+    fake = types.SimpleNamespace(axis_names=("data", "model"),
+                                 devices=types.SimpleNamespace(
+                                     shape=(16, 16)))
+    shapes = {
+        "index": jax.ShapeDtypeStruct((), jnp.int32),
+        "kv_k": jax.ShapeDtypeStruct((4, 1, 128, 36864, 8, 128),
+                                     jnp.bfloat16),
+    }
+    # batch 128 divisible by dp 16 -> batch-sharded; kv=8 not /16 -> seq
+    specs = sh.cache_pspecs(shapes, fake, 128, ("data",))
+    assert specs["kv_k"] == P(None, None, ("data",), "model", None, None)
+    # batch 1 -> seq sharded over (data, model)
+    specs = sh.cache_pspecs(shapes, fake, 1, ("data",))
+    assert specs["kv_k"][3] == ("data", "model")
+
+
+def test_serve_params_tp_only():
+    """Inference cells drop FSDP (TP-resident weights, §Perf O5)."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import lm, shardings as sh
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = get_smoke_config("llama3-8b")
+    shapes = jax.eval_shape(
+        lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+    train_specs = sh.param_pspecs(shapes, mesh, fsdp="data")
+    serve_specs = sh.param_pspecs(shapes, mesh, fsdp=None)
+    # serve specs must never reference the data axis
+    for s in jax.tree.leaves(serve_specs,
+                             is_leaf=lambda x: hasattr(x, "index")):
+        assert "data" not in [a for a in s if a], s
+    # train specs do (at least somewhere)
+    uses_data = any("data" in [a for a in s if a]
+                    for s in jax.tree.leaves(
+                        train_specs, is_leaf=lambda x: hasattr(x, "index")))
+    assert uses_data
