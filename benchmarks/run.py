@@ -7,6 +7,7 @@ Prints ``name,value,derived`` CSV.  Modules:
   flexgen_serve          Figs. 11-12 + Table II serving
   oli_hpc                Figs. 13-15 + Table III OLI
   tiering_migration      Figs. 16-17 migration x placement
+  serve_scheduler_bench  continuous batching: static KV split vs tiering
   kernel_bench           Pallas kernel microbenches
   roofline               per-cell roofline from the dry-run artifacts
 """
@@ -23,6 +24,7 @@ MODULES = [
     "flexgen_serve",
     "oli_hpc",
     "tiering_migration",
+    "serve_scheduler_bench",
     "kernel_bench",
     "roofline",
 ]

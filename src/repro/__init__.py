@@ -2,5 +2,27 @@
 
 Reproduction + TPU adaptation of "Exploring and Evaluating Real-world
 CXL: Use Cases and System Adoption" (IPDPS'25).  See DESIGN.md.
+
+Subpackages (imported lazily so ``import repro`` stays light):
+  core      tier models, placement policies, cost model, migration
+  serving   continuous-batching paged-KV serving subsystem
+  offload   one-shot ZeRO-Offload / FlexGen engines
 """
-__version__ = "1.0.0"
+import importlib
+
+__version__ = "1.1.0"
+
+_LAZY_SUBPACKAGES = ("core", "serving", "offload", "models", "kernels",
+                     "configs", "data", "optim", "checkpoint")
+
+
+def __getattr__(name):
+    if name in _LAZY_SUBPACKAGES:
+        mod = importlib.import_module(f".{name}", __name__)
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY_SUBPACKAGES))

@@ -41,13 +41,36 @@ TIER_TO_MEMORY_KIND = {
 }
 
 
-def _device_sharding(memory_kind: str, device: Optional[jax.Device] = None):
+# Logical kinds the placement layer accepts.  On an accelerator host all
+# three are distinct physical memories; on a single-memory host (CPU CI)
+# they are *logical* tiers all backed by the device's default memory, so
+# placement bookkeeping (shares, bytes_on, fast_fraction) still works and
+# the same code places physically on TPU.
+LOGICAL_KINDS = ("device", "pinned_host", "unpinned_host")
+
+
+def physical_memory_kinds(device: Optional[jax.Device] = None) -> List[str]:
     device = device or jax.devices()[0]
+    return [m.kind for m in device.addressable_memories()]
+
+
+def sharding_for_kind(memory_kind: str,
+                      device: Optional[jax.Device] = None):
+    """SingleDeviceSharding on `memory_kind`, degrading to the device's
+    default memory when the platform doesn't expose that kind."""
+    device = device or jax.devices()[0]
+    if memory_kind not in physical_memory_kinds(device):
+        memory_kind = device.default_memory().kind
     return jax.sharding.SingleDeviceSharding(device, memory_kind=memory_kind)
 
 
+_device_sharding = sharding_for_kind
+
+
 def available_memory_kinds() -> List[str]:
-    return [m.kind for m in jax.devices()[0].addressable_memories()]
+    """Kinds accepted for placement: the logical tier set plus anything
+    extra the platform physically exposes."""
+    return sorted(set(LOGICAL_KINDS) | set(physical_memory_kinds()))
 
 
 @dataclasses.dataclass

@@ -1,7 +1,14 @@
-"""Serving CLI: batched prefill + decode with tier-aware placement.
+"""Serving CLI: one-shot batch or tier-aware continuous batching.
+
+One-shot (FlexGen-style, statically split KV):
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
         --batch 4 --prompt-len 32 --new-tokens 16 --kv-host-frac 0.5
+
+Continuous batching over the paged, tier-migrating KV pool:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+        --scheduler continuous --policy tiering08 --num-requests 6
 """
 from __future__ import annotations
 
@@ -16,22 +23,22 @@ from ..models import lm
 from ..offload.serve_engine import FlexGenEngine, ServeConfig
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3-8b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--weights-host-frac", type=float, default=0.0,
-                    help="fraction of weights resident on the host tier")
-    ap.add_argument("--kv-host-frac", type=float, default=0.0,
-                    help="fraction of the KV cache on the host tier")
-    args = ap.parse_args(argv)
+def _fraction(name: str):
+    """argparse type: a float that must land in [0, 1]."""
+    def parse(text: str) -> float:
+        try:
+            val = float(text)
+        except ValueError as e:
+            raise argparse.ArgumentTypeError(
+                f"{name} must be a number, got {text!r}") from e
+        if not 0.0 <= val <= 1.0:
+            raise argparse.ArgumentTypeError(
+                f"{name} must be in [0, 1], got {val}")
+        return val
+    return parse
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(
-        args.arch)
-    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+
+def run_oneshot(args, cfg, params) -> None:
     w = args.weights_host_frac
     k = args.kv_host_frac
     eng = FlexGenEngine(cfg, params, ServeConfig(
@@ -45,6 +52,85 @@ def main(argv=None):
           f"decode={st.decode_tok_s:.1f} tok/s "
           f"({st.new_tokens} new tokens/seq; weights {w:.0%} host, "
           f"KV {k:.0%} host)")
+
+
+def run_continuous(args, cfg, params) -> None:
+    from ..serving import ServingConfig, ServingEngine
+
+    sv = ServingConfig(
+        block_tokens=args.block_tokens, max_batch=args.batch,
+        max_context=args.prompt_len + args.new_tokens + args.block_tokens,
+        policy=args.policy, num_blocks=args.num_blocks,
+        fast_block_budget=args.fast_blocks)
+    eng = ServingEngine(cfg, params, sv)
+    rs = np.random.RandomState(0)
+    lens = [args.prompt_len, max(args.prompt_len // 2, 4)]
+    for i in range(args.num_requests):
+        plen = lens[i % len(lens)]
+        eng.submit(rs.randint(0, cfg.vocab, (plen,)).astype(np.int32),
+                   max_new_tokens=args.new_tokens,
+                   arrival_s=i * args.arrival_gap_s)
+    t0 = time.perf_counter()
+    rep = eng.run()
+    wall = time.perf_counter() - t0
+    s = rep.summary
+    print(f"policy={rep.policy} requests={int(s['requests'])} "
+          f"finished={int(s['finished'])} "
+          f"iterations={int(s['iterations'])} wall={wall:.2f} s")
+    print(f"throughput={s['throughput_tok_s']:.1f} tok/s "
+          f"mean_ttft={s['mean_ttft_s']*1e3:.1f} ms "
+          f"mean_decode={s['mean_decode_tok_s']:.1f} tok/s/req "
+          f"preemptions={int(s['preemptions'])}")
+    print(f"kv-pool: blocks={eng.pool.num_blocks} "
+          f"fast_budget={eng.pool.fast_block_budget} "
+          f"mean_used={s['mean_pool_blocks']:.1f} "
+          f"promoted={rep.tiering['promoted']} "
+          f"demoted={rep.tiering['demoted']} "
+          f"hint_faults={rep.tiering['hint_faults']}")
+    for rid, row in rep.per_request:
+        print(f"  req{rid}: prompt={int(row['prompt_tokens'])} "
+              f"new={int(row['new_tokens'])} "
+              f"ttft={row['ttft_s']*1e3:.1f} ms "
+              f"decode={row['decode_tok_s']:.1f} tok/s "
+              f"preempted={int(row['preemptions'])}x")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--weights-host-frac",
+                    type=_fraction("--weights-host-frac"), default=0.0,
+                    help="fraction of weights resident on the host tier")
+    ap.add_argument("--kv-host-frac",
+                    type=_fraction("--kv-host-frac"), default=0.0,
+                    help="fraction of the KV cache on the host tier")
+    ap.add_argument("--scheduler", choices=["oneshot", "continuous"],
+                    default="oneshot",
+                    help="oneshot = FlexGen batch; continuous = "
+                         "paged-KV continuous batching")
+    ap.add_argument("--policy", default="tiering08",
+                    choices=["static", "autonuma", "tiering08", "tpp"],
+                    help="KV-block tiering policy (continuous only)")
+    ap.add_argument("--num-requests", type=int, default=6)
+    ap.add_argument("--arrival-gap-s", type=float, default=0.0)
+    ap.add_argument("--block-tokens", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="total KV pool blocks (default: sized to batch)")
+    ap.add_argument("--fast-blocks", type=int, default=None,
+                    help="fast-tier (HBM-analogue) block budget")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(
+        args.arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    if args.scheduler == "continuous":
+        run_continuous(args, cfg, params)
+    else:
+        run_oneshot(args, cfg, params)
 
 
 if __name__ == "__main__":

@@ -25,9 +25,10 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core import costmodel, objects as obj_mod, tiers as tiers_mod
-from ..core.tiered_array import TieredArray, place_pytree, gather_pytree
+from ..core.tiered_array import place_pytree, gather_pytree
 from ..launch import steps as steps_mod
 from ..models import lm
+from ..serving.kv_pool import TieredKVCache
 
 
 @dataclasses.dataclass
@@ -100,37 +101,27 @@ class FlexGenEngine:
         jax.block_until_ready(logits)
         t1 = time.perf_counter()
 
-        # pad KV buffers for decode and place per policy (block rows over
-        # the sequence axis = page-interleaved KV)
+        # pad KV buffers for decode; tier residency between steps is
+        # delegated to the serving subsystem's KV manager (stash on the
+        # configured shares, restore to device per decode step)
         pad_to = P + sc.max_new_tokens
         for k in ("kv_k", "kv_v"):
             if k in cache:
                 pads = [(0, 0)] * cache[k].ndim
                 pads[3] = (0, pad_to - P)
                 cache[k] = jnp.pad(cache[k], pads)
-        if any(f > 0 for kind, f in sc.kv_shares if kind != "device"):
-            # demonstrate tier residency between steps: KV lives in its
-            # tiers, gathered to device per decode step
-            tiered = {k: TieredArray.place(
-                cache[k].reshape(cache[k].shape[0], -1),
-                sc.kv_shares) for k in ("kv_k", "kv_v") if k in cache}
-        else:
-            tiered = None
+        kv_home = TieredKVCache(sc.kv_shares)
+        kv_home.stash(cache)
 
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         out_tokens = [tok]
         t2 = time.perf_counter()
         for i in range(sc.max_new_tokens - 1):
-            if tiered is not None:
-                for k in tiered:
-                    cache[k] = tiered[k].gather().reshape(cache[k].shape)
+            cache = kv_home.restore(cache)
             logits, cache = self.decode_step(params, cache, tok)
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
             out_tokens.append(tok)
-            if tiered is not None:
-                for k in tiered:
-                    tiered[k] = tiered[k].update(
-                        cache[k].reshape(cache[k].shape[0], -1))
+            kv_home.update(cache)
         jax.block_until_ready(tok)
         t3 = time.perf_counter()
         return ServeStats(B, t1 - t0, t3 - t2, sc.max_new_tokens)

@@ -1,0 +1,31 @@
+"""repro.serving: tier-aware continuous-batching serving subsystem.
+
+The paper's LLM use case (Sec. IV-B) made online: a paged KV block
+pool whose blocks live on memory tiers (kv_pool), §VI tiering runtimes
+promoting hot blocks under a capacity budget (tiering), a
+continuous-batching scheduler with admission control and
+preemption-by-recompute (scheduler), a paged decode engine over the
+Pallas decode-attention kernel (engine), and request/pool/migration
+metrics (metrics).
+"""
+from .kv_pool import (FAST_KIND, KVBlock, KVBlockSpec, PagedKVPool,
+                      PoolExhausted, TieredKVCache, spec_from_config)
+from .tiering import (KVBlockTierer, POLICIES, TieringStats,
+                      make_tiering_policy)
+from .scheduler import (AdmissionPlan, ContinuousBatchingScheduler,
+                        Request, RequestState, SchedulerConfig,
+                        plan_admission)
+from .metrics import PoolSample, RequestMetrics, ServingMetrics
+from .engine import (ServingConfig, ServingEngine, ServingReport,
+                     check_paged_support)
+
+__all__ = [
+    "FAST_KIND", "KVBlock", "KVBlockSpec", "PagedKVPool", "PoolExhausted",
+    "TieredKVCache", "spec_from_config",
+    "KVBlockTierer", "POLICIES", "TieringStats", "make_tiering_policy",
+    "AdmissionPlan", "ContinuousBatchingScheduler", "Request",
+    "RequestState", "SchedulerConfig", "plan_admission",
+    "PoolSample", "RequestMetrics", "ServingMetrics",
+    "ServingConfig", "ServingEngine", "ServingReport",
+    "check_paged_support",
+]

@@ -1,0 +1,387 @@
+"""ServingEngine: continuous batching over the paged, tiered KV pool.
+
+The decode path is rebuilt around the block table instead of the
+monolithic cache ``lm.decode_step`` uses: each iteration the running
+requests' blocks are gathered from their tiers (async device_put, the
+TieredArray discipline), the new token's K/V is scattered at each
+sequence's own length, and attention runs through the Pallas
+``kernels.decode_attention`` kernel — whose per-sequence ``kv_len``
+masking is exactly what ragged continuous batches need.  Per-sequence
+positions feed RoPE/learned embeddings, so sequences of different
+lengths decode in one batch (the thing the one-shot FlexGenEngine
+cannot do).
+
+Supported configs: attention-only patterns (optionally MoE) with
+rope/learned/none positions and bf16 KV — the serving family of the
+paper's Sec. IV-B study.  Hybrid SSM/RWKV decode stays on the one-shot
+engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+from ..launch import steps as steps_mod
+from ..models import modules as M
+from .kv_pool import FAST_KIND, PagedKVPool, spec_from_config
+from .metrics import ServingMetrics
+from .scheduler import (ContinuousBatchingScheduler, Request,
+                        RequestState, SchedulerConfig, plan_admission)
+from .tiering import KVBlockTierer
+
+
+def check_paged_support(cfg: ModelConfig) -> None:
+    """Raise if the config can't run on the paged decode path."""
+    for spec in cfg.pattern:
+        if spec.kind != "attn" or spec.cross_attn:
+            raise ValueError(
+                f"{cfg.name}: paged serving supports attention-only "
+                f"patterns (got {spec.kind}"
+                f"{'+cross' if spec.cross_attn else ''}); use the "
+                f"one-shot FlexGenEngine for hybrid architectures")
+    if cfg.encoder_layers:
+        raise ValueError(f"{cfg.name}: encoder-decoder serving is not "
+                         "paged; use FlexGenEngine")
+    if cfg.kv_cache_dtype != "bf16":
+        raise ValueError(f"{cfg.name}: paged pool stores bf16 KV "
+                         f"(got {cfg.kv_cache_dtype})")
+    if cfg.pos_emb not in ("rope", "learned", "none"):
+        raise ValueError(f"{cfg.name}: unsupported pos_emb "
+                         f"{cfg.pos_emb!r} for paged decode")
+
+
+# ---------------------------------------------------------------------- #
+# Paged decode step (jitted once per engine; B and S_pad are static).     #
+# ---------------------------------------------------------------------- #
+def _paged_unit_fwd(cfg: ModelConfig, up, x, kv_k, kv_v, lengths,
+                    block_k: int):
+    """One repeating unit over the gathered block table.
+
+    x: (B, 1, D); kv_k/kv_v: (n_attn, B, S_pad, KV, hd); lengths: (B,).
+    Returns (x, new_k, new_v) with new_k/new_v (n_attn, B, KV, hd).
+    """
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    barange = jnp.arange(B)
+    new_ks, new_vs = [], []
+    i_attn = 0
+    for li, spec in enumerate(cfg.pattern):
+        lp = up["layers"][li]
+        h = M.apply_norm(cfg.norm, lp["norm1"], x)
+        ap = lp["attn"]
+        q = h @ ap["wq"]
+        k = h @ ap["wk"]
+        v = h @ ap["wv"]
+        if "bq" in ap:
+            q = q + ap["bq"]
+        if "bk" in ap:
+            k = k + ap["bk"]
+            v = v + ap["bv"]
+        q = q.reshape(B, 1, H, hd)
+        k = k.reshape(B, 1, KV, hd)
+        v = v.reshape(B, 1, KV, hd)
+        if cfg.pos_emb == "rope":
+            pos = lengths[:, None]                     # per-seq positions
+            q = M.apply_rope(q, pos, cfg.rope_theta, cfg.rotary_pct)
+            k = M.apply_rope(k, pos, cfg.rope_theta, cfg.rotary_pct)
+        ck, cv = kv_k[i_attn], kv_v[i_attn]            # (B, S_pad, KV, hd)
+        k_tok = k[:, 0].astype(ck.dtype)
+        v_tok = v[:, 0].astype(cv.dtype)
+        ck = ck.at[barange, lengths].set(k_tok)
+        cv = cv.at[barange, lengths].set(v_tok)
+        att = ops.decode_attention(q[:, 0], ck, cv, lengths + 1,
+                                   block_k=block_k)    # (B, H, hd)
+        x = x + (att.reshape(B, 1, H * hd) @ ap["wo"])
+
+        h = M.apply_norm(cfg.norm, lp["norm2"], x)
+        if spec.moe:
+            out, _ = M.moe_fwd(lp["moe"], h, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor,
+                               n_groups=cfg.moe_groups, act=cfg.act)
+        else:
+            out = M.mlp_fwd(lp["mlp"], h, cfg.act)
+        x = x + out
+        new_ks.append(k_tok)
+        new_vs.append(v_tok)
+        i_attn += 1
+    return x, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+def _paged_decode(cfg: ModelConfig, block_k: int, params, tokens,
+                  kv_k, kv_v, lengths):
+    """tokens (B, 1) int32; kv_k/kv_v (U, n_attn, B, S_pad, KV, hd);
+    lengths (B,) — tokens already cached per sequence.
+
+    Returns (logits (B, V), new_k, new_v (U, n_attn, B, KV, hd))."""
+    x = params["embed"][tokens[:, 0]].astype(jnp.bfloat16)[:, None]
+    if cfg.pos_emb == "learned":
+        x = x + params["pos_emb"][lengths].astype(x.dtype)[:, None]
+
+    def body(carry, xs):
+        up, kk, vv = xs
+        h, nk, nv = _paged_unit_fwd(cfg, up, carry, kk, vv, lengths,
+                                    block_k)
+        return h, (nk, nv)
+
+    x, (new_k, new_v) = lax.scan(body, x, (params["units"], kv_k, kv_v))
+    x = M.apply_norm(cfg.norm, params["final_norm"], x)
+    W = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, 0] @ W.T).astype(jnp.float32)
+    return logits, new_k, new_v
+
+
+# ---------------------------------------------------------------------- #
+# Engine                                                                 #
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass
+class ServingConfig:
+    block_tokens: int = 16
+    max_batch: int = 4
+    max_context: int = 128            # prompt + generated cap per request
+    policy: str = "tiering08"         # static | autonuma | tiering08 | tpp
+    num_blocks: Optional[int] = None  # default: max_batch * blocks/seq
+    fast_block_budget: Optional[int] = None   # default: half the pool
+    slow_kind: str = "pinned_host"
+    max_prefill_per_iter: int = 2
+    migrate_every: int = 1
+    # optional cost-model sizing: overrides num_blocks/fast budget/batch
+    device_budget_bytes: Optional[int] = None
+    host_budget_bytes: Optional[int] = None
+
+
+@dataclasses.dataclass
+class ServingReport:
+    summary: Dict[str, float]
+    per_request: List[Tuple[int, Dict[str, float]]]
+    tiering: Dict[str, int]
+    policy: str
+
+
+class ServingEngine:
+    """Continuous-batching serving over a tier-resident paged KV pool."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 serving: Optional[ServingConfig] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        check_paged_support(cfg)
+        self.cfg = cfg
+        self.sv = sv = serving or ServingConfig()
+        self.clock = clock
+        self.params = params
+        bt = sv.block_tokens
+        self.max_seq_blocks = max(1, math.ceil(sv.max_context / bt))
+        if sv.device_budget_bytes is not None:
+            plan = plan_admission(
+                cfg, bt, sv.max_context, sv.device_budget_bytes,
+                sv.host_budget_bytes or 0, max_batch_cap=sv.max_batch)
+            num_blocks, fast_budget = plan.total_blocks, plan.fast_blocks
+            max_batch = plan.max_batch
+        else:
+            num_blocks = sv.num_blocks or sv.max_batch * self.max_seq_blocks
+            fast_budget = (sv.fast_block_budget
+                           if sv.fast_block_budget is not None
+                           else max(1, num_blocks // 2))
+            max_batch = sv.max_batch
+        self.max_batch = max_batch
+        spec = spec_from_config(cfg, bt)
+        static = sv.policy in ("static", "none", "no_balance")
+        self.pool = PagedKVPool(
+            num_blocks, bt, spec=spec, fast_block_budget=fast_budget,
+            slow_kind=sv.slow_kind, default_kind=sv.slow_kind)
+        self._static_split = static
+        self.tierer = KVBlockTierer(self.pool, sv.policy)
+        self.sched = ContinuousBatchingScheduler(
+            self.pool, SchedulerConfig(
+                max_batch=max_batch,
+                max_prefill_per_iter=sv.max_prefill_per_iter))
+        self.metrics = ServingMetrics()
+        self._prefill = jax.jit(steps_mod.make_prefill_step(cfg))
+        self._decode = jax.jit(functools.partial(_paged_decode, cfg, bt))
+        self._next_rid = 0
+        self._t0 = 0.0
+        self._virtual_skew = 0.0
+        self._step = 0
+
+    # ------------------------------------------------------------------ #
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               arrival_s: float = 0.0) -> int:
+        """Queue one request; returns its request id."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        max_new = min(max_new_tokens,
+                      self.sv.max_context - prompt.shape[0])
+        if max_new <= 0:
+            raise ValueError(
+                f"prompt of {prompt.shape[0]} tokens leaves no room "
+                f"under max_context={self.sv.max_context}")
+        need = self.pool.blocks_for_tokens(prompt.shape[0] + 1)
+        margin = self.sched.cfg.admission_margin_blocks
+        if need + margin > self.pool.num_blocks:
+            raise ValueError(
+                f"prompt needs {need} blocks (+{margin} margin) but the "
+                f"pool only has {self.pool.num_blocks}")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, prompt=prompt, max_new_tokens=max_new,
+                      arrival_s=arrival_s)
+        self.sched.submit(req)
+        self.metrics.on_submit(rid, arrival_s, prompt.shape[0])
+        return rid
+
+    def submit_trace(self, prompts: Sequence[np.ndarray],
+                     max_new_tokens: int,
+                     arrivals: Optional[Sequence[float]] = None
+                     ) -> List[int]:
+        arrivals = arrivals or [0.0] * len(prompts)
+        return [self.submit(p, max_new_tokens, a)
+                for p, a in sorted(zip(prompts, arrivals),
+                                   key=lambda pa: pa[1])]
+
+    # ------------------------------------------------------------------ #
+    def _alloc_kind(self) -> Optional[str]:
+        """Per-block allocation kind (passed as a callable to the pool).
+
+        Static policy: a fixed split — fast at the budget's share of the
+        pool, interleaved per block, never migrated (the one-shot
+        engine's kv_shares, online).  Dynamic policies: first-touch in
+        the slow tier; promotion earns fast residency from observed
+        heat.
+        """
+        pool = self.pool
+        if self._static_split:
+            target = pool.fast_block_budget / max(pool.num_blocks, 1)
+            if pool.fast_used() < pool.fast_block_budget and \
+                    pool.fast_used() < target * (pool.used_block_count()
+                                                 + 1):
+                return FAST_KIND
+        return None           # pool default (slow kind)
+
+    def _do_prefill(self, req: Request, now: float) -> None:
+        toks = req.prefill_tokens()[None]          # (1, L)
+        L = toks.shape[1]
+        need = self.pool.blocks_for_tokens(L + 1)
+        if not self.pool.can_alloc(need):
+            self.sched.preempt_for_blocks(need, protect=req)
+        if req.state is not RequestState.RUNNING:
+            return                     # pool too tight: preempted itself
+        logits, cache = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(toks)})
+        self.pool.write_prefill(req.rid, cache["kv_k"][:, :, 0],
+                                cache["kv_v"][:, :, 0], L,
+                                kind=self._alloc_kind)
+        self.metrics.on_admit(req.rid, now)
+        tok = int(np.asarray(jnp.argmax(logits[0])))
+        req.out_tokens.append(tok)
+        self.metrics.on_token(req.rid, self._now())
+        if req.done:
+            self.sched.finish(req)
+            self.metrics.on_finish(req.rid, self._now(), req.preemptions)
+
+    def _ensure_tail_blocks(self) -> None:
+        """Every running request needs a block for its next KV write."""
+        for req in list(self.sched.running):
+            if req.state is not RequestState.RUNNING:
+                continue               # evicted by an earlier iteration
+            n = self.pool.seq_len[req.rid]
+            if n % self.pool.block_tokens != 0:
+                continue
+            if n // self.pool.block_tokens < len(
+                    self.pool.table[req.rid]):
+                continue
+            if not self.pool.can_alloc(1):
+                self.sched.preempt_for_blocks(1, protect=req)
+            if req.state is not RequestState.RUNNING:
+                continue               # preempted itself
+            self.pool.alloc(req.rid, 1, kind=self._alloc_kind)
+
+    def _decode_iteration(self, now: float) -> None:
+        batch = list(self.sched.running)
+        if not batch:
+            return
+        B = self.max_batch
+        kv_ks, kv_vs, toks, lens = [], [], [], []
+        for req in batch:
+            k, v = self.pool.gather_seq(req.rid, self.max_seq_blocks)
+            kv_ks.append(k)
+            kv_vs.append(v)
+            toks.append(req.out_tokens[-1])
+            lens.append(self.pool.seq_len[req.rid])
+        n_pad = B - len(batch)
+        if n_pad:                      # fixed batch shape: one compile
+            z = jnp.zeros_like(kv_ks[0])
+            kv_ks.extend([z] * n_pad)
+            kv_vs.extend([z] * n_pad)
+            toks.extend([0] * n_pad)
+            lens.extend([0] * n_pad)
+        kv_k = jnp.stack(kv_ks, axis=2)    # (U, n_attn, B, S_pad, KV, hd)
+        kv_v = jnp.stack(kv_vs, axis=2)
+        tokens = jnp.asarray(toks, jnp.int32)[:, None]
+        lengths = jnp.asarray(lens, jnp.int32)
+        logits, new_k, new_v = self._decode(self.params, tokens,
+                                            kv_k, kv_v, lengths)
+        next_toks = np.asarray(jnp.argmax(logits, axis=-1))
+        new_k = np.asarray(new_k)          # (U, n_attn, B, KV, hd)
+        new_v = np.asarray(new_v)
+        now_tok = self._now()
+        for i, req in enumerate(batch):
+            self.pool.append_token(req.rid, jnp.asarray(new_k[:, :, i]),
+                                   jnp.asarray(new_v[:, :, i]))
+            self.pool.touch_seq(req.rid, self._step)
+            req.out_tokens.append(int(next_toks[i]))
+            self.metrics.on_token(req.rid, now_tok)
+            if req.done:
+                self.sched.finish(req)
+                self.metrics.on_finish(req.rid, now_tok, req.preemptions)
+
+    # ------------------------------------------------------------------ #
+    def _now(self) -> float:
+        """Trace time: wall clock since run() start plus the virtual
+        fast-forward over idle arrival gaps.  Every metrics timestamp
+        uses this base so TTFT/latency stay comparable to the synthetic
+        ``arrival_s`` values."""
+        return self.clock() - self._t0 + self._virtual_skew
+
+    def run(self, max_iterations: int = 10_000) -> ServingReport:
+        """Drive the trace to completion; returns the serving report."""
+        self._t0 = self.clock()
+        self._virtual_skew = 0.0
+        while self.sched.active and self._step < max_iterations:
+            now = self._now()
+            admitted = self.sched.admit(now_s=now)
+            if not admitted and not self.sched.running:
+                # idle: fast-forward the arrival clock (synthetic traces)
+                pending = [r.arrival_s for r in self.sched.waiting]
+                skip = max(min(pending) - now, 0.0) if pending else 0.0
+                if skip <= 0.0:
+                    raise RuntimeError(
+                        "scheduler stalled: waiting requests cannot be "
+                        "admitted into an empty pool (pool too small)")
+                self._virtual_skew += skip
+                continue
+            for req in admitted:
+                self._do_prefill(req, now)
+            self._ensure_tail_blocks()
+            self._decode_iteration(now)
+            if self.sv.migrate_every and \
+                    self._step % self.sv.migrate_every == 0:
+                self.tierer.step(
+                    [r.rid for r in self.sched.running], self._step)
+            self.metrics.on_iteration(
+                self._step, self.pool.used_block_count(),
+                self.pool.fast_used(), len(self.sched.running),
+                len(self.sched.waiting))
+            self._step += 1
+        tstats = self.tierer.stats.as_dict()
+        return ServingReport(
+            summary=self.metrics.summary(tstats),
+            per_request=self.metrics.per_request_rows(),
+            tiering=tstats, policy=self.tierer.policy_name)

@@ -1,0 +1,440 @@
+"""Paged KV-cache block pool with tier-resident blocks (vLLM-style).
+
+The serving analogue of the paper's Sec. IV-B finding: the KV cache is
+the object whose capacity growth pays for CXL-class tiers, and it is
+accessed at *block* granularity (decode streams the whole cache, but a
+request's blocks go cold the moment the request finishes or is
+preempted).  The pool therefore manages fixed-size token blocks:
+
+  * a block holds ``block_tokens`` tokens of K and V for every attention
+    layer of the model: k/v each ``(U, n_attn, block_tokens, KV, hd)``;
+  * each block is resident in one JAX memory kind ("device" = HBM
+    analogue, "pinned_host"/"unpinned_host" = the CXL-class capacity
+    tiers), moved with ``migrate`` — the mechanism tiering.py drives;
+  * a block table maps ``seq_id -> [block ids]`` (logical order);
+  * per-block access-heat counters (touch count + last-touch step) feed
+    the promotion/demotion policies adapted from ``core.migration``.
+
+The pool also runs in *metadata-only* mode (``spec=None``): alloc/free/
+migrate bookkeeping without array payloads, which is what the
+trace-driven scheduler benchmark and the pure-logic tests use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+FAST_KIND = "device"
+
+
+@dataclasses.dataclass(frozen=True)
+class KVBlockSpec:
+    """Shape of one pool block (set from the model config)."""
+
+    n_units: int
+    n_attn: int          # attention layers per unit
+    block_tokens: int
+    n_kv: int
+    head_dim: int
+    dtype: str = "bfloat16"
+
+    @property
+    def kv_shape(self) -> Tuple[int, ...]:
+        return (self.n_units, self.n_attn, self.block_tokens, self.n_kv,
+                self.head_dim)
+
+    @property
+    def nbytes(self) -> int:
+        # K and V
+        import jax.numpy as jnp
+        item = jnp.dtype(self.dtype).itemsize
+        return 2 * int(np.prod(self.kv_shape)) * item
+
+
+@dataclasses.dataclass
+class KVBlock:
+    """One physical block: payload + residency + heat."""
+
+    bid: int
+    kind: str                      # current memory kind
+    seq_id: Optional[int] = None   # owner sequence (None = free)
+    logical_idx: int = -1          # position in the owner's block table
+    k: Optional[object] = None     # jax.Array (U, n_attn, bt, KV, hd)
+    v: Optional[object] = None
+    touch_count: int = 0
+    last_touch_step: int = -(10 ** 9)
+
+    @property
+    def free(self) -> bool:
+        return self.seq_id is None
+
+
+class PoolExhausted(Exception):
+    """No free blocks left — the scheduler must preempt."""
+
+
+@dataclasses.dataclass
+class PoolCounters:
+    allocs: int = 0
+    frees: int = 0
+    promoted: int = 0
+    demoted: int = 0
+    migrated_bytes: int = 0
+    defrags: int = 0
+
+
+class PagedKVPool:
+    """Fixed-size paged KV pool over tiered memory kinds.
+
+    ``num_blocks`` bounds total KV capacity; ``fast_block_budget`` bounds
+    how many blocks may reside on the fast kind at once (the HBM-analogue
+    capacity budget from core.tiers / the cost model).
+    """
+
+    def __init__(self, num_blocks: int, block_tokens: int,
+                 spec: Optional[KVBlockSpec] = None,
+                 fast_block_budget: Optional[int] = None,
+                 slow_kind: str = "pinned_host",
+                 default_kind: Optional[str] = None):
+        if num_blocks <= 0:
+            raise ValueError("num_blocks must be positive")
+        if block_tokens <= 0:
+            raise ValueError("block_tokens must be positive")
+        if spec is not None and spec.block_tokens != block_tokens:
+            raise ValueError("spec.block_tokens != pool block_tokens")
+        self.block_tokens = block_tokens
+        self.spec = spec
+        self.slow_kind = slow_kind
+        self.default_kind = default_kind or slow_kind
+        self.fast_block_budget = (num_blocks if fast_block_budget is None
+                                  else fast_block_budget)
+        self.blocks: List[KVBlock] = [
+            KVBlock(bid=i, kind=self.default_kind)
+            for i in range(num_blocks)]
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self.table: Dict[int, List[int]] = {}   # seq_id -> [bid]
+        self.seq_len: Dict[int, int] = {}       # seq_id -> tokens written
+        self.counters = PoolCounters()
+
+    # ------------------------------------------------------------------ #
+    # capacity accounting                                                #
+    # ------------------------------------------------------------------ #
+    @property
+    def num_blocks(self) -> int:
+        return len(self.blocks)
+
+    def free_block_count(self) -> int:
+        return len(self._free)
+
+    def used_block_count(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def blocks_on(self, kind: str) -> int:
+        return sum(1 for b in self.blocks if not b.free and b.kind == kind)
+
+    def fast_used(self) -> int:
+        return self.blocks_on(FAST_KIND)
+
+    def occupancy(self) -> float:
+        return self.used_block_count() / self.num_blocks
+
+    def blocks_for_tokens(self, n_tokens: int) -> int:
+        return max(1, math.ceil(n_tokens / self.block_tokens))
+
+    def block_nbytes(self) -> int:
+        return self.spec.nbytes if self.spec is not None else 1
+
+    # ------------------------------------------------------------------ #
+    # alloc / free                                                       #
+    # ------------------------------------------------------------------ #
+    def can_alloc(self, n_blocks: int) -> bool:
+        return len(self._free) >= n_blocks
+
+    def alloc(self, seq_id: int, n_blocks: int = 1,
+              kind=None) -> List[int]:
+        """Append ``n_blocks`` fresh blocks to ``seq_id``'s table.
+
+        ``kind`` may be a memory-kind string, ``None`` (pool default),
+        or a zero-arg callable evaluated per block — how a static-split
+        allocator interleaves kinds at block granularity.
+        """
+        if n_blocks > len(self._free):
+            raise PoolExhausted(
+                f"need {n_blocks} blocks, {len(self._free)} free")
+        tbl = self.table.setdefault(seq_id, [])
+        self.seq_len.setdefault(seq_id, 0)
+        out = []
+        for _ in range(n_blocks):
+            k = kind() if callable(kind) else kind
+            bid = self._free.pop()
+            b = self.blocks[bid]
+            b.seq_id = seq_id
+            b.logical_idx = len(tbl)
+            b.kind = k or self.default_kind
+            b.touch_count = 0
+            b.last_touch_step = -(10 ** 9)
+            tbl.append(bid)
+            out.append(bid)
+            self.counters.allocs += 1
+        return out
+
+    def free_seq(self, seq_id: int) -> int:
+        """Release every block of a sequence; returns #blocks freed."""
+        tbl = self.table.pop(seq_id, [])
+        self.seq_len.pop(seq_id, None)
+        for bid in tbl:
+            b = self.blocks[bid]
+            b.seq_id = None
+            b.logical_idx = -1
+            b.k = b.v = None
+            self._free.append(bid)
+            self.counters.frees += 1
+        return len(tbl)
+
+    def seq_blocks(self, seq_id: int) -> List[KVBlock]:
+        return [self.blocks[bid] for bid in self.table.get(seq_id, [])]
+
+    # ------------------------------------------------------------------ #
+    # heat                                                               #
+    # ------------------------------------------------------------------ #
+    def touch_seq(self, seq_id: int, step: int) -> None:
+        """Decode reads the whole block table of a sequence each step."""
+        for bid in self.table.get(seq_id, []):
+            b = self.blocks[bid]
+            b.touch_count += 1
+            b.last_touch_step = step
+
+    # ------------------------------------------------------------------ #
+    # payload I/O (data mode)                                            #
+    # ------------------------------------------------------------------ #
+    def _sharding(self, kind: str):
+        from ..core.tiered_array import sharding_for_kind
+        return sharding_for_kind(kind)
+
+    def write_block(self, bid: int, k, v) -> None:
+        """Place (k, v) payloads on the block's current kind."""
+        if self.spec is None:
+            return
+        import jax
+        b = self.blocks[bid]
+        sh = self._sharding(b.kind)
+        b.k = jax.device_put(k, sh)
+        b.v = jax.device_put(v, sh)
+
+    def write_prefill(self, seq_id: int, kv_k, kv_v, n_tokens: int,
+                      kind: Optional[str] = None) -> None:
+        """Split a contiguous prefill cache into this sequence's blocks.
+
+        kv_k/kv_v: (U, n_attn, n_tokens, KV, hd) — batch already squeezed.
+        Allocates exactly the blocks the tokens need, on ``kind``.
+        """
+        bt = self.block_tokens
+        n_blocks = self.blocks_for_tokens(n_tokens)
+        pad = n_blocks * bt - n_tokens
+        if self.spec is not None and pad:
+            import jax.numpy as jnp
+            pads = [(0, 0)] * kv_k.ndim
+            pads[2] = (0, pad)
+            kv_k = jnp.pad(kv_k, pads)
+            kv_v = jnp.pad(kv_v, pads)
+        bids = self.alloc(seq_id, n_blocks, kind=kind)
+        for i, bid in enumerate(bids):
+            if self.spec is not None:
+                self.write_block(bid, kv_k[:, :, i * bt:(i + 1) * bt],
+                                 kv_v[:, :, i * bt:(i + 1) * bt])
+        self.seq_len[seq_id] = n_tokens
+
+    def append_token(self, seq_id: int, k_tok, v_tok) -> None:
+        """Write one new token's (k, v) at the tail of the sequence.
+
+        k_tok/v_tok: (U, n_attn, KV, hd).  The caller must have allocated
+        a tail block when ``seq_len % block_tokens == 0``.
+        """
+        n = self.seq_len[seq_id]
+        tbl = self.table[seq_id]
+        blk_idx, off = divmod(n, self.block_tokens)
+        if blk_idx >= len(tbl):
+            raise PoolExhausted(
+                f"seq {seq_id}: token {n} has no tail block")
+        if self.spec is not None:
+            import jax.numpy as jnp
+            b = self.blocks[tbl[blk_idx]]
+            if b.k is None:            # fresh tail block
+                b.k = jnp.zeros(self.spec.kv_shape, dtype=self.spec.dtype)
+                b.v = jnp.zeros(self.spec.kv_shape, dtype=self.spec.dtype)
+            b.k = b.k.at[:, :, off].set(k_tok.astype(b.k.dtype))
+            b.v = b.v.at[:, :, off].set(v_tok.astype(b.v.dtype))
+            sh = self._sharding(b.kind)
+            import jax
+            b.k = jax.device_put(b.k, sh)
+            b.v = jax.device_put(b.v, sh)
+        self.seq_len[seq_id] = n + 1
+
+    def gather_seq(self, seq_id: int, pad_blocks: int):
+        """Contiguous (k, v) on the fast kind, padded to ``pad_blocks``.
+
+        Returns (k, v) of shape (U, n_attn, pad_blocks*bt, KV, hd).  All
+        block transfers are dispatched first (device_put is async) so
+        host->device DMA of later blocks overlaps earlier concat work —
+        the TieredArray.gather discipline.
+        """
+        import jax
+        import jax.numpy as jnp
+        assert self.spec is not None, "gather_seq needs a data-mode pool"
+        dev = self._sharding(FAST_KIND)
+        tbl = self.table.get(seq_id, [])
+        zero = None
+        ks, vs = [], []
+        for bid in tbl:
+            b = self.blocks[bid]
+            if b.k is None:            # allocated tail block, not written
+                if zero is None:
+                    zero = jnp.zeros(self.spec.kv_shape,
+                                     dtype=self.spec.dtype)
+                ks.append(zero)
+                vs.append(zero)
+            else:
+                ks.append(jax.device_put(b.k, dev))
+                vs.append(jax.device_put(b.v, dev))
+        n_pad = pad_blocks - len(tbl)
+        if n_pad < 0:
+            raise ValueError(f"seq {seq_id} has {len(tbl)} blocks "
+                             f"> pad_blocks={pad_blocks}")
+        if n_pad:
+            z = jnp.zeros(self.spec.kv_shape, dtype=self.spec.dtype)
+            ks.extend([z] * n_pad)
+            vs.extend([z] * n_pad)
+        if not ks:
+            shape = list(self.spec.kv_shape)
+            shape[2] = pad_blocks * self.block_tokens
+            z = jnp.zeros(tuple(shape), dtype=self.spec.dtype)
+            return z, z
+        return jnp.concatenate(ks, axis=2), jnp.concatenate(vs, axis=2)
+
+    # ------------------------------------------------------------------ #
+    # migration                                                          #
+    # ------------------------------------------------------------------ #
+    def migrate(self, bid: int, kind: str) -> bool:
+        """Move one block to ``kind``; returns False if it's a no-op."""
+        b = self.blocks[bid]
+        if b.free or b.kind == kind:
+            return False
+        was_fast = b.kind == FAST_KIND
+        if kind == FAST_KIND and not was_fast:
+            if self.fast_used() >= self.fast_block_budget:
+                return False
+            self.counters.promoted += 1
+        elif was_fast and kind != FAST_KIND:
+            self.counters.demoted += 1
+        b.kind = kind
+        self.counters.migrated_bytes += self.block_nbytes()
+        if self.spec is not None and b.k is not None:
+            import jax
+            sh = self._sharding(kind)
+            b.k = jax.device_put(b.k, sh)
+            b.v = jax.device_put(b.v, sh)
+        return True
+
+    # ------------------------------------------------------------------ #
+    # defrag                                                             #
+    # ------------------------------------------------------------------ #
+    def defrag(self) -> int:
+        """Compact live blocks to the lowest physical ids.
+
+        After long run with churn, live blocks scatter across the id
+        space; compaction keeps each sequence's physical blocks
+        contiguous and in logical order (so a future DMA engine can use
+        strided descriptors).  Payloads and residency move with the
+        block.  Returns the number of blocks relocated.
+        """
+        live: List[KVBlock] = []
+        for seq_id in sorted(self.table):
+            live.extend(self.blocks[bid] for bid in self.table[seq_id])
+        moved = 0
+        new_blocks = [KVBlock(bid=i, kind=self.default_kind)
+                      for i in range(self.num_blocks)]
+        new_table: Dict[int, List[int]] = {s: [] for s in self.table}
+        for i, old in enumerate(live):
+            nb = new_blocks[i]
+            if old.bid != i:
+                moved += 1
+            nb.kind = old.kind
+            nb.seq_id = old.seq_id
+            nb.logical_idx = old.logical_idx
+            nb.k, nb.v = old.k, old.v
+            nb.touch_count = old.touch_count
+            nb.last_touch_step = old.last_touch_step
+            new_table[old.seq_id].append(i)
+        self.blocks = new_blocks
+        self.table = new_table
+        self._free = list(range(self.num_blocks - 1, len(live) - 1, -1))
+        self.counters.defrags += 1
+        return moved
+
+
+# ---------------------------------------------------------------------- #
+# TieredKVCache: whole-cache tier residency for the one-shot engine.      #
+# ---------------------------------------------------------------------- #
+class TieredKVCache:
+    """Static-split KV residency for FlexGenEngine (one-shot path).
+
+    Owns the tier placement of a contiguous decode cache between steps:
+    ``stash`` writes the cache back to its tier shares, ``restore``
+    materializes it on device.  This is the degenerate single-request
+    case of the paged pool (one 'block' per share span), kept so the
+    one-shot engine and the paged engine share one KV-management home.
+    """
+
+    def __init__(self, shares: Sequence[Tuple[str, float]],
+                 keys: Sequence[str] = ("kv_k", "kv_v")):
+        self.shares = list(shares)
+        self.keys = list(keys)
+        self._tiered: Dict[str, object] = {}
+
+    @property
+    def offloaded(self) -> bool:
+        return any(f > 0 for kind, f in self.shares if kind != FAST_KIND)
+
+    def stash(self, cache: Dict[str, object]) -> None:
+        """Place the cache's KV buffers across the configured shares."""
+        from ..core.tiered_array import TieredArray
+        if not self.offloaded:
+            return
+        for key in self.keys:
+            if key in cache:
+                arr = cache[key]
+                self._tiered[key] = TieredArray.place(
+                    arr.reshape(arr.shape[0], -1), self.shares)
+
+    def restore(self, cache: Dict[str, object]) -> Dict[str, object]:
+        """Materialize tier-resident KV back into the cache dict."""
+        if not self.offloaded:
+            return cache
+        for key, ta in self._tiered.items():
+            cache[key] = ta.gather().reshape(cache[key].shape)
+        return cache
+
+    def update(self, cache: Dict[str, object]) -> None:
+        """Write a stepped cache back, preserving placement."""
+        if not self.offloaded:
+            return
+        for key in self._tiered:
+            self._tiered[key] = self._tiered[key].update(
+                cache[key].reshape(cache[key].shape[0], -1))
+
+    def bytes_on(self, kind: str) -> int:
+        return sum(ta.bytes_on(kind) for ta in self._tiered.values())
+
+
+def spec_from_config(cfg, block_tokens: int) -> KVBlockSpec:
+    """Derive the pool block spec from a ModelConfig (attn layers only)."""
+    n_attn = len(cfg.unit_attn_layers)
+    if n_attn == 0:
+        raise ValueError(f"{cfg.name}: no attention layers to page")
+    dtype = "int8" if cfg.kv_cache_dtype == "int8" else "bfloat16"
+    return KVBlockSpec(n_units=cfg.n_units, n_attn=n_attn,
+                       block_tokens=block_tokens, n_kv=cfg.n_kv,
+                       head_dim=cfg.head_dim, dtype=dtype)

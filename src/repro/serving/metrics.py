@@ -1,0 +1,153 @@
+"""Serving metrics: per-request latency, throughput, pool + migration.
+
+Timestamps are injected by the caller (wall clock in the engine, a
+simulated clock in the trace-driven benchmark), so the same aggregator
+serves both and stays deterministic under test.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    rid: int
+    arrival_s: float = 0.0
+    admitted_s: Optional[float] = None
+    first_token_s: Optional[float] = None
+    finished_s: Optional[float] = None
+    prompt_tokens: int = 0
+    new_tokens: int = 0
+    preemptions: int = 0
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Time to first token (queueing + prefill)."""
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrival_s
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.finished_s is None:
+            return None
+        return self.finished_s - self.arrival_s
+
+    @property
+    def decode_tok_s(self) -> Optional[float]:
+        """Tokens/s over the decode span (first token -> finish)."""
+        if self.finished_s is None or self.first_token_s is None:
+            return None
+        span = self.finished_s - self.first_token_s
+        if self.new_tokens <= 1:
+            return None
+        return (self.new_tokens - 1) / max(span, 1e-9)
+
+
+@dataclasses.dataclass
+class PoolSample:
+    step: int
+    used_blocks: int
+    fast_blocks: int
+    running: int
+    waiting: int
+
+
+class ServingMetrics:
+    """Aggregates request lifecycles, pool occupancy, and migration."""
+
+    def __init__(self):
+        self.requests: Dict[int, RequestMetrics] = {}
+        self.samples: List[PoolSample] = []
+        self.iterations = 0
+        self.prefills = 0
+        self.decode_steps = 0
+        self.decode_tokens = 0
+        self.start_s: Optional[float] = None
+        self.end_s: Optional[float] = None
+
+    # ------------------------------------------------------------------ #
+    def on_submit(self, rid: int, arrival_s: float,
+                  prompt_tokens: int) -> None:
+        self.requests[rid] = RequestMetrics(
+            rid=rid, arrival_s=arrival_s, prompt_tokens=prompt_tokens)
+        if self.start_s is None or arrival_s < self.start_s:
+            self.start_s = arrival_s
+
+    def on_admit(self, rid: int, now_s: float) -> None:
+        r = self.requests[rid]
+        if r.admitted_s is None:      # keep the first admission (TTFT)
+            r.admitted_s = now_s
+        self.prefills += 1
+
+    def on_token(self, rid: int, now_s: float) -> None:
+        r = self.requests[rid]
+        if r.first_token_s is None:
+            r.first_token_s = now_s
+        r.new_tokens += 1
+        self.decode_tokens += 1
+
+    def on_finish(self, rid: int, now_s: float, preemptions: int) -> None:
+        r = self.requests[rid]
+        r.finished_s = now_s
+        r.preemptions = preemptions
+        if self.end_s is None or now_s > self.end_s:
+            self.end_s = now_s
+
+    def on_iteration(self, step: int, used_blocks: int, fast_blocks: int,
+                     running: int, waiting: int) -> None:
+        self.iterations += 1
+        if running:
+            self.decode_steps += 1
+        self.samples.append(PoolSample(step, used_blocks, fast_blocks,
+                                       running, waiting))
+
+    # ------------------------------------------------------------------ #
+    def aggregate_decode_tok_s(self) -> float:
+        """New tokens per second of wall time across the whole trace."""
+        if self.start_s is None or self.end_s is None:
+            return 0.0
+        return self.decode_tokens / max(self.end_s - self.start_s, 1e-9)
+
+    def mean_occupancy(self) -> float:
+        if not self.samples:
+            return 0.0
+        return sum(s.used_blocks for s in self.samples) / len(self.samples)
+
+    def summary(self, tiering: Optional[Dict[str, int]] = None
+                ) -> Dict[str, float]:
+        done = [r for r in self.requests.values()
+                if r.finished_s is not None]
+        ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
+        toks = [r.decode_tok_s for r in done
+                if r.decode_tok_s is not None]
+        out: Dict[str, float] = {
+            "requests": float(len(self.requests)),
+            "finished": float(len(done)),
+            "iterations": float(self.iterations),
+            "decode_tokens": float(self.decode_tokens),
+            "throughput_tok_s": self.aggregate_decode_tok_s(),
+            "mean_ttft_s": (sum(ttfts) / len(ttfts)) if ttfts else 0.0,
+            "mean_decode_tok_s": (sum(toks) / len(toks)) if toks else 0.0,
+            "mean_pool_blocks": self.mean_occupancy(),
+            "preemptions": float(sum(r.preemptions for r in done)),
+        }
+        if tiering:
+            for k, v in tiering.items():
+                out[f"tiering.{k}"] = float(v)
+        return out
+
+    def per_request_rows(self) -> List[Tuple[int, Dict[str, float]]]:
+        rows = []
+        for rid in sorted(self.requests):
+            r = self.requests[rid]
+            rows.append((rid, {
+                "prompt_tokens": float(r.prompt_tokens),
+                "new_tokens": float(r.new_tokens),
+                "ttft_s": r.ttft_s if r.ttft_s is not None else -1.0,
+                "decode_tok_s": (r.decode_tok_s
+                                 if r.decode_tok_s is not None else -1.0),
+                "preemptions": float(r.preemptions),
+            }))
+        return rows

@@ -1,0 +1,112 @@
+"""Hypothesis compatibility shim for the property tests.
+
+``hypothesis`` is an optional dev dependency.  When it is installed the
+real library is re-exported unchanged; when it is absent, a minimal
+deterministic fallback keeps the property tests *active* (seeded random
+draws over the same strategy surface) instead of skipping them.
+
+Only the strategy combinators this suite uses are implemented:
+integers, floats, sampled_from, one_of, none, booleans, composite.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def example(self, rng):
+            return self._draw(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw(rng)))
+
+        def filter(self, pred, _tries=100):
+            def draw(rng):
+                for _ in range(_tries):
+                    x = self._draw(rng)
+                    if pred(x):
+                        return x
+                raise ValueError("filter predicate never satisfied")
+            return _Strategy(draw)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            # bias toward the endpoints like hypothesis does
+            def draw(rng):
+                r = rng.random()
+                if r < 0.05:
+                    return min_value
+                if r < 0.10:
+                    return max_value
+                return rng.uniform(min_value, max_value)
+            return _Strategy(draw)
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+        @staticmethod
+        def one_of(*strategies):
+            return _Strategy(
+                lambda rng: strategies[rng.randrange(len(strategies))]
+                .example(rng))
+
+        @staticmethod
+        def none():
+            return _Strategy(lambda rng: None)
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def composite(fn):
+            def build(*args, **kwargs):
+                def draw_composite(rng):
+                    return fn(lambda s: s.example(rng), *args, **kwargs)
+                return _Strategy(draw_composite)
+            return build
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._hyp_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_hyp_max_examples",
+                            _DEFAULT_EXAMPLES)
+                for i in range(n):
+                    rng = random.Random(0xC0FFEE + 1000003 * i)
+                    drawn = [s.example(rng) for s in arg_strategies]
+                    kdrawn = {name: s.example(rng)
+                              for name, s in kw_strategies.items()}
+                    fn(*args, *drawn, **kwargs, **kdrawn)
+            # hide the strategy parameters from pytest's fixture
+            # resolution (hypothesis does the same)
+            wrapper.__signature__ = inspect.Signature()
+            if hasattr(wrapper, "__wrapped__"):
+                del wrapper.__wrapped__
+            return wrapper
+        return deco

@@ -59,10 +59,11 @@ def test_elastic_restore_with_sharding(tmp_path):
     """Restore re-shards onto a (trivial) mesh — the elastic path."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.launch.mesh import make_mesh
+
     st = _state()
     save(tmp_path, 1, st)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     shardings = jax.tree.map(
         lambda _: NamedSharding(mesh, P()), _state(1))
     got, _ = restore(tmp_path, _state(1), shardings=shardings)

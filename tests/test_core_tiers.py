@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core import (MemoryTier, assign_streams, interleave_bandwidth,
                         paper_system, tpu_v5e_tiers)

@@ -1,7 +1,7 @@
 """Data pipeline: determinism, sharding partition, O(1) resume."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.data.pipeline import (DataConfig, DataIterator, batch_for_step,
                                  global_batch_for_step)

@@ -1,6 +1,6 @@
 """Placement policies: §V-B selection criteria + plan invariants."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import (DataObject, FirstTouch, ObjectLevelInterleave,
                         TierPreferred, UniformInterleave, paper_system,

@@ -1,0 +1,304 @@
+"""Serving subsystem: pool invariants, scheduler ordering, tiering,
+and paged-decode consistency against the monolithic decode path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.serving import (ContinuousBatchingScheduler, FAST_KIND,
+                           KVBlockTierer, PagedKVPool, PoolExhausted,
+                           Request, RequestState, SchedulerConfig,
+                           ServingConfig, ServingEngine, plan_admission,
+                           spec_from_config)
+
+
+def _meta_pool(num_blocks=16, block_tokens=4, fast_budget=None, **kw):
+    return PagedKVPool(num_blocks, block_tokens,
+                       fast_block_budget=fast_budget, **kw)
+
+
+def _req(rid, plen=6, new=4, arrival=0.0):
+    return Request(rid=rid, prompt=np.zeros(plen, np.int32),
+                   max_new_tokens=new, arrival_s=arrival)
+
+
+# ===================================================================== #
+# Pool: alloc / free / defrag invariants                                #
+# ===================================================================== #
+def test_pool_alloc_free_roundtrip():
+    pool = _meta_pool(8)
+    a = pool.alloc(1, 3)
+    b = pool.alloc(2, 2)
+    assert len(set(a) | set(b)) == 5          # unique physical blocks
+    assert pool.used_block_count() == 5
+    assert pool.free_block_count() == 3
+    assert [pool.blocks[x].logical_idx for x in a] == [0, 1, 2]
+    assert pool.free_seq(1) == 3
+    assert pool.used_block_count() == 2
+    assert 1 not in pool.table
+    # freed blocks are reusable
+    c = pool.alloc(3, 5)
+    assert len(c) == 5
+    with pytest.raises(PoolExhausted):
+        pool.alloc(4, 2)
+
+
+def test_pool_blocks_for_tokens():
+    pool = _meta_pool(8, block_tokens=4)
+    assert pool.blocks_for_tokens(1) == 1
+    assert pool.blocks_for_tokens(4) == 1
+    assert pool.blocks_for_tokens(5) == 2
+
+
+def test_pool_fast_budget_enforced():
+    pool = _meta_pool(8, fast_budget=2)
+    pool.alloc(1, 4)                          # default slow kind
+    bids = pool.table[1]
+    assert pool.migrate(bids[0], FAST_KIND)
+    assert pool.migrate(bids[1], FAST_KIND)
+    assert not pool.migrate(bids[2], FAST_KIND)   # budget full
+    assert pool.fast_used() == 2
+    assert pool.counters.promoted == 2
+    assert pool.migrate(bids[0], "pinned_host")   # demote frees a slot
+    assert pool.counters.demoted == 1
+    assert pool.migrate(bids[2], FAST_KIND)
+
+
+def test_pool_per_block_alloc_kind_callable():
+    pool = _meta_pool(8, fast_budget=8)
+    kinds = iter([FAST_KIND, "pinned_host", FAST_KIND, "pinned_host"])
+    pool.alloc(1, 4, kind=lambda: next(kinds))
+    got = [pool.blocks[b].kind for b in pool.table[1]]
+    assert got == [FAST_KIND, "pinned_host", FAST_KIND, "pinned_host"]
+
+
+def test_pool_defrag_compacts_and_preserves():
+    pool = _meta_pool(12)
+    pool.alloc(1, 3)
+    pool.alloc(2, 4)
+    pool.alloc(3, 2)
+    pool.free_seq(2)                          # hole in the id space
+    seq1, seq3 = list(pool.table[1]), list(pool.table[3])
+    kinds1 = [pool.blocks[b].kind for b in seq1]
+    pool.blocks[seq3[0]].touch_count = 7      # payload metadata survives
+    moved = pool.defrag()
+    assert moved >= 0
+    # live blocks occupy the lowest ids, free list is the suffix
+    live = sorted(bid for tbl in pool.table.values() for bid in tbl)
+    assert live == list(range(5))
+    assert sorted(pool._free) == list(range(5, 12))
+    # logical order and metadata preserved
+    assert [pool.blocks[b].logical_idx for b in pool.table[1]] == [0, 1, 2]
+    assert [pool.blocks[b].kind for b in pool.table[1]] == kinds1
+    assert pool.blocks[pool.table[3][0]].touch_count == 7
+    # allocation still works after compaction
+    pool.alloc(4, 7)
+    with pytest.raises(PoolExhausted):
+        pool.alloc(5, 1)
+
+
+# ===================================================================== #
+# Scheduler: admission + preemption ordering                            #
+# ===================================================================== #
+def test_scheduler_fifo_admission_capped_by_batch():
+    pool = _meta_pool(32)
+    sched = ContinuousBatchingScheduler(pool, SchedulerConfig(
+        max_batch=2, max_prefill_per_iter=4))
+    for i in range(4):
+        sched.submit(_req(i))
+    admitted = sched.admit()
+    assert [r.rid for r in admitted] == [0, 1]     # FIFO, batch-capped
+    assert [r.rid for r in sched.waiting] == [2, 3]
+
+
+def test_scheduler_admission_respects_blocks_and_arrival():
+    pool = _meta_pool(4, block_tokens=4)
+    sched = ContinuousBatchingScheduler(pool, SchedulerConfig(
+        max_batch=4, max_prefill_per_iter=4, admission_margin_blocks=1))
+    sched.submit(_req(0, plen=7))      # needs 2 blocks (+1 margin)
+    sched.submit(_req(1, plen=7, arrival=5.0))
+    admitted = sched.admit(now_s=0.0)
+    assert [r.rid for r in admitted] == [0]        # rid1 hasn't arrived
+    pool.alloc(0, 2)
+    admitted = sched.admit(now_s=10.0)
+    assert admitted == []                          # 2 free < need 2+1
+    pool.free_seq(0)
+    assert [r.rid for r in sched.admit(now_s=10.0)] == [1]
+
+
+def test_scheduler_preemption_lifo_and_readmission_order():
+    pool = _meta_pool(8, block_tokens=4)
+    sched = ContinuousBatchingScheduler(pool, SchedulerConfig(
+        max_batch=3, max_prefill_per_iter=3))
+    for i in range(3):
+        sched.submit(_req(i, plen=6))
+    admitted = sched.admit()
+    assert len(admitted) == 3
+    for r in admitted:
+        pool.alloc(r.rid, 2)
+    sched.submit(_req(3))
+    # demand blocks: latest-admitted (rid2) must be evicted first
+    victims = sched.preempt_for_blocks(5)
+    assert [v.rid for v in victims] == [2, 1]
+    assert all(v.state is RequestState.PREEMPTED for v in victims)
+    assert pool.free_block_count() >= 5
+    # preempted requests sit at the queue FRONT, most recent first,
+    # ahead of the never-admitted rid3
+    assert [r.rid for r in sched.waiting] == [1, 2, 3]
+    assert victims[0].preemptions == 1
+
+
+def test_scheduler_protected_request_evicted_last():
+    pool = _meta_pool(8, block_tokens=4)
+    sched = ContinuousBatchingScheduler(pool, SchedulerConfig(
+        max_batch=2, max_prefill_per_iter=2))
+    for i in range(2):
+        sched.submit(_req(i, plen=6))
+    admitted = sched.admit()
+    for r in admitted:
+        pool.alloc(r.rid, 4)
+    protect = admitted[1]                  # newest would normally go first
+    victims = sched.preempt_for_blocks(4, protect=protect)
+    assert [v.rid for v in victims] == [0]
+    assert protect.state is RequestState.RUNNING
+
+
+# ===================================================================== #
+# Tiering                                                               #
+# ===================================================================== #
+def test_tiering_static_never_migrates():
+    pool = _meta_pool(8, fast_budget=4)
+    pool.alloc(1, 4)
+    tierer = KVBlockTierer(pool, "static")
+    pool.touch_seq(1, 0)
+    assert tierer.step([1], 0) == 0
+    assert pool.fast_used() == 0
+
+
+@pytest.mark.parametrize("policy", ["autonuma", "tiering08", "tpp"])
+def test_tiering_promotes_hot_within_budget(policy):
+    pool = _meta_pool(12, fast_budget=4)
+    pool.alloc(1, 4)
+    pool.alloc(2, 4)
+    tierer = KVBlockTierer(pool, policy)
+    for step in range(6):                   # seq1 hot, seq2 cold
+        pool.touch_seq(1, step)
+        tierer.step([1], step)
+    assert pool.fast_used() <= 4
+    assert sum(1 for b in pool.seq_blocks(1) if b.kind == FAST_KIND) > 0
+    assert all(b.kind != FAST_KIND for b in pool.seq_blocks(2))
+    assert tierer.stats.promoted > 0
+    assert tierer.stats.hint_faults > 0
+
+
+def test_tiering_demotes_cold_on_pressure():
+    pool = _meta_pool(12, fast_budget=2)
+    pool.alloc(1, 2)
+    pool.alloc(2, 2)
+    tierer = KVBlockTierer(pool, "autonuma")
+    # seq1 becomes hot and takes the whole fast budget
+    for step in range(3):
+        pool.touch_seq(1, step)
+        tierer.step([1], step)
+    assert all(b.kind == FAST_KIND for b in pool.seq_blocks(1))
+    # now only seq2 is hot: seq1's cold blocks must be demoted
+    for step in range(3, 7):
+        pool.touch_seq(2, step)
+        tierer.step([2], step)
+    assert pool.fast_used() <= 2
+    assert sum(1 for b in pool.seq_blocks(2) if b.kind == FAST_KIND) > 0
+    assert tierer.stats.demoted > 0
+
+
+# ===================================================================== #
+# Admission plan (cost-model sizing)                                    #
+# ===================================================================== #
+def test_plan_admission_scales_with_capacity():
+    cfg = get_smoke_config("llama3-8b")
+    small = plan_admission(cfg, 16, 128, device_budget_bytes=2 * 2**20,
+                           host_budget_bytes=2 * 2**20)
+    big = plan_admission(cfg, 16, 128, device_budget_bytes=2 * 2**20,
+                         host_budget_bytes=32 * 2**20)
+    assert big.total_blocks > small.total_blocks
+    assert big.max_batch >= small.max_batch    # LIO 3
+    assert small.fast_blocks <= small.total_blocks
+
+
+# ===================================================================== #
+# Paged decode consistency + end-to-end engine                          #
+# ===================================================================== #
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_smoke_config("llama3-8b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_paged_decode_matches_monolithic(tiny):
+    """Greedy tokens from the paged engine == lm.decode_step chain."""
+    cfg, params = tiny
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0,
+                              cfg.vocab)
+    logits_p, cache = lm.prefill(params, cfg, toks)
+    pads = [(0, 0)] * cache["kv_k"].ndim
+    pads[3] = (0, 8)
+    for k in ("kv_k", "kv_v"):
+        cache[k] = jnp.pad(cache[k], pads)
+    ref = [int(jnp.argmax(logits_p))]
+    tok = jnp.argmax(logits_p, -1)[:, None].astype(jnp.int32)
+    for _ in range(4):
+        lg, cache = lm.decode_step(params, cfg, cache, tok)
+        ref.append(int(jnp.argmax(lg)))
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+
+    eng = ServingEngine(cfg, params, ServingConfig(
+        block_tokens=8, max_batch=2, max_context=32, policy="tiering08"))
+    eng.submit(np.asarray(toks[0]), max_new_tokens=5)
+    eng.run()
+    assert eng.sched.finished[0].out_tokens == ref
+
+
+def test_engine_multi_request_trace(tiny):
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params, ServingConfig(
+        block_tokens=8, max_batch=2, max_context=32, policy="tiering08"))
+    rs = np.random.RandomState(0)
+    for i in range(3):
+        eng.submit(rs.randint(0, cfg.vocab, (8,)).astype(np.int32),
+                   max_new_tokens=4, arrival_s=0.005 * i)
+    rep = eng.run()
+    s = rep.summary
+    assert s["finished"] == 3.0
+    assert s["decode_tokens"] == 12.0
+    assert s["throughput_tok_s"] > 0
+    assert all(row["new_tokens"] == 4.0 for _, row in rep.per_request)
+    assert all(row["decode_tok_s"] > 0 for _, row in rep.per_request)
+    # every block returned to the pool
+    assert eng.pool.used_block_count() == 0
+    assert rep.tiering["promoted"] >= 0
+
+
+def test_engine_preemption_under_tight_pool(tiny):
+    """Pool smaller than the trace working set forces preemption, and
+    every request still finishes with the full token count."""
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params, ServingConfig(
+        block_tokens=8, max_batch=3, max_context=24, policy="static",
+        num_blocks=5, fast_block_budget=2))
+    rs = np.random.RandomState(1)
+    for i in range(3):
+        eng.submit(rs.randint(0, cfg.vocab, (8,)).astype(np.int32),
+                   max_new_tokens=10)
+    rep = eng.run()
+    assert rep.summary["finished"] == 3.0
+    assert all(row["new_tokens"] == 10.0 for _, row in rep.per_request)
+    assert rep.summary["preemptions"] > 0
+    assert eng.pool.used_block_count() == 0
+
+
+def test_engine_rejects_hybrid_arch():
+    cfg = get_smoke_config("jamba-1.5-large-398b")
+    with pytest.raises(ValueError, match="attention-only"):
+        ServingEngine(cfg, params=None)
