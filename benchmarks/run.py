@@ -8,14 +8,29 @@ Prints ``name,value,derived`` CSV.  Modules:
   oli_hpc                Figs. 13-15 + Table III OLI
   tiering_migration      Figs. 16-17 migration x placement
   serve_scheduler_bench  continuous batching: static KV split vs tiering
+  adaptive_replan_bench  telemetry-driven adaptive re-interleaving vs
+                         static plans on a phase-shifting workload
   kernel_bench           Pallas kernel microbenches
   roofline               per-cell roofline from the dry-run artifacts
+
+Usage: ``python benchmarks/run.py [--list] [--smoke] [name ...]``
+(no names = all).  Unknown names are an error.  ``--smoke`` asks each
+module that supports it for a reduced, CI-sized run.
 """
 from __future__ import annotations
 
+import argparse
+import inspect
+import os
 import sys
 import time
 import traceback
+
+# script invocation puts benchmarks/ on sys.path; the package imports
+# (`benchmarks.<name>`) need the repo root
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 MODULES = [
     "tier_characterization",
@@ -25,13 +40,34 @@ MODULES = [
     "oli_hpc",
     "tiering_migration",
     "serve_scheduler_bench",
+    "adaptive_replan_bench",
     "kernel_bench",
     "roofline",
 ]
 
 
-def main() -> None:
-    only = sys.argv[1:] or MODULES
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("names", nargs="*",
+                    help="benchmark modules to run (default: all)")
+    ap.add_argument("--list", action="store_true",
+                    help="list available benchmark names and exit")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced run for modules that support it")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in MODULES:
+            print(name)
+        return
+
+    unknown = [n for n in args.names if n not in MODULES]
+    if unknown:
+        print(f"unknown benchmark(s): {', '.join(unknown)}\n"
+              f"available: {', '.join(MODULES)}", file=sys.stderr)
+        sys.exit(2)
+
+    only = args.names or MODULES
     failures = 0
     for name in MODULES:
         if name not in only:
@@ -39,7 +75,11 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            rows = mod.run()
+            kwargs = {}
+            if args.smoke and "smoke" in inspect.signature(
+                    mod.run).parameters:
+                kwargs["smoke"] = True
+            rows = mod.run(**kwargs)
             for key, val, derived in rows:
                 if isinstance(val, float):
                     print(f"{key},{val:.6g},{derived}")

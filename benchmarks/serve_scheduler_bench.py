@@ -194,6 +194,10 @@ def engine_rows() -> List[Tuple[str, float, str]]:
                      s["throughput_tok_s"], "tok/s"))
         rows.append((f"serve_sched.engine.{policy}.promoted",
                      float(rep.tiering["promoted"]), "blocks"))
+        rows.append((f"serve_sched.engine.{policy}.p95_ttft_s",
+                     s["p95_ttft_s"], "s"))
+        rows.append((f"serve_sched.engine.{policy}.migrated_B_per_tok",
+                     s["migrated_bytes_per_token"], "B/token"))
     return rows
 
 

@@ -26,11 +26,45 @@ behaviour the paper uncovered.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .tiers import MemoryTier, GB
+
+# Per-page kernel cost of a migration (unmap, copy setup, TLB shootdown) —
+# the stall that makes migration hurt OLI by up to -88% in the paper (PMO 4).
+PAGE_BYTES = 4096
+PAGE_COST_S = 1.5e-6
+# Object-level moves go through huge mappings (THP-sized), so the replanner's
+# executor defaults to 2 MiB pages instead of base pages.
+HUGE_PAGE_BYTES = 2 * 1024**2
+
+
+def migration_time_s(nbytes: int, tier: MemoryTier, streams: float = 4.0,
+                     page_bytes: int = PAGE_BYTES,
+                     page_cost_s: float = PAGE_COST_S) -> float:
+    """Time to move `nbytes` through `tier` (bandwidth + per-page kernel work).
+
+    The charging MigrationSim applies per epoch, factored out so the
+    telemetry replanner and the serving tierer price moves identically.
+    """
+    if nbytes <= 0:
+        return 0.0
+    return (nbytes / (tier.bandwidth(streams) * GB)
+            + (nbytes / page_bytes) * page_cost_s)
+
+
+def coldest_first(blocks: Sequence, last_touch: Callable,
+                  touches: Optional[Callable] = None) -> List:
+    """Victim order for capacity pressure: least-recently-touched first.
+
+    Shared by MigrationSim's demotion loop and serving.KVBlockTierer;
+    accessors bridge the two block dataclasses (last_touch_epoch vs
+    last_touch_step)."""
+    if touches is None:
+        return sorted(blocks, key=last_touch)
+    return sorted(blocks, key=lambda b: (last_touch(b), touches(b)))
 
 
 @dataclasses.dataclass
@@ -202,10 +236,10 @@ class MigrationSim:
                 need = b.nbytes
                 usage = self._fast_usage()
                 if usage + need > self.fast_capacity:
-                    victims = sorted(
-                        (v for v in self.blocks.values()
-                         if v.tier == self.fast and not v.unmigratable),
-                        key=lambda v: v.last_touch_epoch)
+                    victims = coldest_first(
+                        [v for v in self.blocks.values()
+                         if v.tier == self.fast and not v.unmigratable],
+                        last_touch=lambda v: v.last_touch_epoch)
                     freed = 0
                     for v in victims:
                         if usage + need - freed <= self.fast_capacity:
@@ -231,9 +265,8 @@ class MigrationSim:
             # setup, TLB shootdown) — this stall is why the paper sees up
             # to -88% from migration under OLI (PMO 4).
             if mig_bytes:
-                slow = self.slow_tier
-                epoch_t += mig_bytes / (self.tiers[slow].bandwidth(4) * GB)
-                epoch_t += (mig_bytes / 4096) * 1.5e-6
+                epoch_t += migration_time_s(mig_bytes,
+                                            self.tiers[self.slow_tier])
             epoch_t += (self.stats.hint_faults * self.policy.fault_cost_s
                         ) / max(epoch + 1, 1) * 0.1
             self.stats.migrated_bytes += mig_bytes
@@ -317,3 +350,138 @@ def trace_uniform(block_ids: Sequence[Tuple[str, int]], epochs: int,
                   seed: int = 0) -> List[Dict[Tuple[str, int], int]]:
     """FT/SP-like: uniformly touched working set (migration only hurts)."""
     return [{b: 2 for b in block_ids} for _ in range(epochs)]
+
+
+# ---------------------------------------------------------------------- #
+# Reusable placement-delta executor.                                      #
+# ---------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class BlockMove:
+    """One object-level byte move between tiers."""
+
+    obj: str
+    src: str
+    dst: str
+    nbytes: int
+
+
+@dataclasses.dataclass
+class PlacementDelta:
+    """The byte moves that turn one placement into another."""
+
+    moves: List[BlockMove]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(m.nbytes for m in self.moves)
+
+    def bytes_into(self, tier: str) -> int:
+        return sum(m.nbytes for m in self.moves if m.dst == tier)
+
+    def bytes_out_of(self, tier: str) -> int:
+        return sum(m.nbytes for m in self.moves if m.src == tier)
+
+
+class MigrationExecutor:
+    """Computes, prices, and applies placement deltas between plans.
+
+    Extracted from the move/price mechanics MigrationSim and
+    serving.KVBlockTierer each grew privately, so the telemetry
+    replanner, the KV pool, and the simulators share one executor:
+
+      * ``delta(old, new, nbytes)``  — per-object byte moves between two
+        ``PlacementPlan.shares``-style mappings (greedy surplus->deficit
+        matching; objects absent from either side produce no moves —
+        allocation is not migration);
+      * ``cost_s(delta)``            — migration_time_s charging, each
+        move priced at the *slower* endpoint tier (the copy rides the
+        slow link, exactly how MigrationSim charges demotions);
+      * ``execute(delta)``           — applies moves through ``move_fn``
+        (e.g. PagedKVPool.migrate, or a TieredArray re-place); without
+        one it only accounts.  ``move_fn(obj, src, dst, nbytes)`` returns
+        the bytes actually moved (capacity may deny part of a move).
+    """
+
+    def __init__(self, tiers: Mapping[str, MemoryTier],
+                 streams: float = 4.0,
+                 page_bytes: int = HUGE_PAGE_BYTES,
+                 page_cost_s: float = PAGE_COST_S,
+                 move_fn: Optional[Callable[[str, str, str, int], int]]
+                 = None):
+        self.tiers = dict(tiers)
+        self.streams = streams
+        self.page_bytes = page_bytes
+        self.page_cost_s = page_cost_s
+        self.move_fn = move_fn
+        self.stats = MigrationStats()
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _tier_bytes(shares: Sequence[Tuple[str, float]],
+                    total: int) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for t, frac in shares:
+            out[t] = out.get(t, 0) + int(round(frac * total))
+        return out
+
+    def delta(self, old_shares: Mapping[str, Sequence[Tuple[str, float]]],
+              new_shares: Mapping[str, Sequence[Tuple[str, float]]],
+              nbytes_by_obj: Mapping[str, int]) -> PlacementDelta:
+        moves: List[BlockMove] = []
+        for obj, total in nbytes_by_obj.items():
+            if obj not in old_shares or obj not in new_shares:
+                continue
+            old = self._tier_bytes(old_shares[obj], total)
+            new = self._tier_bytes(new_shares[obj], total)
+            surplus = {t: old.get(t, 0) - new.get(t, 0)
+                       for t in set(old) | set(new)
+                       if old.get(t, 0) > new.get(t, 0)}
+            deficit = {t: new.get(t, 0) - old.get(t, 0)
+                       for t in set(old) | set(new)
+                       if new.get(t, 0) > old.get(t, 0)}
+            for src in sorted(surplus):
+                for dst in sorted(deficit):
+                    if surplus[src] <= 0:
+                        break
+                    take = min(surplus[src], deficit[dst])
+                    if take > 0:
+                        moves.append(BlockMove(obj, src, dst, take))
+                        surplus[src] -= take
+                        deficit[dst] -= take
+        return PlacementDelta(moves)
+
+    def _slow_endpoint(self, move: BlockMove) -> MemoryTier:
+        src, dst = self.tiers.get(move.src), self.tiers.get(move.dst)
+        if src is None or dst is None:
+            return src or dst
+        return src if (src.bandwidth(self.streams)
+                       <= dst.bandwidth(self.streams)) else dst
+
+    def cost_s(self, delta: PlacementDelta) -> float:
+        total = 0.0
+        for m in delta.moves:
+            tier = self._slow_endpoint(m)
+            if tier is None:
+                continue
+            total += migration_time_s(m.nbytes, tier, self.streams,
+                                      self.page_bytes, self.page_cost_s)
+        return total
+
+    def execute(self, delta: PlacementDelta,
+                stats: Optional[MigrationStats] = None) -> MigrationStats:
+        stats = stats if stats is not None else self.stats
+        order = sorted(self.tiers,
+                       key=lambda k: self.tiers[k].unloaded_latency_ns
+                       + self.tiers[k].hop_latency_ns)
+        rank = {t: i for i, t in enumerate(order)}
+        for m in delta.moves:
+            done = (self.move_fn(m.obj, m.src, m.dst, m.nbytes)
+                    if self.move_fn is not None else m.nbytes)
+            if done <= 0:
+                continue
+            stats.migrated_bytes += int(done)
+            if rank.get(m.dst, 0) < rank.get(m.src, 0):
+                stats.promoted += 1
+            elif rank.get(m.dst, 0) > rank.get(m.src, 0):
+                stats.demoted += 1
+        return stats

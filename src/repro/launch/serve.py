@@ -9,6 +9,13 @@ Continuous batching over the paged, tier-migrating KV pool:
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
         --scheduler continuous --policy tiering08 --num-requests 6
+
+Adaptive object-level re-interleaving from observed access telemetry
+(repro.telemetry) on top of a static split:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+        --scheduler continuous --policy static --adaptive \
+        --replan-every 8 --sample-rate 1.0
 """
 from __future__ import annotations
 
@@ -38,6 +45,20 @@ def _fraction(name: str):
     return parse
 
 
+def _rate(name: str):
+    """argparse type: a float in (0, 1] (a sampling rate cannot be 0)."""
+    frac = _fraction(name)
+
+    def parse(text: str) -> float:
+        val = frac(text)
+        if val <= 0.0:
+            raise argparse.ArgumentTypeError(
+                f"{name} must be positive (use a small rate like 1e-6 "
+                f"to minimize profiling, not 0)")
+        return val
+    return parse
+
+
 def run_oneshot(args, cfg, params) -> None:
     w = args.weights_host_frac
     k = args.kv_host_frac
@@ -61,7 +82,8 @@ def run_continuous(args, cfg, params) -> None:
         block_tokens=args.block_tokens, max_batch=args.batch,
         max_context=args.prompt_len + args.new_tokens + args.block_tokens,
         policy=args.policy, num_blocks=args.num_blocks,
-        fast_block_budget=args.fast_blocks)
+        fast_block_budget=args.fast_blocks, adaptive=args.adaptive,
+        replan_every=args.replan_every, sample_rate=args.sample_rate)
     eng = ServingEngine(cfg, params, sv)
     rs = np.random.RandomState(0)
     lens = [args.prompt_len, max(args.prompt_len // 2, 4)]
@@ -87,6 +109,15 @@ def run_continuous(args, cfg, params) -> None:
           f"promoted={rep.tiering['promoted']} "
           f"demoted={rep.tiering['demoted']} "
           f"hint_faults={rep.tiering['hint_faults']}")
+    t = rep.telemetry
+    print(f"telemetry: events={int(t['trace_events'])} "
+          f"samples={int(t['profiling_samples'])} "
+          f"overhead={t['profiling_overhead_s']*1e3:.2f} ms "
+          f"phase_shifts={int(t['phase_shifts'])}"
+          + (f" replans={int(t['replans_applied'])}/"
+             f"{int(t['replans_considered'])} "
+             f"moved={t['moved_bytes']/1e6:.2f} MB"
+             if args.adaptive else ""))
     for rid, row in rep.per_request:
         print(f"  req{rid}: prompt={int(row['prompt_tokens'])} "
               f"new={int(row['new_tokens'])} "
@@ -122,6 +153,15 @@ def main(argv=None):
                     help="total KV pool blocks (default: sized to batch)")
     ap.add_argument("--fast-blocks", type=int, default=None,
                     help="fast-tier (HBM-analogue) block budget")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="adaptive object-level re-interleaving from "
+                         "observed access telemetry (continuous only)")
+    ap.add_argument("--replan-every", type=int, default=8,
+                    help="scheduler iterations between adaptive replans")
+    ap.add_argument("--sample-rate",
+                    type=_rate("--sample-rate"), default=1.0,
+                    help="telemetry sampling rate (fraction of cache "
+                         "lines; 1.0 = full instrumentation)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(

@@ -32,6 +32,63 @@ def parse_mesh(spec: str):
     return make_mesh(dims, axes)
 
 
+class _TrainTelemetry:
+    """Telemetry sidecar for the training loop (--adaptive).
+
+    Records the step's per-phase traffic (params fwd/bwd, grad transfer,
+    optimizer sweep over fp32 state) through a sampling front-end, runs
+    phase detection, and periodically re-plans the training-state
+    placement over the TPU tier set from the *measured* traffic —
+    printing every costmodel-gated decision.  Placement execution stays
+    plan-only here (the train step owns its buffers); the serving engine
+    exercises the executing path.
+    """
+
+    def __init__(self, params, replan_every: int, sample_rate: float):
+        from ..core.tiers import tpu_v5e_tiers
+        from ..telemetry import (AccessSampler, AccessTrace, PhaseDetector,
+                                 AdaptiveReplanner, ReplanConfig,
+                                 SamplerConfig)
+        self.trace = AccessTrace()
+        self.sampler = AccessSampler(
+            self.trace, SamplerConfig(sample_rate=sample_rate))
+        self.phases = PhaseDetector(self.trace)
+        tiers = {k: v for k, v in tpu_v5e_tiers().items()
+                 if k in ("HBM", "HOST")}
+        self.replanner = AdaptiveReplanner(
+            self.trace, tiers, "HBM",
+            cfg=ReplanConfig(replan_every=max(replan_every, 1),
+                             window_epochs=max(replan_every, 1)))
+        self.param_bytes = sum(
+            p.nbytes for p in jax.tree.leaves(params))
+        self.nbytes = {
+            "params_bf16": self.param_bytes,
+            "grads_bf16": self.param_bytes,
+            "opt_state_fp32": 6 * self.param_bytes,
+        }
+
+    def on_step(self, step: int) -> None:
+        from ..offload.train_engine import emit_step_traffic
+        emit_step_traffic(self.sampler, self.param_bytes)
+        self.phases.update()
+        d = self.replanner.maybe_replan(step + 1, self.nbytes,
+                                        pin_fast=("params_bf16",))
+        if d is not None and d.reason != "initial":
+            print(f"  replan@{step}: {'applied' if d.applied else 'kept'} "
+                  f"({d.reason}) old={d.old_step_s*1e3:.1f} ms "
+                  f"new={d.new_step_s*1e3:.1f} ms "
+                  f"migration={d.migration_s*1e3:.1f} ms")
+
+    def report(self) -> None:
+        print(f"telemetry: {self.trace.total_events} events, "
+              f"{self.sampler.samples} samples, "
+              f"overhead={self.sampler.overhead_s*1e3:.2f} ms, "
+              f"phase={self.phases.label} "
+              f"(shifts={len(self.phases.shifts)}), "
+              f"replans={self.replanner.replans_applied}/"
+              f"{len(self.replanner.decisions)}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
@@ -45,7 +102,20 @@ def main(argv=None):
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--adaptive", action="store_true",
+                    help="record per-phase access telemetry and replan "
+                         "host-tier placement online (repro.telemetry)")
+    ap.add_argument("--replan-every", type=int, default=10,
+                    help="steps between adaptive replan attempts")
+    ap.add_argument("--sample-rate", type=float, default=1.0,
+                    help="telemetry sampling rate (fraction of cache "
+                         "lines); 1.0 = full instrumentation, right "
+                         "for smoke-scale traffic — drop toward "
+                         "PEBS-like 1e-6 on production-size models")
     args = ap.parse_args(argv)
+    if not 0.0 < args.sample_rate <= 1.0:
+        ap.error(f"--sample-rate must be in (0, 1], "
+                 f"got {args.sample_rate}")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(
         args.arch)
@@ -78,12 +148,17 @@ def main(argv=None):
             print(f"restored step {start} (elastic re-shard onto "
                   f"{args.mesh})")
 
+        telem = (_TrainTelemetry(params, args.replan_every,
+                                 args.sample_rate)
+                 if args.adaptive else None)
         for i in range(start, args.steps):
             b = next(it)
             t0 = time.perf_counter()
             params, opt, loss = step_fn(
                 params, opt, {"tokens": jnp.asarray(b["tokens"]),
                               "labels": jnp.asarray(b["labels"])})
+            if telem is not None:
+                telem.on_step(i)
             if i % 10 == 0 or i == args.steps - 1:
                 jax.block_until_ready(loss)
                 print(f"step {i:4d} loss={float(loss):.4f} "
@@ -97,6 +172,8 @@ def main(argv=None):
             store.save(args.ckpt_dir, args.steps,
                        {"params": params, "opt": opt},
                        metadata={"step": args.steps})
+        if telem is not None:
+            telem.report()
     print("done")
 
 

@@ -70,12 +70,20 @@ def search_placement(cfg: ModelConfig, batch: int, seq: int,
 
 
 class FlexGenEngine:
-    """Batched prefill+decode with tier-resident weights/KV."""
+    """Batched prefill+decode with tier-resident weights/KV.
+
+    ``telemetry`` (an AccessTrace or AccessSampler) receives per-phase
+    traffic: one write-heavy prefill epoch, then one epoch per decode
+    step (weights + KV streamed, one token's KV written) — the Fig. 11
+    latency/bandwidth split as an observable signal.
+    """
 
     def __init__(self, cfg: ModelConfig, params: Any,
-                 serve: Optional[ServeConfig] = None):
+                 serve: Optional[ServeConfig] = None,
+                 telemetry=None):
         self.cfg = cfg
         self.serve_cfg = serve or ServeConfig()
+        self.telemetry = telemetry
         sc = self.serve_cfg
         # place weights per policy (block-interleaved TieredArrays)
         self.params_tiered = place_pytree(
@@ -101,6 +109,16 @@ class FlexGenEngine:
         jax.block_until_ready(logits)
         t1 = time.perf_counter()
 
+        w_bytes = sum(p.nbytes for p in jax.tree.leaves(params))
+        kv_bytes = sum(cache[k].nbytes for k in ("kv_k", "kv_v")
+                       if k in cache)
+        if self.telemetry is not None:
+            self.telemetry.observe("weights", read_bytes=w_bytes,
+                                   phase="prefill")
+            self.telemetry.observe("kv_cache", write_bytes=kv_bytes,
+                                   phase="prefill")
+            self.telemetry.advance_epoch()
+
         # pad KV buffers for decode; tier residency between steps is
         # delegated to the serving subsystem's KV manager (stash on the
         # configured shares, restore to device per decode step)
@@ -113,6 +131,8 @@ class FlexGenEngine:
         kv_home = TieredKVCache(sc.kv_shares)
         kv_home.stash(cache)
 
+        kv_step_bytes = sum(cache[k].nbytes for k in ("kv_k", "kv_v")
+                            if k in cache)
         tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         out_tokens = [tok]
         t2 = time.perf_counter()
@@ -122,6 +142,14 @@ class FlexGenEngine:
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
             out_tokens.append(tok)
             kv_home.update(cache)
+            if self.telemetry is not None:
+                self.telemetry.observe("weights", read_bytes=w_bytes,
+                                       phase="decode")
+                self.telemetry.observe(
+                    "kv_cache", read_bytes=kv_step_bytes,
+                    write_bytes=max(kv_step_bytes // max(pad_to, 1), 1),
+                    phase="decode")
+                self.telemetry.advance_epoch()
         jax.block_until_ready(tok)
         t3 = time.perf_counter()
         return ServeStats(B, t1 - t0, t3 - t2, sc.max_new_tokens)

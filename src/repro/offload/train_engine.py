@@ -50,6 +50,24 @@ class OffloadConfig:
     adam: adam.AdamConfig = dataclasses.field(default_factory=adam.AdamConfig)
 
 
+def emit_step_traffic(telemetry, param_bytes: int) -> None:
+    """Record one train step's per-phase traffic (the Fig. 9 phases).
+
+    The single source of the ZeRO-Offload traffic model: params read
+    twice on fwd/bwd, grads streamed device->host, fp32 master+m+v
+    (6x the bf16 param bytes) read and rewritten by the optimizer,
+    updated params streamed back.  Used by the engine and by the train
+    CLI's telemetry sidecar so both observe identical traffic.
+    """
+    pb = param_bytes
+    telemetry.observe("params_bf16", 2 * pb, 0, 0.0, phase="fwd_bwd")
+    telemetry.observe("grads_bf16", pb, pb, 0.0, phase="grad_xfer")
+    telemetry.observe("opt_state_fp32", 6 * pb, 6 * pb, 0.0,
+                      phase="optimizer")
+    telemetry.observe("params_bf16", 0, pb, 0.0, phase="param_xfer")
+    telemetry.advance_epoch()
+
+
 @dataclasses.dataclass
 class StepTiming:
     fwd_bwd_s: float
@@ -65,13 +83,22 @@ class StepTiming:
 
 
 class ZeroOffloadEngine:
-    """Single-host engine exercising real host-tier placement."""
+    """Single-host engine exercising real host-tier placement.
+
+    ``telemetry`` (an AccessTrace or AccessSampler) receives one event
+    per Fig.-9 phase per step — params read on fwd/bwd, grads written on
+    transfer, opt state read+written by the optimizer, params written
+    back — so the adaptive replanner sees the same phase structure the
+    timing decomposition reports.
+    """
 
     def __init__(self, cfg: ModelConfig, params: Any,
-                 off: Optional[OffloadConfig] = None):
+                 off: Optional[OffloadConfig] = None,
+                 telemetry=None):
         self.cfg = cfg
         self.off = off or OffloadConfig()
         self.params = params
+        self.telemetry = telemetry
         self.grad_step = jax.jit(steps_mod.make_grad_step(cfg))
         # host-resident fp32 state as TieredArrays with the policy shares
         shares = list(self.off.opt_state_shares)
@@ -84,6 +111,10 @@ class ZeroOffloadEngine:
         self.v = place_pytree(jax.tree.map(f32, params),
                               lambda name, leaf: shares)
         self.step_count = 0
+
+    # ------------------------------------------------------------------ #
+    def _param_bytes(self) -> int:
+        return sum(p.nbytes for p in jax.tree.leaves(self.params))
 
     # ------------------------------------------------------------------ #
     def train_step(self, batch: Dict[str, jax.Array]) -> StepTiming:
@@ -143,6 +174,9 @@ class ZeroOffloadEngine:
             jax.device_put(p) for p in new_params])
         jax.block_until_ready(jax.tree.leaves(self.params))
         t4 = time.perf_counter()
+
+        if self.telemetry is not None:
+            emit_step_traffic(self.telemetry, self._param_bytes())
 
         return StepTiming(t1 - t0, t2 - t1, t3 - t2, t4 - t3,
                           float(loss))

@@ -15,9 +15,9 @@ from .tiering import (KVBlockTierer, POLICIES, TieringStats,
 from .scheduler import (AdmissionPlan, ContinuousBatchingScheduler,
                         Request, RequestState, SchedulerConfig,
                         plan_admission)
-from .metrics import PoolSample, RequestMetrics, ServingMetrics
+from .metrics import PoolSample, RequestMetrics, ServingMetrics, percentile
 from .engine import (ServingConfig, ServingEngine, ServingReport,
-                     check_paged_support)
+                     check_paged_support, kind_tiers)
 
 __all__ = [
     "FAST_KIND", "KVBlock", "KVBlockSpec", "PagedKVPool", "PoolExhausted",
@@ -25,7 +25,7 @@ __all__ = [
     "KVBlockTierer", "POLICIES", "TieringStats", "make_tiering_policy",
     "AdmissionPlan", "ContinuousBatchingScheduler", "Request",
     "RequestState", "SchedulerConfig", "plan_admission",
-    "PoolSample", "RequestMetrics", "ServingMetrics",
+    "PoolSample", "RequestMetrics", "ServingMetrics", "percentile",
     "ServingConfig", "ServingEngine", "ServingReport",
-    "check_paged_support",
+    "check_paged_support", "kind_tiers",
 ]

@@ -30,9 +30,13 @@ import numpy as np
 from jax import lax
 
 from ..configs.base import ModelConfig
+from ..core.migration import MigrationExecutor
+from ..core.tiers import GiB, MemoryTier, tpu_v5e_tiers
 from ..kernels import ops
 from ..launch import steps as steps_mod
 from ..models import modules as M
+from ..telemetry import (AccessSampler, AccessTrace, AdaptiveReplanner,
+                         PhaseDetector, ReplanConfig, SamplerConfig)
 from .kv_pool import FAST_KIND, PagedKVPool, spec_from_config
 from .metrics import ServingMetrics
 from .scheduler import (ContinuousBatchingScheduler, Request,
@@ -157,6 +161,12 @@ class ServingConfig:
     # optional cost-model sizing: overrides num_blocks/fast budget/batch
     device_budget_bytes: Optional[int] = None
     host_budget_bytes: Optional[int] = None
+    # telemetry + adaptive object-level re-interleaving (repro.telemetry):
+    # sample_rate 1.0 = full instrumentation (smoke-scale traffic);
+    # lower it toward PEBS-like rates for production-sized pools.
+    adaptive: bool = False
+    replan_every: int = 8   # iterations between replans (<= 0 disables)
+    sample_rate: float = 1.0
 
 
 @dataclasses.dataclass
@@ -165,6 +175,24 @@ class ServingReport:
     per_request: List[Tuple[int, Dict[str, float]]]
     tiering: Dict[str, int]
     policy: str
+    telemetry: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+
+def kind_tiers(pool: PagedKVPool) -> Dict[str, MemoryTier]:
+    """MemoryTier descriptors for the pool's memory kinds, with
+    capacities set from the pool's block budgets — what the adaptive
+    replanner plans against."""
+    base = tpu_v5e_tiers()
+    bn = pool.block_nbytes()
+    fast = dataclasses.replace(
+        base["HBM"], name=FAST_KIND,
+        capacity_GiB=max(pool.fast_block_budget, 1) * bn / GiB)
+    slow_base = (base["HOST"] if pool.slow_kind == "pinned_host"
+                 else base["HOST_UNPINNED"])
+    slow = dataclasses.replace(
+        slow_base, name=pool.slow_kind, kind="host",
+        capacity_GiB=max(pool.num_blocks, 1) * bn / GiB)
+    return {FAST_KIND: fast, pool.slow_kind: slow}
 
 
 class ServingEngine:
@@ -205,6 +233,24 @@ class ServingEngine:
                 max_batch=max_batch,
                 max_prefill_per_iter=sv.max_prefill_per_iter))
         self.metrics = ServingMetrics()
+        # telemetry: the pool emits access events through a sampling
+        # front-end; phase detection + (optionally) adaptive replanning
+        # consume the shared trace
+        self.trace = AccessTrace()
+        self.sampler = AccessSampler(
+            self.trace, SamplerConfig(sample_rate=sv.sample_rate))
+        self.pool.attach_telemetry(self.sampler)
+        self.phases = PhaseDetector(self.trace)
+        self.replanner: Optional[AdaptiveReplanner] = None
+        if sv.adaptive:
+            tiers = kind_tiers(self.pool)
+            self.replanner = AdaptiveReplanner(
+                self.trace, tiers, FAST_KIND,
+                cfg=ReplanConfig(replan_every=max(sv.replan_every, 1),
+                                 window_epochs=max(sv.replan_every, 1)),
+                executor=MigrationExecutor(tiers,
+                                           move_fn=self._move_seq_blocks),
+                default_tier=self.pool.slow_kind)
         self._prefill = jax.jit(steps_mod.make_prefill_step(cfg))
         self._decode = jax.jit(functools.partial(_paged_decode, cfg, bt))
         self._next_rid = 0
@@ -343,6 +389,55 @@ class ServingEngine:
                 self.metrics.on_finish(req.rid, now_tok, req.preemptions)
 
     # ------------------------------------------------------------------ #
+    def _move_seq_blocks(self, obj: str, src: str, dst: str,
+                         nbytes: int) -> int:
+        """MigrationExecutor move_fn: realize an object-level byte move
+        as pool-block migrations.  Returns bytes actually moved (the
+        fast-block budget may deny promotions)."""
+        if not obj.startswith("seq"):
+            return 0
+        try:
+            sid = int(obj[3:])
+        except ValueError:
+            return 0
+        bn = self.pool.block_nbytes()
+        want = int(round(nbytes / max(bn, 1)))
+        moved = 0
+        for b in self.pool.seq_blocks(sid):
+            if moved >= want:
+                break
+            if b.kind == src and self.pool.migrate(b.bid, dst):
+                moved += 1
+        return moved * bn
+
+    def _replan_step(self) -> None:
+        """One telemetry epoch: close the bucket, track phases, and (in
+        adaptive mode) attempt an object-level replan over live
+        sequences."""
+        self.sampler.advance_epoch()
+        self.phases.update()
+        if (self.replanner is None or self.sv.replan_every <= 0
+                or self._step == 0
+                or self._step % self.sv.replan_every != 0):
+            return
+        bn = self.pool.block_nbytes()
+        nbytes = {f"seq{sid}": len(tbl) * bn
+                  for sid, tbl in self.pool.table.items() if tbl}
+        if nbytes:
+            self.replanner.maybe_replan(self._step, nbytes, force=True)
+
+    def telemetry_summary(self) -> Dict[str, float]:
+        out: Dict[str, float] = {
+            "trace_events": float(self.trace.total_events),
+            "profiling_samples": float(self.sampler.samples),
+            "profiling_overhead_s": self.sampler.overhead_s,
+            "phase_shifts": float(len(self.phases.shifts)),
+        }
+        if self.replanner is not None:
+            out.update(self.replanner.summary())
+        return out
+
+    # ------------------------------------------------------------------ #
     def _now(self) -> float:
         """Trace time: wall clock since run() start plus the virtual
         fast-forward over idle arrival gaps.  Every metrics timestamp
@@ -375,13 +470,18 @@ class ServingEngine:
                     self._step % self.sv.migrate_every == 0:
                 self.tierer.step(
                     [r.rid for r in self.sched.running], self._step)
+            self._replan_step()
             self.metrics.on_iteration(
                 self._step, self.pool.used_block_count(),
                 self.pool.fast_used(), len(self.sched.running),
                 len(self.sched.waiting))
             self._step += 1
         tstats = self.tierer.stats.as_dict()
+        # adaptive replan moves also migrate pool blocks; surface them in
+        # the tiering counters the report exposes
+        tstats["migrated_bytes"] = self.pool.counters.migrated_bytes
         return ServingReport(
             summary=self.metrics.summary(tstats),
             per_request=self.metrics.per_request_rows(),
-            tiering=tstats, policy=self.tierer.policy_name)
+            tiering=tstats, policy=self.tierer.policy_name,
+            telemetry=self.telemetry_summary())

@@ -12,8 +12,12 @@ preempted).  The pool therefore manages fixed-size token blocks:
     analogue, "pinned_host"/"unpinned_host" = the CXL-class capacity
     tiers), moved with ``migrate`` — the mechanism tiering.py drives;
   * a block table maps ``seq_id -> [block ids]`` (logical order);
-  * per-block access-heat counters (touch count + last-touch step) feed
-    the promotion/demotion policies adapted from ``core.migration``.
+  * per-block access bits (touch count + last-touch step, the page-table
+    A-bit analogue) feed the promotion/demotion policies adapted from
+    ``core.migration``, while *aggregate* access heat is emitted as
+    telemetry events (``attach_telemetry``) — reads on decode, writes on
+    prefill/append — so phase detection and the adaptive replanner see
+    the same traffic the tiering policies act on.
 
 The pool also runs in *metadata-only* mode (``spec=None``): alloc/free/
 migrate bookkeeping without array payloads, which is what the
@@ -118,6 +122,22 @@ class PagedKVPool:
         self.table: Dict[int, List[int]] = {}   # seq_id -> [bid]
         self.seq_len: Dict[int, int] = {}       # seq_id -> tokens written
         self.counters = PoolCounters()
+        self.telemetry = None                   # AccessTrace/AccessSampler
+
+    # ------------------------------------------------------------------ #
+    # telemetry                                                          #
+    # ------------------------------------------------------------------ #
+    def attach_telemetry(self, recorder) -> None:
+        """Attach an access recorder (anything with ``observe(obj,
+        read_bytes, write_bytes, random_fraction, phase)`` — an
+        AccessTrace or an AccessSampler front-end)."""
+        self.telemetry = recorder
+
+    def _emit(self, seq_id: int, read_bytes: int = 0, write_bytes: int = 0,
+              phase: str = "") -> None:
+        if self.telemetry is not None and (read_bytes or write_bytes):
+            self.telemetry.observe(f"seq{seq_id}", read_bytes, write_bytes,
+                                   0.0, phase=phase)
 
     # ------------------------------------------------------------------ #
     # capacity accounting                                                #
@@ -185,6 +205,10 @@ class PagedKVPool:
         """Release every block of a sequence; returns #blocks freed."""
         tbl = self.table.pop(seq_id, [])
         self.seq_len.pop(seq_id, None)
+        if self.telemetry is not None:
+            forget = getattr(self.telemetry, "forget", None)
+            if forget is not None:
+                forget(f"seq{seq_id}")
         for bid in tbl:
             b = self.blocks[bid]
             b.seq_id = None
@@ -202,10 +226,13 @@ class PagedKVPool:
     # ------------------------------------------------------------------ #
     def touch_seq(self, seq_id: int, step: int) -> None:
         """Decode reads the whole block table of a sequence each step."""
-        for bid in self.table.get(seq_id, []):
+        tbl = self.table.get(seq_id, [])
+        for bid in tbl:
             b = self.blocks[bid]
             b.touch_count += 1
             b.last_touch_step = step
+        self._emit(seq_id, read_bytes=len(tbl) * self.block_nbytes(),
+                   phase="decode")
 
     # ------------------------------------------------------------------ #
     # payload I/O (data mode)                                            #
@@ -246,6 +273,8 @@ class PagedKVPool:
                 self.write_block(bid, kv_k[:, :, i * bt:(i + 1) * bt],
                                  kv_v[:, :, i * bt:(i + 1) * bt])
         self.seq_len[seq_id] = n_tokens
+        self._emit(seq_id, write_bytes=n_blocks * self.block_nbytes(),
+                   phase="prefill")
 
     def append_token(self, seq_id: int, k_tok, v_tok) -> None:
         """Write one new token's (k, v) at the tail of the sequence.
@@ -272,6 +301,10 @@ class PagedKVPool:
             b.k = jax.device_put(b.k, sh)
             b.v = jax.device_put(b.v, sh)
         self.seq_len[seq_id] = n + 1
+        self._emit(seq_id,
+                   write_bytes=max(self.block_nbytes()
+                                   // self.block_tokens, 1),
+                   phase="decode")
 
     def gather_seq(self, seq_id: int, pad_blocks: int):
         """Contiguous (k, v) on the fast kind, padded to ``pad_blocks``.

@@ -7,7 +7,16 @@ serves both and stays deterministic under test.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """Linear-interpolated percentile (q in [0, 100]); 0.0 when empty."""
+    if not values:
+        return 0.0
+    return float(np.percentile(values, q))
 
 
 @dataclasses.dataclass
@@ -120,6 +129,7 @@ class ServingMetrics:
         done = [r for r in self.requests.values()
                 if r.finished_s is not None]
         ttfts = [r.ttft_s for r in done if r.ttft_s is not None]
+        lats = [r.latency_s for r in done if r.latency_s is not None]
         toks = [r.decode_tok_s for r in done
                 if r.decode_tok_s is not None]
         out: Dict[str, float] = {
@@ -129,13 +139,24 @@ class ServingMetrics:
             "decode_tokens": float(self.decode_tokens),
             "throughput_tok_s": self.aggregate_decode_tok_s(),
             "mean_ttft_s": (sum(ttfts) / len(ttfts)) if ttfts else 0.0,
+            "p50_ttft_s": percentile(ttfts, 50),
+            "p95_ttft_s": percentile(ttfts, 95),
+            "p50_latency_s": percentile(lats, 50),
+            "p95_latency_s": percentile(lats, 95),
             "mean_decode_tok_s": (sum(toks) / len(toks)) if toks else 0.0,
+            "p50_decode_tok_s": percentile(toks, 50),
+            "p95_decode_tok_s": percentile(toks, 95),
             "mean_pool_blocks": self.mean_occupancy(),
             "preemptions": float(sum(r.preemptions for r in done)),
         }
         if tiering:
             for k, v in tiering.items():
                 out[f"tiering.{k}"] = float(v)
+            # tiering overhead per unit of useful work: how many bytes
+            # were migrated for each generated token
+            out["migrated_bytes_per_token"] = (
+                float(tiering.get("migrated_bytes", 0))
+                / max(self.decode_tokens, 1))
         return out
 
     def per_request_rows(self) -> List[Tuple[int, Dict[str, float]]]:

@@ -98,11 +98,12 @@ class KVBlockTierer:
         if headroom >= need_blocks:
             return 0
         protect_set = set(protect)
-        victims = sorted(
-            (b for b in pool.blocks
+        victims = mig.coldest_first(
+            [b for b in pool.blocks
              if not b.free and b.kind == FAST_KIND
-             and b.bid not in protect_set),
-            key=lambda b: (b.last_touch_step, b.touch_count))
+             and b.bid not in protect_set],
+            last_touch=lambda b: b.last_touch_step,
+            touches=lambda b: b.touch_count)
         demoted = 0
         for v in victims:
             if headroom + demoted >= need_blocks:

@@ -1,0 +1,28 @@
+"""repro.telemetry: online access telemetry + adaptive re-interleaving.
+
+The profile -> re-plan -> re-place loop the paper's static §V-B policy
+lacks:
+
+- events:  per-object/per-block access-event recording into a
+           ring-buffered, epoch-bucketed AccessTrace
+- sampler: hint-fault/PEBS-analogue sampling front-end with a modeled
+           profiling-overhead account (PMO 2)
+- phases:  workload-phase detection (prefill vs decode, streaming vs
+           random, request-mix drift) from trace deltas
+- replan:  adaptive controller that rebuilds DataObjects from measured
+           traffic, re-runs ObjectLevelInterleave, gates the new plan
+           with core.costmodel, and executes the placement delta
+           through core.migration.MigrationExecutor
+"""
+from .events import AccessEvent, AccessTrace, EpochBucket, ObjectTraffic
+from .sampler import LINE_BYTES, AccessSampler, SamplerConfig
+from .phases import (PhaseDetector, PhaseShift, classify_traffic,
+                     traffic_distance)
+from .replan import AdaptiveReplanner, ReplanConfig, ReplanDecision
+
+__all__ = [
+    "AccessEvent", "AccessTrace", "EpochBucket", "ObjectTraffic",
+    "LINE_BYTES", "AccessSampler", "SamplerConfig",
+    "PhaseDetector", "PhaseShift", "classify_traffic", "traffic_distance",
+    "AdaptiveReplanner", "ReplanConfig", "ReplanDecision",
+]

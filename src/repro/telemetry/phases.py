@@ -1,0 +1,109 @@
+"""Workload-phase detection from trace deltas.
+
+The paper's PMOs show static placement loses the moment the access
+pattern shifts (PMO 1 vs PMO 5: which policy wins depends on the
+workload's hot-set dynamics).  This module turns the access trace into
+a phase signal the replanner can act on:
+
+  * each completed epoch is summarized as a normalized per-object byte
+    vector plus a coarse *label* from its aggregate character:
+    ``random`` (CG/XSBench-style, latency-bound), ``write_heavy``
+    (prefill / optimizer-update-style), ``streaming`` (MG/decode-style
+    bandwidth-bound reads), or ``idle``;
+  * a phase shift fires when the total-variation distance between
+    consecutive epoch vectors exceeds ``threshold`` (request-mix /
+    working-set drift) or the label flips (prefill -> decode,
+    train -> eval), debounced by ``min_phase_epochs`` so transient
+    epochs cannot thrash the replanner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional
+
+from .events import AccessTrace, EpochBucket, ObjectTraffic
+
+
+def classify_traffic(bucket: Mapping[str, ObjectTraffic]) -> str:
+    """Coarse phase label from one epoch's aggregate traffic."""
+    reads = sum(t.read_bytes for t in bucket.values())
+    writes = sum(t.write_bytes for t in bucket.values())
+    total = reads + writes
+    if total <= 0:
+        return "idle"
+    rand = sum(t.random_bytes for t in bucket.values()) / total
+    if rand > 0.5:
+        return "random"
+    if writes / total > 0.35:
+        return "write_heavy"
+    return "streaming"
+
+
+def traffic_distance(a: Mapping[str, float],
+                     b: Mapping[str, float]) -> float:
+    """Total-variation distance between two normalized traffic vectors
+    (0 = identical mix, 1 = disjoint working sets)."""
+    keys = set(a) | set(b)
+    return 0.5 * sum(abs(a.get(k, 0.0) - b.get(k, 0.0)) for k in keys)
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseShift:
+    """One detected phase boundary."""
+
+    epoch: int
+    distance: float
+    old_label: str
+    new_label: str
+
+
+class PhaseDetector:
+    """Online phase tracking over an AccessTrace.
+
+    Call ``update()`` once per completed epoch (after
+    ``advance_epoch``); it returns a PhaseShift when a boundary is
+    crossed, else None.
+    """
+
+    def __init__(self, trace: AccessTrace, threshold: float = 0.35,
+                 min_phase_epochs: int = 2):
+        self.trace = trace
+        self.threshold = threshold
+        self.min_phase_epochs = min_phase_epochs
+        self.phase_id = 0
+        self.label = "idle"
+        self.shifts: List[PhaseShift] = []
+        self._prev_vec: Optional[Dict[str, float]] = None
+        self._epochs_in_phase = 0
+        self._last_seen_epoch = -1
+
+    def update(self) -> Optional[PhaseShift]:
+        if self.trace.epochs_recorded == 0:
+            return None
+        epoch_id, bucket = self.trace.buckets(1)[0]
+        if epoch_id == self._last_seen_epoch:
+            return None                      # nothing new completed
+        self._last_seen_epoch = epoch_id
+        vec = self.trace.epoch_vector(bucket)
+        label = classify_traffic(bucket)
+        shift: Optional[PhaseShift] = None
+        if self._prev_vec is not None:
+            d = traffic_distance(self._prev_vec, vec)
+            moved = d > self.threshold or (label != self.label
+                                           and label != "idle")
+            if moved and self._epochs_in_phase >= self.min_phase_epochs:
+                shift = PhaseShift(epoch_id, d, self.label, label)
+                self.shifts.append(shift)
+                self.phase_id += 1
+                self._epochs_in_phase = 0
+        elif label != "idle":
+            self.label = label
+        if shift is not None:
+            self.label = label
+        self._prev_vec = vec
+        self._epochs_in_phase += 1
+        return shift
+
+    @property
+    def epochs_in_phase(self) -> int:
+        return self._epochs_in_phase

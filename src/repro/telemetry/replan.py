@@ -1,0 +1,171 @@
+"""Adaptive object-level re-interleaving: profile -> re-plan -> re-place.
+
+Closes the loop the paper leaves open: §V-B's object-level interleaving
+is planned once from application semantics, and §VI shows kernel-level
+migration integrates badly with it (PMO 3/4).  The controller here
+re-plans *at the object level* from observed traffic instead:
+
+  1. every ``replan_every`` epochs, rebuild the DataObject inventory
+     from the AccessTrace window (measured read/write/random traffic,
+     not the one-shot analytic estimate);
+  2. re-run the placement policy (ObjectLevelInterleave by default) on
+     those measured numbers;
+  3. gate with core.costmodel: price the measured traffic under the
+     current plan and the candidate plan, price the placement delta
+     with the MigrationExecutor, and apply only if
+
+        (old_step - new_step) * amortize_steps > migration_cost
+        and old_step / new_step >= min_speedup      (hysteresis)
+
+     so noise-level wins never trigger churn (the failure mode that
+     makes AutoNUMA *hurt* in PMO 4);
+  4. execute the delta through the executor's ``move_fn`` (e.g.
+     PagedKVPool.migrate), which may partially deny moves on capacity.
+
+Objects that appear mid-run (new sequences, freshly allocated state)
+are costed as if resident on ``default_tier`` — that is where a
+first-touch allocator actually put them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence
+
+from ..core.costmodel import plan_step_cost
+from ..core.migration import MigrationExecutor, MigrationStats
+from ..core.policies import (ObjectLevelInterleave, PlacementPlan, Policy,
+                             _tier_order)
+from ..core.tiers import MemoryTier
+from .events import AccessTrace
+
+
+@dataclasses.dataclass
+class ReplanConfig:
+    replan_every: int = 4          # epochs between replan attempts
+    min_speedup: float = 1.05      # hysteresis on predicted step-time win
+    amortize_steps: int = 16       # epochs a new plan must pay back over
+    window_epochs: Optional[int] = 4   # trace window for measured traffic
+    total_streams: int = 32
+    compute_time_s: float = 0.0
+
+
+@dataclasses.dataclass
+class ReplanDecision:
+    """One replan attempt, applied or not, with its costmodel verdict."""
+
+    epoch: int
+    applied: bool
+    reason: str                    # initial | win | no_win | migration_cost
+    old_step_s: float = 0.0
+    new_step_s: float = 0.0
+    migration_s: float = 0.0
+    moved_bytes: int = 0
+
+    @property
+    def predicted_speedup(self) -> float:
+        return self.old_step_s / max(self.new_step_s, 1e-12)
+
+
+class AdaptiveReplanner:
+    """Periodic measured-traffic re-planner over a tier set."""
+
+    def __init__(self, trace: AccessTrace,
+                 tiers: Mapping[str, MemoryTier], fast: str,
+                 policy: Optional[Policy] = None,
+                 cfg: Optional[ReplanConfig] = None,
+                 executor: Optional[MigrationExecutor] = None,
+                 default_tier: Optional[str] = None,
+                 initial_plan: Optional[PlacementPlan] = None):
+        self.trace = trace
+        self.tiers = dict(tiers)
+        self.fast = fast
+        slow = [t for t in self.tiers
+                if t != fast and self.tiers[t].kind != "nvme"]
+        self.policy = policy or ObjectLevelInterleave(
+            fast, slow, bandwidth_weighted=True)
+        self.cfg = cfg or ReplanConfig()
+        self.executor = executor or MigrationExecutor(self.tiers)
+        order = _tier_order(self.tiers)
+        self.default_tier = default_tier or order[-1]
+        self.plan = initial_plan
+        self.stats = MigrationStats()
+        self.decisions: List[ReplanDecision] = []
+
+    # ------------------------------------------------------------------ #
+    @property
+    def replans_applied(self) -> int:
+        return sum(1 for d in self.decisions if d.applied)
+
+    @property
+    def moved_bytes(self) -> int:
+        return self.stats.migrated_bytes
+
+    def _current_shares(self, names: Iterable[str]
+                        ) -> Dict[str, List]:
+        """The live plan's shares, with unseen objects on default_tier."""
+        shares: Dict[str, List] = {}
+        base = self.plan.shares if self.plan is not None else {}
+        for name in names:
+            shares[name] = list(base.get(
+                name, [(self.default_tier, 1.0)]))
+        return shares
+
+    # ------------------------------------------------------------------ #
+    def maybe_replan(self, epoch: int, nbytes: Mapping[str, int],
+                     pin_fast: Iterable[str] = (),
+                     force: bool = False) -> Optional[ReplanDecision]:
+        """Attempt one replan at `epoch`; returns the decision or None
+        (not due yet / no observed traffic)."""
+        cfg = self.cfg
+        if not force and (cfg.replan_every <= 0
+                          or epoch % cfg.replan_every != 0):
+            return None
+        objs = self.trace.to_data_objects(
+            nbytes, window=cfg.window_epochs, pin_fast=pin_fast)
+        if not any(o.bytes_per_step > 0 for o in objs):
+            return None
+        new_plan = self.policy.plan(objs, self.tiers)
+
+        if self.plan is None:
+            self.plan = new_plan
+            d = ReplanDecision(epoch, True, "initial")
+            self.decisions.append(d)
+            return d
+
+        old_shares = self._current_shares(nbytes)
+        old_plan = PlacementPlan(old_shares, self.plan.policy, {})
+        old_cost = plan_step_cost(objs, old_plan, self.tiers,
+                                  cfg.total_streams,
+                                  cfg.compute_time_s).step_s
+        new_cost = plan_step_cost(objs, new_plan, self.tiers,
+                                  cfg.total_streams,
+                                  cfg.compute_time_s).step_s
+        delta = self.executor.delta(old_shares, new_plan.shares, nbytes)
+        mig_s = self.executor.cost_s(delta)
+        d = ReplanDecision(epoch, False, "no_win", old_cost, new_cost,
+                           mig_s, delta.total_bytes)
+        if old_cost < new_cost * cfg.min_speedup:
+            pass                          # hysteresis: win too small
+        elif (old_cost - new_cost) * cfg.amortize_steps <= mig_s:
+            d.reason = "migration_cost"
+        else:
+            self.executor.execute(delta, self.stats)
+            # keep the old shares for objects the new plan did not touch
+            merged = dict(old_shares)
+            merged.update(new_plan.shares)
+            self.plan = PlacementPlan(merged, new_plan.policy,
+                                      new_plan.tier_bytes)
+            d.applied = True
+            d.reason = "win"
+        self.decisions.append(d)
+        return d
+
+    # ------------------------------------------------------------------ #
+    def summary(self) -> Dict[str, float]:
+        applied = [d for d in self.decisions if d.applied]
+        return {
+            "replans_considered": float(len(self.decisions)),
+            "replans_applied": float(len(applied)),
+            "moved_bytes": float(self.stats.migrated_bytes),
+            "migration_s": float(sum(d.migration_s for d in applied)),
+        }

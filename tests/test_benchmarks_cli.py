@@ -1,0 +1,35 @@
+"""benchmarks/run.py CLI contract: --list, unknown names fail loudly."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RUN = os.path.join(ROOT, "benchmarks", "run.py")
+
+
+def _run(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    return subprocess.run([sys.executable, RUN, *args], env=env,
+                          capture_output=True, text=True, timeout=120)
+
+
+def test_list_prints_all_modules():
+    r = _run("--list")
+    assert r.returncode == 0
+    names = r.stdout.split()
+    assert "tier_characterization" in names
+    assert "adaptive_replan_bench" in names
+
+
+def test_unknown_benchmark_fails_loudly():
+    r = _run("definitely_not_a_benchmark")
+    assert r.returncode == 2
+    assert "unknown benchmark" in r.stderr
+    assert "tier_characterization" in r.stderr   # lists what exists
+
+
+def test_unknown_mixed_with_known_still_fails():
+    r = _run("tier_characterization", "typo")
+    assert r.returncode == 2
+    assert "typo" in r.stderr

@@ -90,6 +90,38 @@ def test_policy_search_feasible_and_sane():
     assert placed >= 0.98 * total
 
 
+@pytest.mark.parametrize("wl", ["BT", "LU", "CG", "MG", "XSBench"])
+@pytest.mark.parametrize("mk", ["preferred", "uniform", "oli"])
+def test_phased_time_at_least_unphased_tier_max(wl, mk):
+    """Invariant: phased (per-object-sweep) time can never be below the
+    unphased parallel-tier composition — sum of per-object maxima >=
+    max of per-tier sums."""
+    tiers = _tiers(128)
+    objs = hpc_workload_objects(wl)
+    pol = {"preferred": TierPreferred("LDRAM"),
+           "uniform": UniformInterleave(["LDRAM", "CXL"]),
+           "oli": ObjectLevelInterleave("LDRAM", ["CXL"])}[mk]
+    c = plan_step_cost(objs, pol.plan(objs, tiers), tiers)
+    assert c.phased_s >= max(c.per_tier_time.values()) - 1e-12
+
+
+def test_policy_search_monotone_in_fast_capacity():
+    """Invariant: at fixed traffic, growing the fast tier (more fast
+    share available to the search) never increases the optimized step
+    time — every placement feasible at the smaller capacity stays
+    feasible."""
+    objs = llm_serve_objects(n_params=30_000_000_000,
+                             kv_bytes=80 * GiB, act_bytes=2 * GiB)
+    prev = None
+    for cap in (96, 128, 196, 320):
+        res = policy_search(objs, _tiers(cap), fast="LDRAM", grid=4)
+        if prev is not None:
+            assert res.step_s <= prev + 1e-9, (
+                f"step time rose from {prev} to {res.step_s} when fast "
+                f"capacity grew to {cap} GiB")
+        prev = res.step_s
+
+
 def test_step_cost_bounds():
     tiers = _tiers(768)
     objs = hpc_workload_objects("CG")

@@ -1,0 +1,64 @@
+"""interleave.objects_from_pytree over nested pytree structures."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.interleave import objects_from_pytree
+
+
+def _tree():
+    return {
+        "layers": [
+            {"attn": (jnp.zeros((4, 8), jnp.float32),
+                      jnp.zeros((8,), jnp.bfloat16))},
+            {"mlp": [jnp.zeros((2, 2), jnp.float32)]},
+        ],
+        "embed": jnp.zeros((16, 4), jnp.float32),
+    }
+
+
+def test_nested_dict_list_tuple_names_and_sizes():
+    objs = objects_from_pytree(_tree())
+    by_name = {o.name: o for o in objs}
+    assert set(by_name) == {
+        "embed",
+        "layers/0/attn/0",
+        "layers/0/attn/1",
+        "layers/1/mlp/0",
+    }
+    assert by_name["embed"].nbytes == 16 * 4 * 4
+    assert by_name["layers/0/attn/0"].nbytes == 4 * 8 * 4
+    assert by_name["layers/0/attn/1"].nbytes == 8 * 2    # bf16
+    assert by_name["layers/1/mlp/0"].nbytes == 2 * 2 * 4
+
+
+def test_default_traffic_is_one_streaming_read():
+    objs = objects_from_pytree(_tree())
+    for o in objs:
+        assert o.read_bytes_per_step == o.nbytes
+        assert o.write_bytes_per_step == 0
+        assert o.random_fraction == 0.0
+        assert o.group == "params"
+
+
+def test_traffic_fn_receives_joined_names():
+    seen = {}
+
+    def traffic(name, leaf):
+        seen[name] = leaf.shape
+        return 2 * leaf.nbytes, leaf.nbytes, 0.25
+
+    objs = objects_from_pytree(_tree(), traffic_fn=traffic,
+                               group="opt_state")
+    assert "layers/1/mlp/0" in seen
+    for o in objs:
+        assert o.read_bytes_per_step == 2 * o.nbytes
+        assert o.write_bytes_per_step == o.nbytes
+        assert o.random_fraction == 0.25
+        assert o.group == "opt_state"
+
+
+def test_numpy_leaves_supported():
+    objs = objects_from_pytree((np.zeros((3, 3), np.float64),
+                                [np.zeros(5, np.int32)]))
+    by_name = {o.name: o.nbytes for o in objs}
+    assert by_name == {"0": 72, "1/0": 20}

@@ -1,0 +1,413 @@
+"""repro.telemetry: trace, sampler, phase detection, adaptive replan."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (GiB, ObjectLevelInterleave, TierPreferred,
+                        paper_system, plan_step_cost)
+from repro.core.migration import (MigrationExecutor, MigrationStats,
+                                  migration_time_s)
+from repro.telemetry import (AccessSampler, AccessTrace, AdaptiveReplanner,
+                             PhaseDetector, ReplanConfig, SamplerConfig,
+                             classify_traffic, traffic_distance)
+
+G = GiB
+
+
+def _tiers(ldram_gib=96):
+    t = {k: v for k, v in paper_system("A").items()
+         if k in ("LDRAM", "CXL")}
+    t["LDRAM"] = dataclasses.replace(t["LDRAM"], capacity_GiB=ldram_gib)
+    return t
+
+
+# ---------------------------------------------------------------------- #
+# events                                                                  #
+# ---------------------------------------------------------------------- #
+def test_trace_epoch_buckets_and_aggregation():
+    tr = AccessTrace()
+    tr.record("a", read_bytes=100, write_bytes=50, random_fraction=0.5)
+    tr.record("a", read_bytes=100)
+    tr.record("b", write_bytes=30, phase="prefill")
+    tr.advance_epoch()
+    tr.record("a", read_bytes=200)
+    tr.advance_epoch()
+    agg = tr.object_traffic()
+    assert agg["a"].read_bytes == 400
+    assert agg["a"].write_bytes == 50
+    assert agg["a"].epochs == 2
+    assert agg["a"].read_bytes_per_epoch == 200
+    assert agg["b"].write_bytes == 30
+    assert tr.phase_events == {"prefill": 1}
+    # windowed view sees only the newest epoch
+    last = tr.object_traffic(window=1)
+    assert last["a"].read_bytes == 200 and "b" not in last
+
+
+def test_trace_ring_buffer_drops_oldest():
+    tr = AccessTrace(capacity_epochs=4)
+    for i in range(10):
+        tr.record("x", read_bytes=i + 1)
+        tr.advance_epoch()
+    assert tr.epochs_recorded == 4
+    assert tr.dropped_epochs == 6
+    # only epochs 6..9 (values 7..10) survive
+    assert tr.object_traffic()["x"].read_bytes == 7 + 8 + 9 + 10
+
+
+def test_trace_zero_byte_events_ignored():
+    tr = AccessTrace()
+    tr.record("a", read_bytes=0, write_bytes=0)
+    assert tr.total_events == 0
+
+
+def test_to_data_objects_covers_cold_objects():
+    tr = AccessTrace()
+    tr.record("hot", read_bytes=10 * G, random_fraction=0.8)
+    tr.advance_epoch()
+    objs = tr.to_data_objects({"hot": 20 * G, "cold": 5 * G},
+                              pin_fast=["cold"])
+    by = {o.name: o for o in objs}
+    assert by["hot"].read_bytes_per_step == 10 * G
+    assert by["hot"].random_fraction == pytest.approx(0.8)
+    assert by["cold"].bytes_per_step == 0
+    assert by["cold"].pin_fast
+
+
+# ---------------------------------------------------------------------- #
+# sampler                                                                 #
+# ---------------------------------------------------------------------- #
+def test_sampler_estimate_accuracy_and_overhead():
+    tr = AccessTrace()
+    sm = AccessSampler(tr, SamplerConfig(sample_rate=1e-6))
+    true_bytes = 0
+    for _ in range(8):
+        sm.observe("u", read_bytes=10 * G, write_bytes=2 * G)
+        true_bytes += 12 * G
+        sm.advance_epoch()
+    got = tr.object_traffic()["u"].total_bytes
+    assert got == pytest.approx(true_bytes, rel=0.02)
+    # overhead: one cost per sample, samples ~ lines * rate
+    exp_samples = true_bytes / 64 * 1e-6
+    assert sm.samples == pytest.approx(exp_samples, rel=0.02)
+    assert sm.overhead_s == pytest.approx(sm.samples * 2e-6)
+
+
+def test_sampler_deterministic_carry_accumulates_small_events():
+    tr = AccessTrace()
+    sm = AccessSampler(tr, SamplerConfig(sample_rate=0.01))
+    # each event is far below one sample period; the carry must still
+    # record the aggregate eventually
+    for _ in range(1000):
+        sm.observe("tiny", read_bytes=640)   # 10 lines -> 0.1 samples
+    sm.advance_epoch()
+    assert tr.object_traffic()["tiny"].read_bytes == pytest.approx(
+        640_000, rel=0.05)
+
+
+def test_sampler_full_rate_is_exact():
+    tr = AccessTrace()
+    sm = AccessSampler(tr, SamplerConfig(sample_rate=1.0))
+    sm.observe("a", read_bytes=4096, write_bytes=128)
+    sm.advance_epoch()
+    t = tr.object_traffic()["a"]
+    assert t.read_bytes == 4096 and t.write_bytes == 128
+    assert sm.overhead_s > 0
+
+
+def test_sampler_tier_cost_scales_overhead():
+    cheap = AccessSampler(AccessTrace(), SamplerConfig(sample_rate=1.0))
+    tiers = _tiers()
+    costly = AccessSampler(AccessTrace(), SamplerConfig(
+        sample_rate=1.0, tier=tiers["CXL"]))
+    cheap.observe("a", read_bytes=64 * 100)
+    costly.observe("a", read_bytes=64 * 100)
+    assert costly.overhead_s > cheap.overhead_s
+
+
+def test_sampler_rejects_nonpositive_rate():
+    with pytest.raises(ValueError):
+        SamplerConfig(sample_rate=0.0)
+
+
+def test_sampler_forget_prunes_carry_state():
+    tr = AccessTrace()
+    sm = AccessSampler(tr, SamplerConfig(sample_rate=0.01))
+    for i in range(100):
+        sm.observe(f"seq{i}", read_bytes=640, write_bytes=640)
+        sm.forget(f"seq{i}")
+    assert len(sm._carry) == 0
+    # live objects keep their carry
+    sm.observe("live", read_bytes=640)
+    assert len(sm._carry) == 1
+
+
+# ---------------------------------------------------------------------- #
+# phases                                                                  #
+# ---------------------------------------------------------------------- #
+def _emit_epoch(tr, spec):
+    for obj, (r, w, rf) in spec.items():
+        tr.record(obj, read_bytes=r, write_bytes=w, random_fraction=rf)
+    tr.advance_epoch()
+
+
+def test_classify_traffic_labels():
+    tr = AccessTrace()
+    _emit_epoch(tr, {"a": (100 * G, 0, 0.0)})
+    assert classify_traffic(tr.last_completed()) == "streaming"
+    _emit_epoch(tr, {"a": (10 * G, 0, 0.9)})
+    assert classify_traffic(tr.last_completed()) == "random"
+    _emit_epoch(tr, {"a": (10 * G, 10 * G, 0.0)})
+    assert classify_traffic(tr.last_completed()) == "write_heavy"
+    assert classify_traffic({}) == "idle"
+
+
+def test_traffic_distance_bounds():
+    assert traffic_distance({"a": 1.0}, {"a": 1.0}) == 0.0
+    assert traffic_distance({"a": 1.0}, {"b": 1.0}) == pytest.approx(1.0)
+
+
+def test_phase_detector_fires_on_shift_and_debounces():
+    tr = AccessTrace()
+    det = PhaseDetector(tr, threshold=0.35, min_phase_epochs=2)
+    shifts = []
+    for _ in range(5):
+        _emit_epoch(tr, {"u": (50 * G, 10 * G, 0.0)})
+        s = det.update()
+        if s:
+            shifts.append(s)
+    assert not shifts                      # stable phase: no shift
+    for _ in range(5):
+        _emit_epoch(tr, {"a": (20 * G, 0, 0.9)})
+        s = det.update()
+        if s:
+            shifts.append(s)
+    assert len(shifts) == 1                # one boundary, debounced
+    assert shifts[0].new_label == "random"
+    assert det.label == "random"
+    assert det.phase_id == 1
+
+
+def test_phase_detector_idle_epochs_do_not_flap():
+    tr = AccessTrace()
+    det = PhaseDetector(tr, min_phase_epochs=1)
+    for _ in range(3):
+        _emit_epoch(tr, {"u": (10 * G, 0, 0.0)})
+        det.update()
+    tr.advance_epoch()                     # empty epoch
+    det.update()
+    assert det.label == "streaming" or det.label == "idle"
+    assert len(det.shifts) <= 1
+
+
+# ---------------------------------------------------------------------- #
+# executor                                                                #
+# ---------------------------------------------------------------------- #
+def test_executor_delta_conserves_bytes():
+    ex = MigrationExecutor(_tiers())
+    old = {"a": [("LDRAM", 1.0)], "b": [("CXL", 1.0)]}
+    new = {"a": [("LDRAM", 0.25), ("CXL", 0.75)], "b": [("CXL", 1.0)]}
+    d = ex.delta(old, new, {"a": 100 * G, "b": 10 * G})
+    assert d.total_bytes == 75 * G
+    assert d.bytes_out_of("LDRAM") == 75 * G
+    assert d.bytes_into("CXL") == 75 * G
+    assert all(m.obj == "a" for m in d.moves)   # b unchanged
+
+
+def test_executor_ignores_appearing_objects():
+    ex = MigrationExecutor(_tiers())
+    d = ex.delta({}, {"new": [("LDRAM", 1.0)]}, {"new": G})
+    assert d.total_bytes == 0               # allocation, not migration
+
+
+def test_executor_cost_priced_on_slow_endpoint():
+    tiers = _tiers()
+    ex = MigrationExecutor(tiers)
+    d = ex.delta({"a": [("LDRAM", 1.0)]}, {"a": [("CXL", 1.0)]},
+                 {"a": 10 * G})
+    exp = migration_time_s(10 * G, tiers["CXL"], streams=ex.streams,
+                           page_bytes=ex.page_bytes)
+    assert ex.cost_s(d) == pytest.approx(exp)
+
+
+def test_executor_execute_counts_promotions_and_partial_moves():
+    tiers = _tiers()
+    done = []
+
+    def move_fn(obj, src, dst, nbytes):
+        done.append((obj, src, dst, nbytes))
+        return nbytes // 2                  # capacity denies half
+
+    ex = MigrationExecutor(tiers, move_fn=move_fn)
+    d = ex.delta({"a": [("CXL", 1.0)]}, {"a": [("LDRAM", 1.0)]},
+                 {"a": 4 * G})
+    stats = ex.execute(d, MigrationStats())
+    assert done == [("a", "CXL", "LDRAM", 4 * G)]
+    assert stats.migrated_bytes == 2 * G
+    assert stats.promoted == 1 and stats.demoted == 0
+
+
+# ---------------------------------------------------------------------- #
+# replanner                                                               #
+# ---------------------------------------------------------------------- #
+def _observed_trace(spec, epochs=4):
+    tr = AccessTrace()
+    for _ in range(epochs):
+        _emit_epoch(tr, spec)
+    return tr
+
+
+def test_replanner_adopts_initial_plan_then_holds_on_stable_traffic():
+    tr = _observed_trace({"u": (80 * G, 40 * G, 0.0)})
+    rp = AdaptiveReplanner(tr, _tiers(), "LDRAM",
+                           cfg=ReplanConfig(replan_every=1))
+    nb = {"u": 40 * G}
+    d0 = rp.maybe_replan(1, nb)
+    assert d0.applied and d0.reason == "initial"
+    d1 = rp.maybe_replan(2, nb)
+    assert not d1.applied                 # same traffic -> no win
+    assert rp.replans_applied == 1
+
+
+def test_replanner_respects_cadence():
+    tr = _observed_trace({"u": (80 * G, 0, 0.0)})
+    rp = AdaptiveReplanner(tr, _tiers(), "LDRAM",
+                           cfg=ReplanConfig(replan_every=5))
+    assert rp.maybe_replan(3, {"u": 40 * G}) is None
+    assert rp.maybe_replan(5, {"u": 40 * G}) is not None
+
+
+def test_replanner_no_traffic_no_decision():
+    rp = AdaptiveReplanner(AccessTrace(), _tiers(), "LDRAM")
+    assert rp.maybe_replan(0, {"u": G}, force=True) is None
+
+
+def test_replanner_migrates_on_phase_shift_and_wins():
+    """The bandwidth-hot object changes: the replanner must hand the
+    freed fast-tier capacity to the newly-hot object and predict a win
+    that survives the migration-cost gate."""
+    tiers = _tiers()
+    nb = {"u": 60 * G, "w": 60 * G}
+    tr = _observed_trace({"u": (120 * G, 60 * G, 0.0)})
+    rp = AdaptiveReplanner(
+        tr, tiers, "LDRAM",
+        cfg=ReplanConfig(replan_every=1, window_epochs=2,
+                         amortize_steps=16))
+    rp.maybe_replan(1, nb)
+    plan_a = rp.plan
+    u_fast_before = sum(f for t, f in rp.plan.shares["u"]
+                        if t == "LDRAM")
+    # phase shift: u goes cold, w becomes the streamed hot object
+    for _ in range(4):
+        _emit_epoch(tr, {"w": (120 * G, 60 * G, 0.0)})
+    d = rp.maybe_replan(2, nb)
+    assert d is not None and d.applied and d.reason == "win"
+    assert d.predicted_speedup > 1.05
+    assert rp.moved_bytes > 0
+    assert rp.plan is not plan_a
+    # 'w' now holds at least the fast share 'u' used to have
+    w_fast = sum(f for t, f in rp.plan.shares["w"] if t == "LDRAM")
+    assert w_fast >= u_fast_before - 0.05
+
+
+def test_replanner_hysteresis_blocks_marginal_wins():
+    tiers = _tiers()
+    nb = {"u": 60 * G}
+    tr = _observed_trace({"u": (120 * G, 0, 0.0)})
+    rp = AdaptiveReplanner(
+        tr, tiers, "LDRAM",
+        cfg=ReplanConfig(replan_every=1, min_speedup=10.0))
+    rp.maybe_replan(1, nb)
+    for _ in range(4):
+        _emit_epoch(tr, {"u": (10 * G, 0, 0.4)})
+    d = rp.maybe_replan(2, nb)
+    assert d is None or not d.applied     # 10x hysteresis: never passes
+
+
+# ---------------------------------------------------------------------- #
+# serving-engine integration                                              #
+# ---------------------------------------------------------------------- #
+def _smoke_engine(adaptive):
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import lm
+    from repro.serving import ServingConfig, ServingEngine
+
+    cfg = get_smoke_config("llama3-8b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, ServingConfig(
+        block_tokens=16, max_batch=3, max_context=64, policy="static",
+        num_blocks=12, fast_block_budget=4, adaptive=adaptive,
+        replan_every=4))
+    rs = np.random.RandomState(0)
+    for i in range(4):
+        eng.submit(rs.randint(0, cfg.vocab, (16,)).astype(np.int32),
+                   max_new_tokens=8, arrival_s=0.0)
+    return eng
+
+
+def test_engine_emits_telemetry_and_replans():
+    eng = _smoke_engine(adaptive=True)
+    rep = eng.run()
+    t = rep.telemetry
+    assert t["trace_events"] > 0
+    assert t["profiling_samples"] > 0
+    assert t["replans_considered"] >= 1
+    assert rep.summary["finished"] == 4.0
+    # telemetry sees both prefill writes and decode reads
+    assert set(eng.trace.phase_events) >= {"prefill", "decode"}
+
+
+def test_engine_without_adaptive_still_traces():
+    eng = _smoke_engine(adaptive=False)
+    rep = eng.run()
+    assert rep.telemetry["trace_events"] > 0
+    assert "replans_considered" not in rep.telemetry
+    assert rep.summary["finished"] == 4.0
+    # finished sequences were retired from the sampler's carry state
+    assert len(eng.sampler._carry) == 0
+
+
+def test_engine_replan_every_zero_disables_replans():
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import lm
+    from repro.serving import ServingConfig, ServingEngine
+
+    cfg = get_smoke_config("llama3-8b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, ServingConfig(
+        block_tokens=16, max_batch=2, max_context=64, policy="static",
+        num_blocks=8, fast_block_budget=4, adaptive=True,
+        replan_every=0))
+    eng.submit(np.zeros(16, np.int32), max_new_tokens=4)
+    rep = eng.run()                      # must not ZeroDivisionError
+    assert rep.telemetry["replans_considered"] == 0.0
+
+
+# ---------------------------------------------------------------------- #
+# metrics percentiles                                                     #
+# ---------------------------------------------------------------------- #
+def test_metrics_percentiles_and_migrated_bytes_per_token():
+    from repro.serving import ServingMetrics, percentile
+
+    assert percentile([], 95) == 0.0
+    assert percentile([3.0], 50) == 3.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50) == pytest.approx(2.5)
+    assert percentile(list(range(1, 101)), 95) == pytest.approx(95.05)
+
+    m = ServingMetrics()
+    for rid, (ttft, n) in enumerate([(0.1, 4), (0.2, 4), (0.9, 4)]):
+        m.on_submit(rid, 0.0, 8)
+        m.on_admit(rid, ttft)
+        t = ttft
+        for k in range(n):
+            m.on_token(rid, t)
+            t += 0.05
+        m.on_finish(rid, t, 0)
+    s = m.summary({"migrated_bytes": 1200})
+    assert s["p50_ttft_s"] == pytest.approx(0.2)
+    assert s["p95_ttft_s"] == pytest.approx(0.83)
+    assert s["p50_latency_s"] > 0
+    assert s["migrated_bytes_per_token"] == pytest.approx(100.0)
