@@ -10,6 +10,8 @@ Prints ``name,value,derived`` CSV.  Modules:
   serve_scheduler_bench  continuous batching: static KV split vs tiering
   adaptive_replan_bench  telemetry-driven adaptive re-interleaving vs
                          static plans on a phase-shifting workload
+  topology_bench         hop-distance costing: near vs far socket,
+                         distance-weighted interleave, link contention
   kernel_bench           Pallas kernel microbenches
   roofline               per-cell roofline from the dry-run artifacts
 
@@ -41,6 +43,7 @@ MODULES = [
     "tiering_migration",
     "serve_scheduler_bench",
     "adaptive_replan_bench",
+    "topology_bench",
     "kernel_bench",
     "roofline",
 ]

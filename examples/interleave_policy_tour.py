@@ -1,4 +1,9 @@
-"""Tour of the paper's placement policies on the HPC dwarfs (Figs 13-15).
+"""Tour of the paper's placement policies on the HPC dwarfs (Figs 13-15),
+plus the topology-derived distance-weighted interleave mode.
+
+Exits non-zero if a policy comparison regresses (the checks at the
+bottom encode the relationships the paper's figures establish), so the
+tour doubles as a guard in CI-ish runs:
 
     PYTHONPATH=src python examples/interleave_policy_tour.py
 """
@@ -9,32 +14,75 @@ sys.path.insert(0, "src")
 
 from repro.core import (ObjectLevelInterleave, TierPreferred,  # noqa: E402
                         UniformInterleave, compare_policies,
-                        hpc_workload_objects, paper_system)
+                        distance_weighted_policy, hpc_workload_objects,
+                        paper_system)
+from repro.topology import build_topology  # noqa: E402
+
+WORKLOADS = ("BT", "LU", "CG", "MG", "SP", "FT", "XSBench")
+TOL = 1.001
 
 
-def main():
+def main() -> int:
+    testbed = build_topology("vendor-a")
+    regressions = []
     for cap, tag in ((128, "sufficient"), (64, "insufficient")):
         tiers = {k: v for k, v in paper_system("A").items()
                  if k in ("LDRAM", "CXL")}
         tiers["LDRAM"] = dataclasses.replace(tiers["LDRAM"],
                                              capacity_GiB=cap)
+        weighted = distance_weighted_policy(
+            testbed.graph, tiers, tier_set=["LDRAM", "CXL"],
+            name="distance_weighted")
         print(f"\n=== LDRAM {cap} GB ({tag}) + CXL, system A ===")
         print(f"{'workload':10s} {'preferred':>10s} {'uniform':>10s} "
-              f"{'OLI':>10s}  best")
-        for wl in ("BT", "LU", "CG", "MG", "SP", "FT", "XSBench"):
+              f"{'weighted':>10s} {'OLI':>10s}  best")
+        for wl in WORKLOADS:
             objs = hpc_workload_objects(wl)
             costs = compare_policies(
                 objs,
                 [TierPreferred("LDRAM"),
                  UniformInterleave(["LDRAM", "CXL"]),
+                 weighted,
                  ObjectLevelInterleave("LDRAM", ["CXL"])],
                 tiers)
             p = costs["LDRAM_preferred"].step_s
             u = costs["uniform_interleave[LDRAM+CXL]"].step_s
+            w = costs["distance_weighted"].step_s
             o = costs["oli[LDRAM+CXL]"].step_s
-            best = min((p, "preferred"), (u, "uniform"), (o, "OLI"))[1]
-            print(f"{wl:10s} {p:9.2f}s {u:9.2f}s {o:9.2f}s  {best}")
+            best = min((p, "preferred"), (u, "uniform"),
+                       (w, "weighted"), (o, "OLI"))[1]
+            print(f"{wl:10s} {p:9.2f}s {u:9.2f}s {w:9.2f}s {o:9.2f}s"
+                  f"  {best}")
+
+            # -- policy-comparison invariants (paper Figs 13-15) -------
+            if cap == 128:
+                # with sufficient fast memory, blind uniform interleave
+                # never wins: bandwidth-aware shares (weighted) and
+                # object selection (OLI) both dominate it
+                if w > u * TOL:
+                    regressions.append(
+                        f"{tag}/{wl}: distance-weighted {w:.2f}s > "
+                        f"uniform {u:.2f}s")
+                if o > u * TOL:
+                    regressions.append(
+                        f"{tag}/{wl}: OLI {o:.2f}s > uniform {u:.2f}s")
+            else:
+                # with insufficient fast memory, fast-preferred is the
+                # fragile policy: some interleaving variant must match
+                # or beat it on every workload
+                if min(u, w, o) > p * TOL:
+                    regressions.append(
+                        f"{tag}/{wl}: best interleave "
+                        f"{min(u, w, o):.2f}s > preferred {p:.2f}s")
+
+    if regressions:
+        print("\nPOLICY-COMPARISON REGRESSIONS:", file=sys.stderr)
+        for r in regressions:
+            print(f"  {r}", file=sys.stderr)
+        return 1
+    print("\nall policy-comparison invariants hold")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

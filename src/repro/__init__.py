@@ -13,7 +13,8 @@ import importlib
 __version__ = "1.1.0"
 
 _LAZY_SUBPACKAGES = ("core", "serving", "offload", "models", "kernels",
-                     "configs", "data", "optim", "checkpoint")
+                     "configs", "data", "optim", "checkpoint",
+                     "telemetry", "topology")
 
 
 def __getattr__(name):

@@ -14,14 +14,17 @@ from .objects import (DataObject, total_footprint,
                       select_interleave_candidates, hpc_workload_objects,
                       llm_train_objects, llm_serve_objects)
 from .policies import (Policy, PlacementPlan, TierPreferred, FirstTouch,
-                       UniformInterleave, ObjectLevelInterleave, make_policy)
+                       UniformInterleave, WeightedInterleave,
+                       ObjectLevelInterleave, make_policy)
 from .costmodel import (StepCost, plan_step_cost, compare_policies,
                         policy_search, SearchResult)
-from .migration import (Block, MigrationSim, MigrationStats, NoBalance,
+from .migration import (Block, BlockMove, MigrationExecutor, MigrationSim,
+                        MigrationStats, NoBalance, PlacementDelta,
                         AutoNUMA, Tiering08, TPP, make_blocks_from_plan,
                         trace_stable_hotset, trace_scattered_hotset,
                         trace_uniform, SimResult)
 from .tiered_array import (TieredArray, place_pytree, gather_pytree,
                            available_memory_kinds, TIER_TO_MEMORY_KIND)
 from .interleave import (objects_from_pytree, realize_plan, plan_and_place,
-                         recommend_streams)
+                         recommend_streams, distance_weights,
+                         distance_weighted_policy)

@@ -36,11 +36,16 @@ class StepCost:
     latency_serial_s: float
     compute_s: float
     phased_s: float = 0.0   # sum over object phases of max-tier time
+    # per shared interconnect link (topology mode): traffic crossing one
+    # link serializes on it even when the endpoint tiers are independent
+    link_time: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def memory_s(self) -> float:
         base = max(self.per_tier_time.values()) if self.per_tier_time \
             else 0.0
+        if self.link_time:
+            base = max(base, max(self.link_time.values()))
         return max(base, self.phased_s) + self.latency_serial_s
 
     @property
@@ -57,7 +62,8 @@ class StepCost:
 def plan_step_cost(objs: Sequence[DataObject], plan: PlacementPlan,
                    tiers: Mapping[str, MemoryTier],
                    total_streams: int = 32,
-                   compute_time_s: float = 0.0) -> StepCost:
+                   compute_time_s: float = 0.0,
+                   topology=None, origin: Optional[str] = None) -> StepCost:
     """Evaluate a placement plan with PHASED access semantics.
 
     HPC sweeps touch objects in phases (one array at a time), so the step
@@ -67,8 +73,20 @@ def plan_step_cost(objs: Sequence[DataObject], plan: PlacementPlan,
     CXL card undermines performance, Sec. V takeaway), and random accesses
     pay loaded latency per cache line with `total_streams` outstanding
     misses (CG-style latency sensitivity).
+
+    With a ``topology`` (a ``repro.topology.TopologyGraph``) the tiers
+    are first distance-adjusted as seen from ``origin`` (path latency,
+    bottleneck bandwidth), and traffic is additionally charged against
+    every interconnect link it crosses: tiers behind one UPI/PCIe hop
+    *interfere* instead of serving in parallel, within an object's
+    phase and across the step.
     """
+    tier_links = {}
+    if topology is not None:
+        tiers = topology.effective_tiers(tiers, origin)
+        tier_links = {t: topology.tier_links(t, origin) for t in tiers}
     per_tier_time: Dict[str, float] = {k: 0.0 for k in tiers}
+    link_time: Dict[str, float] = {}
     lat_serial = 0.0
     phased_total = 0.0
     any_traffic = False
@@ -77,6 +95,7 @@ def plan_step_cost(objs: Sequence[DataObject], plan: PlacementPlan,
             continue
         any_traffic = True
         phase_t = 0.0
+        phase_link_t: Dict[str, float] = {}
         for t, frac in plan.shares.get(o.name, []):
             tier = tiers[t]
             b = o.bytes_per_step * frac
@@ -92,31 +111,40 @@ def plan_step_cost(objs: Sequence[DataObject], plan: PlacementPlan,
             share_t = t_stream + t_rand
             per_tier_time[t] += share_t
             phase_t = max(phase_t, share_t)
+            for link in tier_links.get(t, ()):
+                key = f"{link.key[0]}--{link.key[1]}"
+                lt = b / (link.bw_GBps * GB)
+                link_time[key] = link_time.get(key, 0.0) + lt
+                phase_link_t[key] = phase_link_t.get(key, 0.0) + lt
             # truly serial pointer-chase slice of the random misses:
             # indirect-index chains have limited MLP, so ~2% of misses
             # serialize on the loaded latency — this is what makes random
             # access on CXL catastrophic (HPC observation 3 / CG).
             lat_serial += (b * o.random_fraction / 64.0) * (
                 lat_ns * 1e-9) * 0.02
+        if phase_link_t:
+            phase_t = max(phase_t, max(phase_link_t.values()))
         phased_total += phase_t
 
     if not any_traffic:
         return StepCost({k: 0.0 for k in tiers}, 0.0, compute_time_s)
     return StepCost(per_tier_time, lat_serial, compute_time_s,
-                    phased_s=phased_total)
+                    phased_s=phased_total, link_time=link_time)
 
 
 def compare_policies(objs: Sequence[DataObject],
                      policies: Sequence[Policy],
                      tiers: Mapping[str, MemoryTier],
                      total_streams: int = 32,
-                     compute_time_s: float = 0.0
+                     compute_time_s: float = 0.0,
+                     topology=None, origin: Optional[str] = None
                      ) -> Dict[str, StepCost]:
     out = {}
     for p in policies:
         plan = p.plan(objs, tiers)
         out[p.name] = plan_step_cost(objs, plan, tiers, total_streams,
-                                     compute_time_s)
+                                     compute_time_s, topology=topology,
+                                     origin=origin)
     return out
 
 
@@ -139,7 +167,9 @@ def policy_search(objs: Sequence[DataObject],
                   fast: str,
                   grid: int = 10,
                   total_streams: int = 32,
-                  compute_time_s: float = 0.0) -> SearchResult:
+                  compute_time_s: float = 0.0,
+                  topology=None, origin: Optional[str] = None
+                  ) -> SearchResult:
     """Grid search over fast-tier fractions per movable object.
 
     Mirrors FlexGen's cost-model-driven search: for each non-pinned object,
@@ -148,10 +178,17 @@ def policy_search(objs: Sequence[DataObject],
     capacities.  Complexity grid^n_movable — we cap movable objects at 4 by
     taking the largest (everything else fast-preferred), matching FlexGen's
     weights/KV/activation granularity.
+
+    With a ``topology``, spill order and candidate costing both use the
+    distance-adjusted (path-aware) view from ``origin`` — a far-socket
+    CXL card spills *after* remote DRAM, and plans that route traffic
+    over a shared hop are priced with that hop's serialization.
     """
     from .policies import _tier_order  # local import to avoid cycle
 
-    order = _tier_order(tiers)
+    search_tiers = (topology.effective_tiers(tiers, origin)
+                    if topology is not None else tiers)
+    order = _tier_order(search_tiers)
     slow_order = [t for t in order if t != fast]
     movable = sorted([o for o in objs if not o.pin_fast],
                      key=lambda o: o.nbytes, reverse=True)[:4]
@@ -204,7 +241,8 @@ def policy_search(objs: Sequence[DataObject],
             continue
         plan = PlacementPlan(shares, "search", placed)
         cost = plan_step_cost(objs, plan, tiers, total_streams,
-                              compute_time_s)
+                              compute_time_s, topology=topology,
+                              origin=origin)
         if best is None or cost.step_s < best.step_s:
             best = SearchResult(
                 {o.name: dict(shares[o.name]) for o in movable},

@@ -13,7 +13,7 @@ import jax
 import numpy as np
 
 from .objects import DataObject
-from .policies import PlacementPlan, Policy
+from .policies import PlacementPlan, Policy, WeightedInterleave
 from .tiers import MemoryTier, assign_streams
 from .tiered_array import TieredArray, TIER_TO_MEMORY_KIND
 
@@ -68,3 +68,45 @@ def recommend_streams(tiers: Mapping[str, MemoryTier],
     """Sec. III bandwidth packing: DMA streams per tier (the 6/23/23 trick)."""
     alloc, _ = assign_streams(tiers, total_streams)
     return alloc
+
+
+# ---------------------------------------------------------------------- #
+# Distance-weighted interleaving (Linux weighted-interleave analogue).    #
+# ---------------------------------------------------------------------- #
+def distance_weights(topology, tiers: Mapping[str, MemoryTier],
+                     origin: Optional[str] = None,
+                     tier_set: Optional[Sequence[str]] = None
+                     ) -> Dict[str, float]:
+    """Per-tier interleave weights ∝ path-capped bandwidth from ``origin``.
+
+    ``topology`` is a ``repro.topology.TopologyGraph``; a tier reached
+    through a UPI hop weighs in at the hop's bottleneck bandwidth, not
+    its DIMM bandwidth, so a far-socket node stops receiving traffic it
+    cannot serve.  NVMe-class tiers are excluded by the graph.
+    """
+    w = topology.tier_weights(tiers, origin)
+    if tier_set is not None:
+        w = {t: w[t] for t in tier_set if t in w}
+        total = sum(w.values())
+        if total <= 0:
+            raise ValueError(f"tier_set {list(tier_set)} has no "
+                             "interleavable bandwidth")
+        w = {t: v / total for t, v in w.items()}
+    return w
+
+
+def distance_weighted_policy(topology, tiers: Mapping[str, MemoryTier],
+                             origin: Optional[str] = None,
+                             tier_set: Optional[Sequence[str]] = None,
+                             name: Optional[str] = None
+                             ) -> WeightedInterleave:
+    """A ``WeightedInterleave`` whose weights come from the topology.
+
+    This is the distance-aware counterpart of ``UniformInterleave``:
+    equal capacity, but per-node shares follow ``path_bw_GBps`` so the
+    slowest-reachable node no longer gates the aggregate (the Sec. V
+    uniform-interleave failure mode).
+    """
+    w = distance_weights(topology, tiers, origin, tier_set)
+    return WeightedInterleave(
+        w, name=name or f"distance_weighted[{topology.name}]")

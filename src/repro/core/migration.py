@@ -395,11 +395,17 @@ class MigrationExecutor:
         allocation is not migration);
       * ``cost_s(delta)``            — migration_time_s charging, each
         move priced at the *slower* endpoint tier (the copy rides the
-        slow link, exactly how MigrationSim charges demotions);
+        slow link, exactly how MigrationSim charges demotions); with a
+        ``topology`` the move is priced over its actual path — every
+        per-page setup pays the path's round-trip latency, and moves
+        whose paths cross one link (or endpoint tier) *serialize* on it
+        while moves on disjoint paths proceed in parallel;
       * ``execute(delta)``           — applies moves through ``move_fn``
         (e.g. PagedKVPool.migrate, or a TieredArray re-place); without
         one it only accounts.  ``move_fn(obj, src, dst, nbytes)`` returns
-        the bytes actually moved (capacity may deny part of a move).
+        the bytes actually moved (capacity may deny part of a move); the
+        per-move outcome is kept in ``last_moves`` so a planner can feed
+        the *realized* placement back into its next costing pass.
     """
 
     def __init__(self, tiers: Mapping[str, MemoryTier],
@@ -407,13 +413,17 @@ class MigrationExecutor:
                  page_bytes: int = HUGE_PAGE_BYTES,
                  page_cost_s: float = PAGE_COST_S,
                  move_fn: Optional[Callable[[str, str, str, int], int]]
-                 = None):
+                 = None,
+                 topology=None):
         self.tiers = dict(tiers)
         self.streams = streams
         self.page_bytes = page_bytes
         self.page_cost_s = page_cost_s
         self.move_fn = move_fn
+        self.topology = topology   # repro.topology.TopologyGraph or None
         self.stats = MigrationStats()
+        # (move, bytes actually moved) for the most recent execute()
+        self.last_moves: List[Tuple[BlockMove, int]] = []
 
     # ------------------------------------------------------------------ #
     @staticmethod
@@ -458,25 +468,66 @@ class MigrationExecutor:
                        <= dst.bandwidth(self.streams)) else dst
 
     def cost_s(self, delta: PlacementDelta) -> float:
-        total = 0.0
+        if self.topology is None:
+            total = 0.0
+            for m in delta.moves:
+                tier = self._slow_endpoint(m)
+                if tier is None:
+                    continue
+                total += migration_time_s(m.nbytes, tier, self.streams,
+                                          self.page_bytes,
+                                          self.page_cost_s)
+            return total
+        return self._path_cost_s(delta)
+
+    def _path_cost_s(self, delta: PlacementDelta) -> float:
+        """Topology pricing: bandwidth charged per traversed resource
+        (endpoint tiers + every link on the path), per-page kernel work
+        plus the path's round-trip latency per page.  Resources compose
+        like the cost model's tiers: moves sharing a resource serialize
+        on it, disjoint moves overlap — so two promotions squeezing
+        through one UPI hop take twice as long, while promotions into
+        different sockets proceed concurrently."""
+        res_time: Dict[object, float] = {}
+        overhead = 0.0
         for m in delta.moves:
-            tier = self._slow_endpoint(m)
-            if tier is None:
+            if m.nbytes <= 0:
                 continue
-            total += migration_time_s(m.nbytes, tier, self.streams,
-                                      self.page_bytes, self.page_cost_s)
-        return total
+            links = self.topology.tier_path(m.src, m.dst)
+            pages = -(-m.nbytes // self.page_bytes)   # ceil
+            lat_ns = sum(l.latency_ns for l in links)
+            overhead += pages * (self.page_cost_s + 2.0 * lat_ns * 1e-9)
+            for tname in (m.src, m.dst):
+                tier = self.tiers.get(tname)
+                if tier is None:
+                    continue
+                bw = tier.bandwidth(self.streams) * GB
+                key = ("tier", tname)
+                res_time[key] = res_time.get(key, 0.0) + m.nbytes / bw
+            for l in links:
+                key = ("link", l.key)
+                res_time[key] = res_time.get(key, 0.0) \
+                    + m.nbytes / (l.bw_GBps * GB)
+        return (max(res_time.values()) if res_time else 0.0) + overhead
 
     def execute(self, delta: PlacementDelta,
                 stats: Optional[MigrationStats] = None) -> MigrationStats:
         stats = stats if stats is not None else self.stats
-        order = sorted(self.tiers,
-                       key=lambda k: self.tiers[k].unloaded_latency_ns
-                       + self.tiers[k].hop_latency_ns)
+        # promote/demote classification needs the *distance* view: with
+        # local-normalized tier descriptors the hop latency lives in the
+        # topology, and fast/slow would tie without it
+        rank_tiers = (self.topology.effective_tiers(self.tiers)
+                      if self.topology is not None else self.tiers)
+        order = sorted(rank_tiers,
+                       key=lambda k: (rank_tiers[k].unloaded_latency_ns
+                                      + rank_tiers[k].hop_latency_ns,
+                                      -rank_tiers[k].peak_bw_GBps))
         rank = {t: i for i, t in enumerate(order)}
+        self.last_moves = []
         for m in delta.moves:
             done = (self.move_fn(m.obj, m.src, m.dst, m.nbytes)
                     if self.move_fn is not None else m.nbytes)
+            self.last_moves.append((m, max(int(done), 0)))
             if done <= 0:
                 continue
             stats.migrated_bytes += int(done)
@@ -485,3 +536,34 @@ class MigrationExecutor:
             elif rank.get(m.dst, 0) > rank.get(m.src, 0):
                 stats.demoted += 1
         return stats
+
+    @staticmethod
+    def realized_shares(
+            old_shares: Mapping[str, Sequence[Tuple[str, float]]],
+            moves_done: Sequence[Tuple[BlockMove, int]],
+            nbytes_by_obj: Mapping[str, int]
+    ) -> Dict[str, List[Tuple[str, float]]]:
+        """The placement that actually resulted from a (possibly
+        partially denied) execute: old residency plus the bytes each
+        move really transferred.  Feeding this — not the intended plan —
+        into the next costing pass keeps the planner honest when the
+        fast-block budget rejects part of a delta."""
+        out: Dict[str, List[Tuple[str, float]]] = {}
+        done_by_obj: Dict[str, List[Tuple[BlockMove, int]]] = {}
+        for m, done in moves_done:
+            done_by_obj.setdefault(m.obj, []).append((m, done))
+        for obj, shares in old_shares.items():
+            total = int(nbytes_by_obj.get(obj, 0))
+            if total <= 0:
+                out[obj] = list(shares)
+                continue
+            tier_bytes = MigrationExecutor._tier_bytes(shares, total)
+            for m, done in done_by_obj.get(obj, ()):
+                moved = min(done, max(tier_bytes.get(m.src, 0), 0))
+                if moved <= 0:
+                    continue
+                tier_bytes[m.src] -= moved
+                tier_bytes[m.dst] = tier_bytes.get(m.dst, 0) + moved
+            out[obj] = [(t, b / total) for t, b in tier_bytes.items()
+                        if b > 0]
+        return out

@@ -13,6 +13,9 @@ The paper's policies (§V, §VI):
   with room (Linux default without numactl).
 * ``UniformInterleave``    — Linux round-robin page interleave across a tier
   set: every object spread proportional to nothing — equal page shares.
+* ``WeightedInterleave``   — Linux weighted-interleave analogue: per-node
+  shares from explicit weights (usually topology path bandwidth; see
+  ``interleave.distance_weighted_policy``).
 * ``ObjectLevelInterleave``— THE PAPER'S CONTRIBUTION (§V-B): objects passing
   the two selection criteria (≥10% footprint, access-intensive, not
   latency-sensitive) are interleaved across fast+slow with *bandwidth-
@@ -142,6 +145,67 @@ class UniformInterleave(Policy):
         return PlacementPlan(shares, self.name, placed)
 
 
+class WeightedInterleave(Policy):
+    """Linux weighted-interleave analogue: per-node page shares set by
+    explicit weights instead of round-robin.
+
+    The kernel's ``/sys/kernel/mm/mempolicy/weighted_interleave`` knobs
+    expect an operator to type in per-node weights; here they usually
+    come from the topology (``interleave.distance_weighted_policy``
+    sets them ∝ each tier's path-capped bandwidth from the compute
+    origin), which is what makes interleaving stop *undermining*
+    performance when one node is a 38 GB/s far-socket CXL card next to
+    a 460 GB/s LDRAM (Sec. V takeaway).
+    """
+
+    def __init__(self, weights: Mapping[str, float],
+                 name: Optional[str] = None):
+        w = {t: float(v) for t, v in weights.items() if v > 0}
+        if not w:
+            raise ValueError("weighted interleave needs positive weights")
+        total = sum(w.values())
+        self.weights = {t: v / total for t, v in w.items()}
+        self.name = name or ("weighted_interleave[" + "+".join(
+            f"{t}:{v:.2f}" for t, v in sorted(self.weights.items())) + "]")
+
+    def plan(self, objs, tiers):
+        names = [t for t in self.weights if t in tiers]
+        if not names:
+            raise ValueError("no weighted tiers present in tier set")
+        free = {t: int(tiers[t].capacity_GiB * GiB) for t in names}
+        shares: Dict[str, List[Share]] = {}
+        placed = {k: 0 for k in tiers}
+        for o in objs:
+            live = [t for t in names if free[t] > 0]
+            if not live:           # everything full: overflow heaviest
+                live = [max(names, key=lambda t: self.weights[t])]
+            wsum = sum(self.weights[t] for t in live)
+            taken: Dict[str, int] = {}
+            for t in live:
+                want = int(o.nbytes * self.weights[t] / wsum)
+                taken[t] = min(want, max(free[t], 0)) if free[t] > 0 \
+                    else want
+            rem = o.nbytes - sum(taken.values())
+            # spill the rounding/capacity remainder by descending weight
+            for t in sorted(live, key=lambda t: -self.weights[t]):
+                if rem <= 0:
+                    break
+                extra = min(rem, max(free[t] - taken[t], 0))
+                taken[t] += extra
+                rem -= extra
+            if rem > 0:            # over capacity everywhere: heaviest
+                taken[max(live, key=lambda t: self.weights[t])] += rem
+            sh = []
+            for t, b in taken.items():
+                if b <= 0:
+                    continue
+                sh.append((t, b / max(o.nbytes, 1)))
+                free[t] -= b
+                placed[t] += b
+            shares[o.name] = sh
+        return PlacementPlan(shares, self.name, placed)
+
+
 class ObjectLevelInterleave(Policy):
     """The paper's §V-B object-level interleaving (OLI).
 
@@ -262,6 +326,9 @@ def make_policy(spec: str, tiers: Mapping[str, MemoryTier],
         return UniformInterleave([fast] + slow)
     if spec.startswith("uniform:"):
         return UniformInterleave(spec.split(":", 1)[1].split("+"))
+    if spec.startswith("weighted:"):   # weighted:LDRAM=3+CXL=1
+        pairs = [kv.split("=") for kv in spec.split(":", 1)[1].split("+")]
+        return WeightedInterleave({k: float(v) for k, v in pairs})
     if spec == "oli":
         return ObjectLevelInterleave(fast, slow)
     if spec == "oli_bw":

@@ -16,6 +16,14 @@ Adaptive object-level re-interleaving from observed access telemetry
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
         --scheduler continuous --policy static --adaptive \
         --replan-every 8 --sample-rate 1.0
+
+Price placements over a real machine topology (repro.topology) instead
+of a flat tier list — e.g. the paper's system A with the CXL card
+behind the far socket:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+        --scheduler continuous --policy static --adaptive \
+        --topology far-socket
 """
 from __future__ import annotations
 
@@ -83,7 +91,8 @@ def run_continuous(args, cfg, params) -> None:
         max_context=args.prompt_len + args.new_tokens + args.block_tokens,
         policy=args.policy, num_blocks=args.num_blocks,
         fast_block_budget=args.fast_blocks, adaptive=args.adaptive,
-        replan_every=args.replan_every, sample_rate=args.sample_rate)
+        replan_every=args.replan_every, sample_rate=args.sample_rate,
+        topology=args.topology)
     eng = ServingEngine(cfg, params, sv)
     rs = np.random.RandomState(0)
     lens = [args.prompt_len, max(args.prompt_len // 2, 4)]
@@ -116,7 +125,9 @@ def run_continuous(args, cfg, params) -> None:
           f"phase_shifts={int(t['phase_shifts'])}"
           + (f" replans={int(t['replans_applied'])}/"
              f"{int(t['replans_considered'])} "
-             f"moved={t['moved_bytes']/1e6:.2f} MB"
+             f"moved={t['moved_bytes']/1e6:.2f} MB "
+             f"denied={t['denied_bytes']/1e6:.2f} MB "
+             f"plan_cache_hits={int(t['plan_cache_hits'])}"
              if args.adaptive else ""))
     for rid, row in rep.per_request:
         print(f"  req{rid}: prompt={int(row['prompt_tokens'])} "
@@ -162,7 +173,22 @@ def main(argv=None):
                     type=_rate("--sample-rate"), default=1.0,
                     help="telemetry sampling rate (fraction of cache "
                          "lines; 1.0 = full instrumentation)")
+    from ..topology import TOPOLOGY_CHOICES
+    ap.add_argument("--topology", default=None,
+                    choices=list(TOPOLOGY_CHOICES),
+                    help="price placements over this machine topology "
+                         "(hop latency, bottleneck bandwidth, shared-"
+                         "link contention) instead of a flat tier list")
     args = ap.parse_args(argv)
+
+    if args.topology:
+        if args.scheduler != "continuous" or not args.adaptive:
+            ap.error("--topology only takes effect with --scheduler "
+                     "continuous --adaptive (the adaptive replanner is "
+                     "what prices placements over the topology)")
+        from ..topology import build_topology
+        for line in build_topology(args.topology).describe():
+            print(line)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(
         args.arch)

@@ -44,7 +44,8 @@ class _TrainTelemetry:
     exercises the executing path.
     """
 
-    def __init__(self, params, replan_every: int, sample_rate: float):
+    def __init__(self, params, replan_every: int, sample_rate: float,
+                 topology: str = None):
         from ..core.tiers import tpu_v5e_tiers
         from ..telemetry import (AccessSampler, AccessTrace, PhaseDetector,
                                  AdaptiveReplanner, ReplanConfig,
@@ -53,12 +54,24 @@ class _TrainTelemetry:
         self.sampler = AccessSampler(
             self.trace, SamplerConfig(sample_rate=sample_rate))
         self.phases = PhaseDetector(self.trace)
-        tiers = {k: v for k, v in tpu_v5e_tiers().items()
-                 if k in ("HBM", "HOST")}
+        graph, fast = None, "HBM"
+        if topology:
+            from ..topology import build_topology
+            tb = build_topology(topology)
+            graph, fast = tb.graph, tb.fast
+            tiers = {k: v for k, v in tb.tiers.items()
+                     if v.kind != "nvme"}
+            for line in tb.describe():
+                print(line)
+        else:
+            tiers = {k: v for k, v in tpu_v5e_tiers().items()
+                     if k in ("HBM", "HOST")}
+        self.fast = fast
         self.replanner = AdaptiveReplanner(
-            self.trace, tiers, "HBM",
+            self.trace, tiers, fast,
             cfg=ReplanConfig(replan_every=max(replan_every, 1),
-                             window_epochs=max(replan_every, 1)))
+                             window_epochs=max(replan_every, 1)),
+            topology=graph)
         self.param_bytes = sum(
             p.nbytes for p in jax.tree.leaves(params))
         self.nbytes = {
@@ -72,7 +85,8 @@ class _TrainTelemetry:
         emit_step_traffic(self.sampler, self.param_bytes)
         self.phases.update()
         d = self.replanner.maybe_replan(step + 1, self.nbytes,
-                                        pin_fast=("params_bf16",))
+                                        pin_fast=("params_bf16",),
+                                        phase=self.phases.label)
         if d is not None and d.reason != "initial":
             print(f"  replan@{step}: {'applied' if d.applied else 'kept'} "
                   f"({d.reason}) old={d.old_step_s*1e3:.1f} ms "
@@ -86,7 +100,9 @@ class _TrainTelemetry:
               f"phase={self.phases.label} "
               f"(shifts={len(self.phases.shifts)}), "
               f"replans={self.replanner.replans_applied}/"
-              f"{len(self.replanner.decisions)}")
+              f"{len(self.replanner.decisions)} "
+              f"(cache_hits={self.replanner.plan_cache_hits}), "
+              f"tier_order={'>'.join(self.replanner.tier_order)}")
 
 
 def main(argv=None):
@@ -112,10 +128,19 @@ def main(argv=None):
                          "lines); 1.0 = full instrumentation, right "
                          "for smoke-scale traffic — drop toward "
                          "PEBS-like 1e-6 on production-size models")
+    from ..topology import TOPOLOGY_CHOICES
+    ap.add_argument("--topology", default=None,
+                    choices=list(TOPOLOGY_CHOICES),
+                    help="with --adaptive: plan over this machine "
+                         "topology (hop distance, link bandwidth) "
+                         "instead of the flat HBM/HOST pair")
     args = ap.parse_args(argv)
     if not 0.0 < args.sample_rate <= 1.0:
         ap.error(f"--sample-rate must be in (0, 1], "
                  f"got {args.sample_rate}")
+    if args.topology and not args.adaptive:
+        ap.error("--topology only takes effect with --adaptive (the "
+                 "replanner is what plans over the topology)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(
         args.arch)
@@ -149,7 +174,7 @@ def main(argv=None):
                   f"{args.mesh})")
 
         telem = (_TrainTelemetry(params, args.replan_every,
-                                 args.sample_rate)
+                                 args.sample_rate, args.topology)
                  if args.adaptive else None)
         for i in range(start, args.steps):
             b = next(it)

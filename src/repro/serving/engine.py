@@ -167,6 +167,10 @@ class ServingConfig:
     adaptive: bool = False
     replan_every: int = 8   # iterations between replans (<= 0 disables)
     sample_rate: float = 1.0
+    # named repro.topology testbed: the replanner prices the pool's
+    # memory kinds over that machine's hop topology (path latency,
+    # bottleneck bandwidth, shared-link move serialization)
+    topology: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -178,17 +182,25 @@ class ServingReport:
     telemetry: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
-def kind_tiers(pool: PagedKVPool) -> Dict[str, MemoryTier]:
+def kind_tiers(pool: PagedKVPool,
+               fast_base: Optional[MemoryTier] = None,
+               slow_base: Optional[MemoryTier] = None
+               ) -> Dict[str, MemoryTier]:
     """MemoryTier descriptors for the pool's memory kinds, with
     capacities set from the pool's block budgets — what the adaptive
-    replanner plans against."""
+    replanner plans against.  ``fast_base``/``slow_base`` override the
+    TPU defaults (e.g. a topology testbed's device-local tiers, whose
+    hop latency the graph supplies)."""
     base = tpu_v5e_tiers()
     bn = pool.block_nbytes()
+    if fast_base is None:
+        fast_base = base["HBM"]
+    if slow_base is None:
+        slow_base = (base["HOST"] if pool.slow_kind == "pinned_host"
+                     else base["HOST_UNPINNED"])
     fast = dataclasses.replace(
-        base["HBM"], name=FAST_KIND,
+        fast_base, name=FAST_KIND,
         capacity_GiB=max(pool.fast_block_budget, 1) * bn / GiB)
-    slow_base = (base["HOST"] if pool.slow_kind == "pinned_host"
-                 else base["HOST_UNPINNED"])
     slow = dataclasses.replace(
         slow_base, name=pool.slow_kind, kind="host",
         capacity_GiB=max(pool.num_blocks, 1) * bn / GiB)
@@ -243,14 +255,29 @@ class ServingEngine:
         self.phases = PhaseDetector(self.trace)
         self.replanner: Optional[AdaptiveReplanner] = None
         if sv.adaptive:
-            tiers = kind_tiers(self.pool)
+            topo = None
+            if sv.topology:
+                from ..topology import build_topology
+                tb = build_topology(sv.topology)
+                topo = tb.graph
+                # the pool's memory kinds ride the testbed's fast node
+                # and its capacity-expander (CXL-class) node
+                topo.alias_tier(tb.fast, FAST_KIND)
+                topo.alias_tier(tb.capacity_tier, self.pool.slow_kind)
+                tiers = kind_tiers(self.pool,
+                                   fast_base=tb.tiers[tb.fast],
+                                   slow_base=tb.tiers[tb.capacity_tier])
+            else:
+                tiers = kind_tiers(self.pool)
             self.replanner = AdaptiveReplanner(
                 self.trace, tiers, FAST_KIND,
                 cfg=ReplanConfig(replan_every=max(sv.replan_every, 1),
                                  window_epochs=max(sv.replan_every, 1)),
                 executor=MigrationExecutor(tiers,
-                                           move_fn=self._move_seq_blocks),
-                default_tier=self.pool.slow_kind)
+                                           move_fn=self._move_seq_blocks,
+                                           topology=topo),
+                default_tier=self.pool.slow_kind,
+                topology=topo)
         self._prefill = jax.jit(steps_mod.make_prefill_step(cfg))
         self._decode = jax.jit(functools.partial(_paged_decode, cfg, bt))
         self._next_rid = 0
@@ -424,7 +451,10 @@ class ServingEngine:
         nbytes = {f"seq{sid}": len(tbl) * bn
                   for sid, tbl in self.pool.table.items() if tbl}
         if nbytes:
-            self.replanner.maybe_replan(self._step, nbytes, force=True)
+            # phase-conditioned plan cache: recurring detector labels
+            # (prefill-heavy vs decode-heavy mixes) reuse their plan
+            self.replanner.maybe_replan(self._step, nbytes, force=True,
+                                        phase=self.phases.label)
 
     def telemetry_summary(self) -> Dict[str, float]:
         out: Dict[str, float] = {

@@ -20,7 +20,21 @@ re-plans *at the object level* from observed traffic instead:
      so noise-level wins never trigger churn (the failure mode that
      makes AutoNUMA *hurt* in PMO 4);
   4. execute the delta through the executor's ``move_fn`` (e.g.
-     PagedKVPool.migrate), which may partially deny moves on capacity.
+     PagedKVPool.migrate), which may partially deny moves on capacity —
+     the *realized* residency (not the intended plan) becomes the new
+     live plan, so the next costing pass prices reality.
+
+Distance awareness: with a ``topology`` (repro.topology), the planner's
+tier view is distance-adjusted from the compute ``origin`` — a CXL card
+behind the far socket sorts *after* remote DRAM, spill order prefers
+cheap same-socket placements, and the executor prices deltas over their
+actual paths (moves sharing a bottleneck link serialize).
+
+Phase cache: recurring phases (the detector labels them) skip
+re-planning — ``maybe_replan(..., phase=sig)`` reuses the plan last
+applied for that signature and waives the hysteresis margin (the plan
+already proved itself), so a periodic workload pays the planning and
+hesitation cost once per distinct phase, not once per recurrence.
 
 Objects that appear mid-run (new sequences, freshly allocated state)
 are costed as if resident on ``default_tier`` — that is where a
@@ -29,7 +43,8 @@ first-touch allocator actually put them.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence
+from typing import (Dict, Hashable, Iterable, List, Mapping, Optional,
+                    Tuple)
 
 from ..core.costmodel import plan_step_cost
 from ..core.migration import MigrationExecutor, MigrationStats
@@ -55,11 +70,13 @@ class ReplanDecision:
 
     epoch: int
     applied: bool
-    reason: str                    # initial | win | no_win | migration_cost
+    reason: str         # initial | win | cached_win | no_win | migration_cost
     old_step_s: float = 0.0
     new_step_s: float = 0.0
     migration_s: float = 0.0
-    moved_bytes: int = 0
+    moved_bytes: int = 0           # bytes actually moved when applied
+    denied_bytes: int = 0          # intended-but-denied bytes (capacity)
+    cached: bool = False           # candidate came from the phase cache
 
     @property
     def predicted_speedup(self) -> float:
@@ -75,21 +92,34 @@ class AdaptiveReplanner:
                  cfg: Optional[ReplanConfig] = None,
                  executor: Optional[MigrationExecutor] = None,
                  default_tier: Optional[str] = None,
-                 initial_plan: Optional[PlacementPlan] = None):
+                 initial_plan: Optional[PlacementPlan] = None,
+                 topology=None, origin: Optional[str] = None):
         self.trace = trace
-        self.tiers = dict(tiers)
+        self.topology = topology
+        # distance-adjusted view: path latency/bandwidth folded into the
+        # tier descriptors, so every ordering and costing below honors
+        # the hop topology (ROADMAP: NUMA-distance-aware replan)
+        self.tiers = (dict(topology.effective_tiers(tiers, origin))
+                      if topology is not None else dict(tiers))
         self.fast = fast
-        slow = [t for t in self.tiers
+        self.tier_order = _tier_order(self.tiers)
+        slow = [t for t in self.tier_order
                 if t != fast and self.tiers[t].kind != "nvme"]
         self.policy = policy or ObjectLevelInterleave(
             fast, slow, bandwidth_weighted=True)
         self.cfg = cfg or ReplanConfig()
-        self.executor = executor or MigrationExecutor(self.tiers)
-        order = _tier_order(self.tiers)
-        self.default_tier = default_tier or order[-1]
+        self.executor = executor or MigrationExecutor(self.tiers,
+                                                      topology=topology)
+        self.default_tier = default_tier or self.tier_order[-1]
         self.plan = initial_plan
         self.stats = MigrationStats()
         self.decisions: List[ReplanDecision] = []
+        # phase signature -> (plan, proven): `proven` means the plan
+        # once cleared the full hysteresis gate, so recurrences may
+        # waive the margin; an initially-adopted plan has not
+        self._phase_plans: Dict[Hashable,
+                                Tuple[PlacementPlan, bool]] = {}
+        self.plan_cache_hits = 0
 
     # ------------------------------------------------------------------ #
     @property
@@ -113,9 +143,14 @@ class AdaptiveReplanner:
     # ------------------------------------------------------------------ #
     def maybe_replan(self, epoch: int, nbytes: Mapping[str, int],
                      pin_fast: Iterable[str] = (),
-                     force: bool = False) -> Optional[ReplanDecision]:
+                     force: bool = False,
+                     phase: Optional[Hashable] = None
+                     ) -> Optional[ReplanDecision]:
         """Attempt one replan at `epoch`; returns the decision or None
-        (not due yet / no observed traffic)."""
+        (not due yet / no observed traffic).  ``phase`` is an optional
+        recurrence signature (e.g. the PhaseDetector label): plans that
+        won under a signature are cached and reused without re-running
+        the policy or the hysteresis margin."""
         cfg = self.cfg
         if not force and (cfg.replan_every <= 0
                           or epoch % cfg.replan_every != 0):
@@ -124,11 +159,24 @@ class AdaptiveReplanner:
             nbytes, window=cfg.window_epochs, pin_fast=pin_fast)
         if not any(o.bytes_per_step > 0 for o in objs):
             return None
-        new_plan = self.policy.plan(objs, self.tiers)
+        cached, proven = (self._phase_plans.get(phase, (None, False))
+                          if phase is not None else (None, False))
+        if cached is not None and any(n not in cached.shares
+                                      for n in nbytes):
+            cached = None      # inventory drifted: the cached plan is
+            #                    for a different object population
+        if cached is not None:
+            new_plan = cached
+            self.plan_cache_hits += 1
+        else:
+            new_plan = self.policy.plan(objs, self.tiers)
 
         if self.plan is None:
             self.plan = new_plan
-            d = ReplanDecision(epoch, True, "initial")
+            if phase is not None:
+                self._phase_plans[phase] = (new_plan, False)
+            d = ReplanDecision(epoch, True, "initial",
+                               cached=cached is not None)
             self.decisions.append(d)
             return d
 
@@ -143,20 +191,37 @@ class AdaptiveReplanner:
         delta = self.executor.delta(old_shares, new_plan.shares, nbytes)
         mig_s = self.executor.cost_s(delta)
         d = ReplanDecision(epoch, False, "no_win", old_cost, new_cost,
-                           mig_s, delta.total_bytes)
-        if old_cost < new_cost * cfg.min_speedup:
+                           mig_s, delta.total_bytes,
+                           cached=cached is not None)
+        # a cached plan that already cleared the hysteresis bar for this
+        # phase re-applies on any strict win; initially-adopted (never
+        # win-tested) plans keep the full margin so noise-level wins
+        # cannot churn (the PMO-4 failure mode)
+        min_speedup = (1.0 if cached is not None and proven
+                       else cfg.min_speedup)
+        if old_cost < new_cost * min_speedup:
             pass                          # hysteresis: win too small
         elif (old_cost - new_cost) * cfg.amortize_steps <= mig_s:
             d.reason = "migration_cost"
         else:
             self.executor.execute(delta, self.stats)
-            # keep the old shares for objects the new plan did not touch
+            done = sum(b for _, b in self.executor.last_moves)
+            # feedback on denied moves: adopt the residency that was
+            # actually realized, not the one the policy intended
+            realized = MigrationExecutor.realized_shares(
+                old_shares, self.executor.last_moves, nbytes)
             merged = dict(old_shares)
-            merged.update(new_plan.shares)
+            merged.update(realized)
             self.plan = PlacementPlan(merged, new_plan.policy,
                                       new_plan.tier_bytes)
             d.applied = True
-            d.reason = "win"
+            d.reason = "cached_win" if cached is not None else "win"
+            d.moved_bytes = done
+            d.denied_bytes = max(delta.total_bytes - done, 0)
+            if phase is not None:
+                # cache the *intended* plan: it is the phase's target
+                # placement; denials are per-occurrence capacity facts
+                self._phase_plans[phase] = (new_plan, True)
         self.decisions.append(d)
         return d
 
@@ -167,5 +232,7 @@ class AdaptiveReplanner:
             "replans_considered": float(len(self.decisions)),
             "replans_applied": float(len(applied)),
             "moved_bytes": float(self.stats.migrated_bytes),
+            "denied_bytes": float(sum(d.denied_bytes for d in applied)),
             "migration_s": float(sum(d.migration_s for d in applied)),
+            "plan_cache_hits": float(self.plan_cache_hits),
         }

@@ -1,0 +1,21 @@
+"""repro.topology: hardware topology graph + distance-aware costing.
+
+Makes *where memory sits* first-class: a graph of sockets / NUMA nodes /
+CXL devices / TPU chips joined by UPI / PCIe / CXL / ICI links, with
+shortest-path hop-latency and bottleneck-bandwidth queries, a shared-
+link contention model, and builders for the paper's vendor testbeds
+plus the TPU adaptation.  ``effective_tiers`` is the bridge into the
+analytic layer: distance-adjusted MemoryTier copies that the cost
+model, migration executor, and adaptive replanner price against.
+"""
+from .graph import (Flow, FlowResult, LinkKey, TopologyGraph, TopoLink,
+                    TopoNode)
+from .builders import (TOPOLOGY_CHOICES, Testbed, build_topology,
+                       tpu_pod, two_socket_system)
+
+__all__ = [
+    "Flow", "FlowResult", "LinkKey", "TopologyGraph", "TopoLink",
+    "TopoNode",
+    "TOPOLOGY_CHOICES", "Testbed", "build_topology", "tpu_pod",
+    "two_socket_system",
+]

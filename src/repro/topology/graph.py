@@ -1,0 +1,351 @@
+"""Hardware topology graph: where memory actually sits in the machine.
+
+The paper's characterization hinges on *position*, not just device
+class: a CXL card behind the far socket pays an extra UPI hop (Fig. 2),
+interleaving spreads traffic across NUMA nodes with unequal bandwidth,
+and "Dissecting CXL Memory Performance at Scale" / CXL-Interference
+show that shared-link contention dominates realized performance.  The
+seed collapsed all of that into a scalar ``hop_latency_ns`` per tier;
+this module makes the topology first-class:
+
+  * ``TopologyGraph`` — nodes (sockets, NUMA/SNC nodes, CXL devices,
+    TPU chips/hosts) and undirected links (UPI/xGMI, PCIe, CXL, ICI),
+    each link carrying the *additional* latency of traversing it and
+    its bandwidth;
+  * shortest-path queries: ``hop_latency_ns`` (sum of link latencies),
+    ``path_bw_GBps`` (bottleneck link bandwidth);
+  * ``effective_tiers`` — distance-adjusted ``MemoryTier`` copies as
+    seen from a compute origin: path latency folded into
+    ``hop_latency_ns``, peak bandwidth capped by the path bottleneck
+    (the knee of the Fig. 3 curve is preserved by scaling the per-
+    stream bandwidth with the peak);
+  * a shared-link contention model (``contended_flows``): concurrent
+    flows fair-share each link's bandwidth and see M/M/1-style loaded
+    latency on it, so two tiers reached through one UPI hop interfere
+    even though their controllers are independent.
+
+Tier descriptors handed to this graph must be *device-local*: a remote
+DRAM node has the same DIMM latency as a local one — the interconnect
+carries the difference.  ``builders`` constructs such normalized tier
+sets for the paper's testbeds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from ..core.tiers import MemoryTier
+
+LinkKey = Tuple[str, str]
+
+
+def _key(a: str, b: str) -> LinkKey:
+    return (a, b) if a <= b else (b, a)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopoNode:
+    """One location in the machine (socket, NUMA node, device, chip)."""
+
+    name: str
+    kind: str = "socket"     # socket | numa | cxl | nvme | chip | host
+    tier: Optional[str] = None    # memory tier resident at this node
+
+
+@dataclasses.dataclass(frozen=True)
+class TopoLink:
+    """Undirected interconnect edge.
+
+    ``latency_ns`` is the *extra* latency of crossing this link (the
+    device-local latency lives in the MemoryTier), ``bw_GBps`` its
+    usable bandwidth.
+    """
+
+    a: str
+    b: str
+    latency_ns: float
+    bw_GBps: float
+    kind: str = "link"       # upi | pcie | cxl | ici | local
+
+    @property
+    def key(self) -> LinkKey:
+        return _key(self.a, self.b)
+
+    def other(self, node: str) -> str:
+        return self.b if node == self.a else self.a
+
+
+@dataclasses.dataclass(frozen=True)
+class Flow:
+    """One offered traffic stream between two nodes (for contention)."""
+
+    src: str
+    dst: str
+    offered_GBps: float
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowResult:
+    """Realized performance of one flow under shared-link contention."""
+
+    achieved_GBps: float
+    latency_ns: float
+    bottleneck: Optional[LinkKey]
+
+
+class TopologyGraph:
+    """Nodes + links with shortest-path and contention queries."""
+
+    def __init__(self, name: str = "topology",
+                 origin: Optional[str] = None):
+        self.name = name
+        self.nodes: Dict[str, TopoNode] = {}
+        self.links: Dict[LinkKey, TopoLink] = {}
+        self._adj: Dict[str, List[TopoLink]] = {}
+        self.tier_nodes: Dict[str, str] = {}
+        self.origin = origin          # default compute location
+        # memoized shortest paths — the cost model queries the same
+        # (src, dst) pairs once per candidate plan (policy_search runs
+        # thousands); invalidated whenever the graph grows
+        self._path_cache: Dict[Tuple[str, str], List[TopoLink]] = {}
+
+    # ------------------------------------------------------------------ #
+    # construction                                                       #
+    # ------------------------------------------------------------------ #
+    def add_node(self, name: str, kind: str = "socket",
+                 tier: Optional[str] = None) -> TopoNode:
+        if name in self.nodes:
+            raise ValueError(f"duplicate node {name!r}")
+        node = TopoNode(name, kind, tier)
+        self.nodes[name] = node
+        self._adj[name] = []
+        self._path_cache.clear()
+        if tier is not None:
+            if tier in self.tier_nodes:
+                raise ValueError(f"tier {tier!r} already mapped to "
+                                 f"{self.tier_nodes[tier]!r}")
+            self.tier_nodes[tier] = name
+        if self.origin is None:
+            self.origin = name
+        return node
+
+    def add_link(self, a: str, b: str, latency_ns: float, bw_GBps: float,
+                 kind: str = "link") -> TopoLink:
+        for n in (a, b):
+            if n not in self.nodes:
+                raise ValueError(f"unknown node {n!r}")
+        if bw_GBps <= 0:
+            raise ValueError("link bandwidth must be positive")
+        link = TopoLink(a, b, float(latency_ns), float(bw_GBps), kind)
+        if link.key in self.links:
+            raise ValueError(f"duplicate link {link.key}")
+        self.links[link.key] = link
+        self._adj[a].append(link)
+        self._adj[b].append(link)
+        self._path_cache.clear()
+        return link
+
+    def alias_tier(self, tier: str, alias: str) -> None:
+        """Expose an existing tier's node under a second tier name.
+
+        Lets a consumer with its own tier naming (e.g. the serving
+        pool's ``device``/``pinned_host`` memory kinds) reuse a built
+        topology without renaming its nodes."""
+        if tier not in self.tier_nodes:
+            raise KeyError(f"unknown tier {tier!r}")
+        self.tier_nodes[alias] = self.tier_nodes[tier]
+
+    def node_of(self, tier: str) -> Optional[str]:
+        return self.tier_nodes.get(tier)
+
+    # ------------------------------------------------------------------ #
+    # shortest paths (Dijkstra on latency; hop count breaks ties)        #
+    # ------------------------------------------------------------------ #
+    def path(self, src: str, dst: str) -> List[TopoLink]:
+        """Minimum-latency link sequence from ``src`` to ``dst``."""
+        for n in (src, dst):
+            if n not in self.nodes:
+                raise KeyError(f"unknown node {n!r}")
+        if src == dst:
+            return []
+        hit = self._path_cache.get((src, dst))
+        if hit is not None:
+            return list(hit)
+        dist: Dict[str, Tuple[float, int]] = {src: (0.0, 0)}
+        prev: Dict[str, TopoLink] = {}
+        heap: List[Tuple[float, int, str]] = [(0.0, 0, src)]
+        while heap:
+            d, hops, node = heapq.heappop(heap)
+            if (d, hops) > dist.get(node, (float("inf"), 0)):
+                continue
+            if node == dst:
+                break
+            for link in self._adj[node]:
+                nxt = link.other(node)
+                cand = (d + link.latency_ns, hops + 1)
+                if cand < dist.get(nxt, (float("inf"), 1 << 30)):
+                    dist[nxt] = cand
+                    prev[nxt] = link
+                    heapq.heappush(heap, (cand[0], cand[1], nxt))
+        if dst not in prev and dst not in dist:
+            raise ValueError(f"no path {src!r} -> {dst!r}")
+        out: List[TopoLink] = []
+        node = dst
+        while node != src:
+            link = prev[node]
+            out.append(link)
+            node = link.other(node)
+        out.reverse()
+        self._path_cache[(src, dst)] = out
+        return list(out)
+
+    def hop_latency_ns(self, src: str, dst: str) -> float:
+        return sum(l.latency_ns for l in self.path(src, dst))
+
+    def path_bw_GBps(self, src: str, dst: str) -> float:
+        links = self.path(src, dst)
+        if not links:
+            return float("inf")
+        return min(l.bw_GBps for l in links)
+
+    def bottleneck(self, src: str, dst: str) -> Optional[TopoLink]:
+        links = self.path(src, dst)
+        if not links:
+            return None
+        return min(links, key=lambda l: l.bw_GBps)
+
+    # ------------------------------------------------------------------ #
+    # tier-level views                                                   #
+    # ------------------------------------------------------------------ #
+    def _origin(self, origin: Optional[str]) -> str:
+        o = origin or self.origin
+        if o is None:
+            raise ValueError("no origin node set")
+        return o
+
+    def tier_links(self, tier: str, origin: Optional[str] = None
+                   ) -> List[TopoLink]:
+        """Links traversed reaching ``tier`` from the compute origin."""
+        node = self.tier_nodes.get(tier)
+        if node is None:
+            return []
+        return self.path(self._origin(origin), node)
+
+    def tier_path(self, src_tier: str, dst_tier: str) -> List[TopoLink]:
+        """Links a tier-to-tier copy traverses (empty if unmapped)."""
+        a, b = self.tier_nodes.get(src_tier), self.tier_nodes.get(dst_tier)
+        if a is None or b is None:
+            return []
+        return self.path(a, b)
+
+    def tier_latency_ns(self, tier: str, origin: Optional[str] = None
+                        ) -> float:
+        return sum(l.latency_ns for l in self.tier_links(tier, origin))
+
+    def tier_bw_GBps(self, tier: str, origin: Optional[str] = None
+                     ) -> float:
+        links = self.tier_links(tier, origin)
+        if not links:
+            return float("inf")
+        return min(l.bw_GBps for l in links)
+
+    def effective_tiers(self, tiers: Mapping[str, MemoryTier],
+                        origin: Optional[str] = None
+                        ) -> Dict[str, MemoryTier]:
+        """Distance-adjusted tier descriptors as seen from ``origin``.
+
+        Path latency replaces ``hop_latency_ns``; the path bottleneck
+        caps peak bandwidth (per-stream bandwidth scales with it so the
+        Fig. 3 saturation knee is preserved).  Tiers without a node in
+        the graph pass through unchanged.
+        """
+        out: Dict[str, MemoryTier] = {}
+        for name, tier in tiers.items():
+            if name not in self.tier_nodes:
+                out[name] = tier
+                continue
+            lat = self.tier_latency_ns(name, origin)
+            bw = min(self.tier_bw_GBps(name, origin), tier.peak_bw_GBps)
+            scale = bw / tier.peak_bw_GBps
+            out[name] = dataclasses.replace(
+                tier, hop_latency_ns=lat, peak_bw_GBps=bw,
+                stream_bw_GBps=tier.stream_bw_GBps * scale)
+        return out
+
+    def tier_distance_order(self, tiers: Mapping[str, MemoryTier],
+                            origin: Optional[str] = None) -> List[str]:
+        """Tier names by effective distance (latency, then bandwidth)."""
+        eff = self.effective_tiers(tiers, origin)
+        return sorted(eff, key=lambda t: (
+            eff[t].unloaded_latency_ns + eff[t].hop_latency_ns,
+            -eff[t].peak_bw_GBps))
+
+    def tier_weights(self, tiers: Mapping[str, MemoryTier],
+                     origin: Optional[str] = None) -> Dict[str, float]:
+        """Interleave weights ∝ effective (path-capped) peak bandwidth —
+        the Linux weighted-interleave analogue, with weights measured
+        from the topology instead of configured by hand.  NVMe-class
+        tiers are excluded (they are spill, not interleave, targets)."""
+        eff = self.effective_tiers(tiers, origin)
+        w = {t: v.peak_bw_GBps for t, v in eff.items()
+             if v.kind != "nvme"}
+        total = sum(w.values())
+        if total <= 0:
+            raise ValueError("no interleavable bandwidth in tier set")
+        return {t: v / total for t, v in w.items()}
+
+    # ------------------------------------------------------------------ #
+    # contention (M/M/1-style queueing on shared links)                  #
+    # ------------------------------------------------------------------ #
+    def contended_flows(self, flows: Sequence[Flow],
+                        max_rho: float = 0.95) -> List[FlowResult]:
+        """Realized bandwidth/latency per flow when run *concurrently*.
+
+        Each link fair-shares its bandwidth over the offered loads
+        crossing it (proportional to demand), and charges an M/M/1
+        loaded-latency factor ``1 / (1 - rho)`` with the utilization
+        clamped at ``max_rho`` — the same queueing shape as
+        ``MemoryTier.loaded_latency`` (Fig. 4), applied per link.
+        """
+        paths = [self.path(f.src, f.dst) for f in flows]
+        offered: Dict[LinkKey, float] = {}
+        for f, links in zip(flows, paths):
+            for l in links:
+                offered[l.key] = offered.get(l.key, 0.0) + f.offered_GBps
+        out: List[FlowResult] = []
+        for f, links in zip(flows, paths):
+            bw = f.offered_GBps
+            lat = 0.0
+            bneck: Optional[LinkKey] = None
+            for l in links:
+                total = offered[l.key]
+                share = (l.bw_GBps * f.offered_GBps / total
+                         if total > l.bw_GBps else f.offered_GBps)
+                if share < bw:
+                    bw = share
+                    bneck = l.key
+                rho = min(total / l.bw_GBps, max_rho)
+                lat += l.latency_ns / (1.0 - rho)
+            out.append(FlowResult(bw, lat, bneck))
+        return out
+
+    def describe(self, tiers: Optional[Mapping[str, MemoryTier]] = None,
+                 origin: Optional[str] = None) -> List[str]:
+        """Human-readable summary lines (CLI --topology banner)."""
+        o = self._origin(origin)
+        lines = [f"topology {self.name}: {len(self.nodes)} nodes, "
+                 f"{len(self.links)} links, origin={o}"]
+        for tier, node in sorted(self.tier_nodes.items()):
+            lat = self.tier_latency_ns(tier, o)
+            bw = self.tier_bw_GBps(tier, o)
+            hops = len(self.tier_links(tier, o))
+            extra = ""
+            if tiers and tier in tiers:
+                eff = self.effective_tiers({tier: tiers[tier]}, o)[tier]
+                extra = (f"  eff_latency={eff.unloaded_latency_ns + eff.hop_latency_ns:.0f} ns"
+                         f" eff_bw={eff.peak_bw_GBps:.1f} GB/s")
+            bw_s = "local" if bw == float("inf") else f"{bw:.1f} GB/s"
+            lines.append(f"  {tier:14s} @ {node:12s} hops={hops} "
+                         f"+{lat:.0f} ns path_bw={bw_s}{extra}")
+        return lines

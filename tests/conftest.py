@@ -11,3 +11,35 @@ if "host_platform_device_count" in flags:
 import jax  # noqa: E402
 
 jax.config.update("jax_platform_name", "cpu")
+
+
+def dual_cxl_machine():
+    """Shared fixture: system-A-like box with one DRAM node and one CXL
+    card behind EACH socket — used to exercise origin-dependent tier
+    ordering and disjoint-path move overlap."""
+    import dataclasses
+
+    from repro.core import MemoryTier
+    from repro.topology import TopologyGraph
+
+    g = TopologyGraph("dual-cxl", origin="socket0")
+    g.add_node("socket0")
+    g.add_node("socket1")
+    g.add_node("numa0", kind="numa", tier="DRAM0")
+    g.add_node("numa1", kind="numa", tier="DRAM1")
+    g.add_node("cxl0", kind="cxl", tier="CXL0")
+    g.add_node("cxl1", kind="cxl", tier="CXL1")
+    g.add_link("socket0", "numa0", 0.0, 460.8, kind="local")
+    g.add_link("socket1", "numa1", 0.0, 460.8, kind="local")
+    g.add_link("socket0", "socket1", 87.0, 230.0, kind="upi")
+    g.add_link("socket0", "cxl0", 153.0, 38.4, kind="cxl")
+    g.add_link("socket1", "cxl1", 153.0, 38.4, kind="cxl")
+    dram = MemoryTier("DRAM0", 118, 460.8, 22.0, 256, kind="dram")
+    cxl = MemoryTier("CXL0", 118, 38.4, 9.0, 128, kind="cxl")
+    tiers = {
+        "DRAM0": dram,
+        "DRAM1": dataclasses.replace(dram, name="DRAM1"),
+        "CXL0": cxl,
+        "CXL1": dataclasses.replace(cxl, name="CXL1"),
+    }
+    return g, tiers

@@ -1,12 +1,15 @@
 """Memory-tiering runtimes: reproduce the paper's §VI PMO findings."""
 import pytest
 
-from repro.core import (AutoNUMA, Block, MigrationSim, NoBalance, TPP,
-                        Tiering08, make_blocks_from_plan, paper_system,
+from repro.core import (AutoNUMA, Block, MigrationExecutor,
+                        MigrationSim, NoBalance, TPP, Tiering08,
+                        make_blocks_from_plan, paper_system,
                         trace_scattered_hotset, trace_stable_hotset,
                         trace_uniform)
+from repro.topology import build_topology
 
 MB64 = 64 * 1024**2
+GiB = 1024**3
 
 
 def _blocks(n_slow=48, n_fast=8):
@@ -101,3 +104,58 @@ def test_capacity_pressure_demotes_coldest():
     assert res.stats.demoted > 0
     # fast tier never exceeded: promoted - demoted bounded by capacity
     assert res.stats.promoted >= res.stats.demoted
+
+
+# ---------------------------------------------------------------------- #
+# MigrationExecutor path pricing (repro.topology)                         #
+# ---------------------------------------------------------------------- #
+def _promote_cost(topology_name: str, nbytes: int) -> float:
+    tb = build_topology(topology_name)
+    ex = MigrationExecutor(tb.tiers, topology=tb.graph, page_bytes=4096)
+    d = ex.delta({"a": [("CXL", 1.0)]}, {"a": [("LDRAM", 1.0)]},
+                 {"a": nbytes})
+    return ex.cost_s(d)
+
+
+def test_executor_far_socket_moves_cost_more_for_equal_bytes():
+    near = _promote_cost("vendor-a", GiB)
+    far = _promote_cost("far-socket", GiB)
+    assert far > near
+    # the surcharge is the per-page round-trip over the extra UPI hop
+    pages = GiB // 4096
+    assert far - near == pytest.approx(pages * 2 * 87e-9, rel=1e-6)
+
+
+def test_executor_contended_moves_serialize_disjoint_overlap():
+    from conftest import dual_cxl_machine
+
+    g, tiers = dual_cxl_machine()
+    ex = MigrationExecutor(tiers, topology=g)
+    nb = {"a": GiB, "b": GiB}
+    solo = ex.cost_s(ex.delta({"a": [("CXL0", 1.0)]},
+                              {"a": [("DRAM0", 1.0)]}, {"a": GiB}))
+    # both promotions drain the SAME card: they serialize on its link
+    shared = ex.cost_s(ex.delta(
+        {"a": [("CXL0", 1.0)], "b": [("CXL0", 1.0)]},
+        {"a": [("DRAM0", 1.0)], "b": [("DRAM0", 1.0)]}, nb))
+    # one promotion per card, each on its own socket: paths are disjoint
+    disjoint = ex.cost_s(ex.delta(
+        {"a": [("CXL0", 1.0)], "b": [("CXL1", 1.0)]},
+        {"a": [("DRAM0", 1.0)], "b": [("DRAM1", 1.0)]}, nb))
+    assert shared == pytest.approx(2 * solo, rel=0.05)
+    assert disjoint < shared
+    # disjoint ~= one move's wire time + both moves' per-page overhead
+    assert disjoint < 1.6 * solo
+
+
+def test_executor_without_topology_keeps_slow_endpoint_pricing():
+    tiers = paper_system("A")
+    ex_flat = MigrationExecutor(tiers)
+    ex_topo = MigrationExecutor(tiers,
+                                topology=build_topology("vendor-a").graph)
+    d = ex_flat.delta({"a": [("CXL", 1.0)]}, {"a": [("LDRAM", 1.0)]},
+                      {"a": GiB})
+    flat, topo = ex_flat.cost_s(d), ex_topo.cost_s(d)
+    assert flat > 0 and topo > 0
+    # both price the wire time at the CXL card's bandwidth
+    assert topo == pytest.approx(flat, rel=0.2)

@@ -311,6 +311,91 @@ def test_replanner_migrates_on_phase_shift_and_wins():
     assert w_fast >= u_fast_before - 0.05
 
 
+def test_replanner_feeds_realized_shares_after_denied_moves():
+    """When move_fn denies part of a delta, the live plan must reflect
+    the *realized* residency, not the intended plan, so the next
+    costing pass prices reality (ROADMAP follow-on)."""
+    tiers = _tiers()
+    nb = {"u": 60 * G, "w": 60 * G}
+    tr = _observed_trace({"u": (120 * G, 60 * G, 0.0)})
+
+    def half_denying_move(obj, src, dst, nbytes):
+        return nbytes // 2               # fast budget rejects half
+
+    rp = AdaptiveReplanner(
+        tr, tiers, "LDRAM",
+        cfg=ReplanConfig(replan_every=1, window_epochs=2,
+                         amortize_steps=16),
+        executor=MigrationExecutor(tiers, move_fn=half_denying_move))
+    rp.maybe_replan(1, nb)               # initial plan, no moves yet
+    for _ in range(4):
+        _emit_epoch(tr, {"w": (120 * G, 60 * G, 0.0)})
+    d = rp.maybe_replan(2, nb)
+    assert d.applied
+    assert d.denied_bytes > 0
+    assert d.moved_bytes + d.denied_bytes > 0
+    assert d.moved_bytes == pytest.approx(d.denied_bytes, rel=0.01)
+    # intended: hand w the whole fast tier; realized: only half arrived
+    intended = rp.policy.plan(
+        tr.to_data_objects(nb, window=2), rp.tiers)
+    w_intended = sum(f for t, f in intended.shares["w"] if t == "LDRAM")
+    w_live = sum(f for t, f in rp.plan.shares["w"] if t == "LDRAM")
+    assert w_live < w_intended - 0.05
+    assert rp.summary()["denied_bytes"] > 0
+
+
+class _CountingOLI(ObjectLevelInterleave):
+    def __init__(self, *a, **k):
+        super().__init__(*a, **k)
+        self.calls = 0
+
+    def plan(self, objs, tiers):
+        self.calls += 1
+        return super().plan(objs, tiers)
+
+
+def test_replanner_phase_cache_skips_replanning_and_hysteresis():
+    """Recurring phase signatures reuse the plan that already won: no
+    policy re-run, no hysteresis margin (ROADMAP follow-on)."""
+    tiers = _tiers()
+    nb = {"u": 60 * G, "w": 60 * G}
+    pol = _CountingOLI("LDRAM", ["CXL"], bandwidth_weighted=True)
+    tr = AccessTrace()
+    rp = AdaptiveReplanner(
+        tr, tiers, "LDRAM", policy=pol,
+        cfg=ReplanConfig(replan_every=1, window_epochs=2,
+                         amortize_steps=32))
+    phase_a = {"u": (120 * G, 60 * G, 0.0)}
+    phase_b = {"w": (120 * G, 60 * G, 0.0)}
+    for _ in range(3):
+        _emit_epoch(tr, phase_a)
+    rp.maybe_replan(1, nb, phase="A")    # initial (cached under A)
+    for _ in range(4):
+        _emit_epoch(tr, phase_b)
+    rp.maybe_replan(2, nb, phase="B")
+    calls_after_first_cycle = pol.calls
+    assert rp.plan_cache_hits == 0
+    # the phases recur: cached plans are reused, the policy never re-runs
+    for _ in range(4):
+        _emit_epoch(tr, phase_a)
+    da = rp.maybe_replan(3, nb, phase="A")
+    for _ in range(4):
+        _emit_epoch(tr, phase_b)
+    db = rp.maybe_replan(4, nb, phase="B")
+    assert pol.calls == calls_after_first_cycle
+    assert rp.plan_cache_hits == 2
+    assert da.cached and db.cached
+    assert da.applied and da.reason == "cached_win"
+    # unknown signature still plans fresh
+    _emit_epoch(tr, phase_a)
+    rp.maybe_replan(5, nb, phase="C")
+    assert pol.calls == calls_after_first_cycle + 1
+    # a cached plan for a drifted object inventory is not trusted
+    _emit_epoch(tr, phase_a)
+    rp.maybe_replan(6, {"u": 60 * G, "new_obj": 10 * G}, phase="A")
+    assert pol.calls == calls_after_first_cycle + 2
+
+
 def test_replanner_hysteresis_blocks_marginal_wins():
     tiers = _tiers()
     nb = {"u": 60 * G}

@@ -1,0 +1,197 @@
+"""repro.topology: graph queries, contention, distance-aware planning."""
+import dataclasses
+
+import pytest
+
+from repro.core import (DataObject, GiB, PlacementPlan,
+                        UniformInterleave, distance_weighted_policy,
+                        plan_step_cost)
+from repro.telemetry import AccessTrace, AdaptiveReplanner
+from repro.topology import (Flow, TopologyGraph, build_topology,
+                            two_socket_system)
+
+G = GiB
+
+
+# ---------------------------------------------------------------------- #
+# graph path queries                                                      #
+# ---------------------------------------------------------------------- #
+def test_path_queries_on_vendor_a():
+    g = build_topology("vendor-a").graph
+    assert g.hop_latency_ns("socket0", "cxl0") == pytest.approx(153.0)
+    assert g.hop_latency_ns("socket0", "numa1") == pytest.approx(87.0)
+    assert g.hop_latency_ns("socket0", "socket0") == 0.0
+    # bottleneck bandwidth is the min link along the path
+    assert g.path_bw_GBps("numa0", "cxl0") == pytest.approx(38.4)
+    assert g.bottleneck("numa0", "cxl0").kind == "cxl"
+    # tier-level views resolve through tier_nodes
+    assert g.tier_latency_ns("CXL") == pytest.approx(153.0)
+    assert g.tier_links("LDRAM")[0].kind == "local"
+    assert g.tier_path("LDRAM", "CXL")[-1].kind == "cxl"
+
+
+def test_effective_tiers_reproduce_paper_figure2():
+    tb = build_topology("vendor-a")
+    eff = tb.effective_tiers()
+    lat = {t: v.unloaded_latency_ns + v.hop_latency_ns
+           for t, v in eff.items()}
+    assert lat["LDRAM"] == pytest.approx(118)
+    assert lat["RDRAM"] == pytest.approx(205)      # +87 ns UPI hop
+    assert lat["CXL"] == pytest.approx(271)        # +153 ns CXL link
+    # remote DRAM bandwidth is capped by the cross-socket link
+    assert eff["RDRAM"].peak_bw_GBps < eff["LDRAM"].peak_bw_GBps
+    # the saturation knee survives the bandwidth cap
+    assert eff["RDRAM"].saturation_streams == pytest.approx(
+        tb.tiers["RDRAM"].saturation_streams)
+
+
+def test_far_socket_pays_the_extra_hop():
+    near = build_topology("vendor-a").effective_tiers()
+    far = build_topology("far-socket").effective_tiers()
+    assert far["CXL"].hop_latency_ns == pytest.approx(87 + 153)
+    assert (far["CXL"].unloaded_latency_ns + far["CXL"].hop_latency_ns
+            > near["CXL"].unloaded_latency_ns
+            + near["CXL"].hop_latency_ns)
+    # LDRAM is unaffected by where the card sits
+    assert far["LDRAM"] == near["LDRAM"]
+
+
+def test_unknown_topology_and_bad_graph_usage_raise():
+    with pytest.raises(ValueError, match="unknown topology"):
+        build_topology("vendor-z")
+    g = TopologyGraph()
+    g.add_node("a")
+    with pytest.raises(ValueError):
+        g.add_node("a")
+    with pytest.raises(ValueError):
+        g.add_link("a", "missing", 1.0, 1.0)
+    g.add_node("b")
+    with pytest.raises(ValueError):
+        g.path("a", "b")          # disconnected
+
+
+# ---------------------------------------------------------------------- #
+# shared-link contention                                                  #
+# ---------------------------------------------------------------------- #
+def test_contention_fair_shares_the_bottleneck_link():
+    g = build_topology("far-socket").graph   # UPI: 230 GB/s
+    f1 = Flow("socket0", "numa1", 200.0)
+    f2 = Flow("socket0", "cxl0", 100.0)      # also crosses UPI
+    solo = g.contended_flows([f2])[0]
+    r1, r2 = g.contended_flows([f1, f2])
+    # 300 GB/s offered over a 230 GB/s link: proportional fair share
+    # cuts the RDRAM flow below its solo rate
+    assert r1.achieved_GBps == pytest.approx(230 * 200 / 300)
+    # the CXL flow stays pinned at its own card link...
+    assert r2.achieved_GBps <= solo.achieved_GBps
+    assert r2.bottleneck == ("cxl0", "socket1")
+    # ...but M/M/1 queueing on the shared UPI hop inflates its latency
+    assert r2.latency_ns > solo.latency_ns
+
+
+def test_disjoint_flows_do_not_interfere():
+    g = build_topology("vendor-a").graph
+    f1 = Flow("socket0", "numa0", 100.0)
+    f2 = Flow("socket1", "numa1", 100.0)
+    r1, r2 = g.contended_flows([f1, f2])
+    assert r1.achieved_GBps == pytest.approx(100.0)
+    assert r2.achieved_GBps == pytest.approx(100.0)
+
+
+# ---------------------------------------------------------------------- #
+# distance-aware costing (acceptance criteria)                            #
+# ---------------------------------------------------------------------- #
+def _cxl_resident_cost(name: str) -> float:
+    tb = build_topology(name)
+    objs = [DataObject("table", 64 * G, read_bytes_per_step=64 * G,
+                       random_fraction=0.6)]
+    plan = PlacementPlan({"table": [("CXL", 1.0)]}, "pinned", {})
+    return plan_step_cost(objs, plan, tb.tiers,
+                          topology=tb.graph).step_s
+
+
+def test_far_socket_cxl_strictly_slower_in_step_time():
+    assert _cxl_resident_cost("far-socket") \
+        > _cxl_resident_cost("vendor-a")
+
+
+def test_shared_hop_serializes_interleaved_traffic():
+    """An object interleaved across RDRAM + CXL: with the card on the
+    far socket both shares squeeze through one UPI link, so the phase
+    is gated by the link's *summed* traffic; near-socket keeps the
+    paths disjoint and the slowest share gates instead."""
+    objs = [DataObject("field", 64 * G, read_bytes_per_step=128 * G)]
+    plan = PlacementPlan({"field": [("RDRAM", 0.88), ("CXL", 0.12)]},
+                         "pinned", {})
+    costs = {}
+    for name in ("vendor-a", "far-socket"):
+        tb = build_topology(name)
+        costs[name] = plan_step_cost(objs, plan, tb.tiers,
+                                     topology=tb.graph)
+    far, near = costs["far-socket"], costs["vendor-a"]
+    assert far.step_s > near.step_s
+    # the UPI link is charged with BOTH shares' bytes in the far config
+    upi_far = far.link_time["socket0--socket1"]
+    assert upi_far > near.link_time["socket0--socket1"]
+    assert upi_far == pytest.approx(128 * G / (230.0 * 1e9))
+    # and it is the binding resource: slower than either tier share
+    assert upi_far > max(far.per_tier_time.values())
+
+
+def test_distance_weighted_interleave_beats_uniform_at_equal_capacity():
+    tb = build_topology("vendor-a")
+    tiers = {k: v for k, v in tb.tiers.items() if k != "NVMe"}
+    tiers["LDRAM"] = dataclasses.replace(tiers["LDRAM"],
+                                         capacity_GiB=64)
+    objs = [DataObject("field", 192 * G,
+                       read_bytes_per_step=2 * 192 * G)]
+    w = tb.graph.tier_weights(tiers)
+    assert w["LDRAM"] > w["RDRAM"] > w["CXL"] > 0
+    assert sum(w.values()) == pytest.approx(1.0)
+    assert "NVMe" not in w
+    uni = UniformInterleave(["LDRAM", "RDRAM", "CXL"])
+    wtd = distance_weighted_policy(tb.graph, tiers)
+    cost = {p.name: plan_step_cost(objs, p.plan(objs, tiers), tiers,
+                                   topology=tb.graph).step_s
+            for p in (uni, wtd)}
+    assert cost[wtd.name] <= cost[uni.name]
+    # weighted plan respects the fast-tier capacity cap
+    shares = dict(wtd.plan(objs, tiers).shares["field"])
+    assert shares["LDRAM"] * 192 * G <= 64 * G * 1.001
+
+
+# ---------------------------------------------------------------------- #
+# replanner orders tiers by measured distance                             #
+# ---------------------------------------------------------------------- #
+def test_replanner_tier_order_follows_origin_distance():
+    from conftest import dual_cxl_machine
+
+    g, tiers = dual_cxl_machine()
+    rp0 = AdaptiveReplanner(AccessTrace(), tiers, "DRAM0",
+                            topology=g, origin="socket0")
+    assert rp0.tier_order == ["DRAM0", "DRAM1", "CXL0", "CXL1"]
+    assert rp0.default_tier == "CXL1"     # new objects land farthest
+    rp1 = AdaptiveReplanner(AccessTrace(), tiers, "DRAM1",
+                            topology=g, origin="socket1")
+    assert rp1.tier_order == ["DRAM1", "DRAM0", "CXL1", "CXL0"]
+    # the distance view is folded into the replanner's tier set
+    assert rp0.tiers["CXL1"].hop_latency_ns == pytest.approx(240.0)
+    assert rp1.tiers["CXL1"].hop_latency_ns == pytest.approx(153.0)
+
+
+def test_alias_tier_reuses_a_node_under_a_new_name():
+    g = build_topology("tpu-pod").graph
+    g.alias_tier("HBM", "device")
+    g.alias_tier("HOST", "pinned_host")
+    assert g.node_of("device") == g.node_of("HBM")
+    assert g.tier_latency_ns("pinned_host") \
+        == g.tier_latency_ns("HOST")
+    with pytest.raises(KeyError):
+        g.alias_tier("nope", "x")
+
+
+def test_two_socket_builder_places_card_behind_requested_socket():
+    far = two_socket_system("A", cxl_socket=1)
+    assert far.graph.tier_links("CXL")[0].kind == "upi"
+    near = two_socket_system("A", cxl_socket=0)
+    assert near.graph.tier_links("CXL")[0].kind == "cxl"
