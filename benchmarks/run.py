@@ -12,6 +12,8 @@ Prints ``name,value,derived`` CSV.  Modules:
                          static plans on a phase-shifting workload
   topology_bench         hop-distance costing: near vs far socket,
                          distance-weighted interleave, link contention
+  multi_tenant_bench     two tenants on one pool: fair-share fast-tier
+                         arbitration vs static splits and free-for-all
   kernel_bench           Pallas kernel microbenches
   roofline               per-cell roofline from the dry-run artifacts
 
@@ -44,6 +46,7 @@ MODULES = [
     "serve_scheduler_bench",
     "adaptive_replan_bench",
     "topology_bench",
+    "multi_tenant_bench",
     "kernel_bench",
     "roofline",
 ]

@@ -5,16 +5,17 @@ CXL: Use Cases and System Adoption" (IPDPS'25).  See DESIGN.md.
 
 Subpackages (imported lazily so ``import repro`` stays light):
   core      tier models, placement policies, cost model, migration
+  pool      multi-tenant residency ledger + fair-share tier arbitration
   serving   continuous-batching paged-KV serving subsystem
   offload   one-shot ZeRO-Offload / FlexGen engines
 """
 import importlib
 
-__version__ = "1.1.0"
+__version__ = "1.2.0"
 
 _LAZY_SUBPACKAGES = ("core", "serving", "offload", "models", "kernels",
                      "configs", "data", "optim", "checkpoint",
-                     "telemetry", "topology")
+                     "telemetry", "topology", "pool")
 
 
 def __getattr__(name):

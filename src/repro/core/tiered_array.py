@@ -177,6 +177,18 @@ class TieredArray:
                 nxt = jax.device_put(self.blocks[i + 1], dev)
             yield cur
 
+    def move_block(self, i: int, kind: str) -> int:
+        """Re-place block ``i`` onto ``kind`` in place (a real
+        jax.device_put between memory kinds); returns the bytes moved
+        (0 when the block already lives there)."""
+        if self.kinds[i] == kind:
+            return 0
+        self.blocks[i] = jax.device_put(self.blocks[i],
+                                        _device_sharding(kind))
+        self.kinds[i] = kind
+        per_row = self.nbytes // max(self.shape[0], 1)
+        return self.blocks[i].shape[0] * per_row
+
     def update(self, x: jax.Array) -> "TieredArray":
         """Write a new value back, preserving the block placement."""
         x = jnp.asarray(x, dtype=self.dtype).reshape(self.shape)

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Mapping, Optional, Tuple
+from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 GiB = 1024**3
 GB = 1e9
@@ -156,25 +156,85 @@ def tpu_v5e_tiers(hbm_GiB: float = 16.0, host_GiB: float = 512.0
 # Sec. III bandwidth-packing: assign streams across tiers to maximize     #
 # aggregate bandwidth ("6/23/23 threads to CXL/LDRAM/RDRAM -> 420 GB/s"). #
 # ---------------------------------------------------------------------- #
-def assign_streams(tiers: Mapping[str, MemoryTier], total_streams: int
+def _delivered_bandwidth(tiers: Mapping[str, MemoryTier],
+                         alloc: Mapping[str, int],
+                         tier_links: Mapping[str, Sequence],
+                         passes: int = 4) -> Dict[str, float]:
+    """Per-tier bandwidth actually delivered to the compute origin.
+
+    Each tier produces its concurrency-curve bandwidth, then every
+    interconnect link on its path caps the *sum* of the flows crossing
+    it: when tiers share a bottleneck hop (two DIMM sets behind one UPI
+    link, CXL + DRAM behind one socket), their flows fair-share the
+    link (proportional scale-down, iterated to a fixed point).
+    """
+    flow = {k: tiers[k].bandwidth(alloc[k]) for k in tiers}
+    links = {}
+    for k, ls in tier_links.items():
+        for link in ls:
+            links.setdefault(link.key, (link, []))[1].append(k)
+    for _ in range(passes):
+        changed = False
+        for link, crossing in links.values():
+            load = sum(flow[k] for k in crossing)
+            if load > link.bw_GBps * (1 + 1e-9):
+                s = link.bw_GBps / load
+                for k in crossing:
+                    flow[k] *= s
+                changed = True
+        if not changed:
+            break
+    return flow
+
+
+def assign_streams(tiers: Mapping[str, MemoryTier], total_streams: int,
+                   topology=None, origin: Optional[str] = None
                    ) -> Tuple[Dict[str, int], float]:
     """Greedy water-filling of access streams over tiers.
 
-    Iteratively grants the next stream to the tier with the largest marginal
-    bandwidth gain.  Returns ({tier: streams}, aggregate_GBps).  Reproduces
-    the paper's Sec. III thread-assignment observation.
+    Iteratively grants the next stream to the tier with the largest
+    marginal bandwidth gain.  Returns ({tier: streams}, aggregate_GBps).
+    Reproduces the paper's Sec. III thread-assignment observation.
+
+    With a ``topology`` (repro.topology.TopologyGraph), the marginal
+    gain is measured on the bandwidth *delivered through the path from
+    the compute origin*: tiers whose paths share a bottleneck link
+    fair-share it, so adding streams to a second tier behind an already
+    saturated hop gains nothing and the water-filling routes those
+    streams to tiers with independent paths instead (closing the
+    ROADMAP stream-assignment item).
     """
+    if topology is None:
+        alloc = {k: 0 for k in tiers}
+        for _ in range(total_streams):
+            best_k, best_gain = None, 0.0
+            for k, t in tiers.items():
+                gain = t.bandwidth(alloc[k] + 1) - t.bandwidth(alloc[k])
+                if gain > best_gain:
+                    best_k, best_gain = k, gain
+            if best_k is None:  # everything saturated
+                break
+            alloc[best_k] += 1
+        agg = sum(tiers[k].bandwidth(n) for k, n in alloc.items())
+        return alloc, agg
+
+    eff = topology.effective_tiers(tiers, origin)
+    tier_links = {k: topology.tier_links(k, origin) for k in tiers}
     alloc = {k: 0 for k in tiers}
+    agg = 0.0
     for _ in range(total_streams):
-        best_k, best_gain = None, 0.0
-        for k, t in tiers.items():
-            gain = t.bandwidth(alloc[k] + 1) - t.bandwidth(alloc[k])
-            if gain > best_gain:
-                best_k, best_gain = k, gain
-        if best_k is None:  # everything saturated
+        best_k, best_agg = None, agg
+        for k in tiers:
+            trial = dict(alloc)
+            trial[k] += 1
+            cand = sum(_delivered_bandwidth(eff, trial,
+                                            tier_links).values())
+            if cand > best_agg + 1e-9:
+                best_k, best_agg = k, cand
+        if best_k is None:      # every path saturated: no stream helps
             break
         alloc[best_k] += 1
-    agg = sum(tiers[k].bandwidth(n) for k, n in alloc.items())
+        agg = best_agg
     return alloc, agg
 
 

@@ -92,7 +92,7 @@ def run_continuous(args, cfg, params) -> None:
         policy=args.policy, num_blocks=args.num_blocks,
         fast_block_budget=args.fast_blocks, adaptive=args.adaptive,
         replan_every=args.replan_every, sample_rate=args.sample_rate,
-        topology=args.topology)
+        topology=args.topology, tenant=args.tenant)
     eng = ServingEngine(cfg, params, sv)
     rs = np.random.RandomState(0)
     lens = [args.prompt_len, max(args.prompt_len // 2, 4)]
@@ -176,16 +176,27 @@ def main(argv=None):
     from ..topology import TOPOLOGY_CHOICES
     ap.add_argument("--topology", default=None,
                     choices=list(TOPOLOGY_CHOICES),
-                    help="price placements over this machine topology "
-                         "(hop latency, bottleneck bandwidth, shared-"
-                         "link contention) instead of a flat tier list")
+                    help="budget shared links in admission and (with "
+                         "--adaptive) price placements over this "
+                         "machine topology instead of a flat tier list")
+    ap.add_argument("--tenant", default=None,
+                    help="residency-ledger tenant namespace for this "
+                         "engine's KV pool (default: serving; "
+                         "continuous only)")
     args = ap.parse_args(argv)
 
+    if args.tenant is not None and args.scheduler != "continuous":
+        ap.error("--tenant only takes effect with --scheduler "
+                 "continuous (the paged pool is what registers a "
+                 "ledger tenant)")
+    if args.tenant is None:
+        args.tenant = "serving"
+
     if args.topology:
-        if args.scheduler != "continuous" or not args.adaptive:
+        if args.scheduler != "continuous":
             ap.error("--topology only takes effect with --scheduler "
-                     "continuous --adaptive (the adaptive replanner is "
-                     "what prices placements over the topology)")
+                     "continuous (contention-aware admission; add "
+                     "--adaptive to also price replans over it)")
         from ..topology import build_topology
         for line in build_topology(args.topology).describe():
             print(line)

@@ -33,20 +33,32 @@ def parse_mesh(spec: str):
 
 
 class _TrainTelemetry:
-    """Telemetry sidecar for the training loop (--adaptive).
+    """Telemetry + placement sidecar for the training loop (--adaptive).
 
     Records the step's per-phase traffic (params fwd/bwd, grad transfer,
     optimizer sweep over fp32 state) through a sampling front-end, runs
     phase detection, and periodically re-plans the training-state
     placement over the TPU tier set from the *measured* traffic —
-    printing every costmodel-gated decision.  Placement execution stays
-    plan-only here (the train step owns its buffers); the serving engine
-    exercises the executing path.
+    printing every costmodel-gated decision.
+
+    Placement is no longer plan-only: the fp32 optimizer state (Adam
+    master/m/v) is mirrored into a ``repro.pool.TieredStateStore``
+    registered under the ``tenant`` namespace of a ``ResidencyLedger``,
+    and the replanner's ``MigrationExecutor`` executes applied deltas
+    through the store's ``move_fn`` — real ``jax.device_put`` block
+    re-placements between memory kinds, refreshed with the live
+    optimizer values right before each due replan and recorded in the
+    ledger (closing the ROADMAP "executing replans for training state"
+    item).
     """
 
-    def __init__(self, params, replan_every: int, sample_rate: float,
-                 topology: str = None):
+    OPT_OBJ = "opt_state_fp32"
+
+    def __init__(self, params, opt, replan_every: int, sample_rate: float,
+                 topology: str = None, tenant: str = "train"):
+        from ..core.migration import MigrationExecutor
         from ..core.tiers import tpu_v5e_tiers
+        from ..pool import ResidencyLedger, TieredStateStore
         from ..telemetry import (AccessSampler, AccessTrace, PhaseDetector,
                                  AdaptiveReplanner, ReplanConfig,
                                  SamplerConfig)
@@ -67,33 +79,68 @@ class _TrainTelemetry:
             tiers = {k: v for k, v in tpu_v5e_tiers().items()
                      if k in ("HBM", "HOST")}
         self.fast = fast
-        self.replanner = AdaptiveReplanner(
-            self.trace, tiers, fast,
-            cfg=ReplanConfig(replan_every=max(replan_every, 1),
-                             window_epochs=max(replan_every, 1)),
-            topology=graph)
+        self.tenant = tenant
+        self.replan_every = max(replan_every, 1)
+        slow = [t for t in tiers if t != fast][-1]
+        self.ledger = ResidencyLedger(tiers)
+        self.ledger.register_tenant(tenant, trace=self.trace)
+        self.store = TieredStateStore(self.ledger, tenant)
         self.param_bytes = sum(
             p.nbytes for p in jax.tree.leaves(params))
+        # fp32 optimizer state lives in the store, first-touch on the
+        # slow tier (where a host-offload allocator would put it)
+        self.store.put(self.OPT_OBJ, self._opt_fp32(opt),
+                       [(slow, 1.0)])
+        # bf16 params are device-resident by construction: client-origin
+        # fast residency the planner may pin but never has to move
+        self.ledger.register(tenant, "params_bf16",
+                             {fast: self.param_bytes})
+        self.replanner = AdaptiveReplanner(
+            self.trace, tiers, fast,
+            cfg=ReplanConfig(replan_every=self.replan_every,
+                             window_epochs=self.replan_every),
+            executor=MigrationExecutor(tiers, move_fn=self.store.move_fn,
+                                       topology=graph),
+            default_tier=slow,
+            topology=graph, ledger=self.ledger, tenant=tenant)
         self.nbytes = {
             "params_bf16": self.param_bytes,
             "grads_bf16": self.param_bytes,
-            "opt_state_fp32": 6 * self.param_bytes,
+            self.OPT_OBJ: self.store.nbytes(self.OPT_OBJ),
         }
 
-    def on_step(self, step: int) -> None:
+    @staticmethod
+    def _opt_fp32(opt):
+        """The movable fp32 subtree of the Adam state."""
+        return {k: opt[k] for k in ("master", "m", "v") if k in opt}
+
+    def on_step(self, step: int, opt=None) -> None:
         from ..offload.train_engine import emit_step_traffic
         emit_step_traffic(self.sampler, self.param_bytes)
         self.phases.update()
-        d = self.replanner.maybe_replan(step + 1, self.nbytes,
+        epoch = step + 1
+        if opt is not None and epoch % self.replan_every == 0:
+            # refresh the mirror so an applied replan migrates the
+            # *current* optimizer bytes, not the init-time ones
+            self.store.update(self.OPT_OBJ, self._opt_fp32(opt))
+        d = self.replanner.maybe_replan(epoch, self.nbytes,
                                         pin_fast=("params_bf16",),
                                         phase=self.phases.label)
         if d is not None and d.reason != "initial":
             print(f"  replan@{step}: {'applied' if d.applied else 'kept'} "
                   f"({d.reason}) old={d.old_step_s*1e3:.1f} ms "
                   f"new={d.new_step_s*1e3:.1f} ms "
-                  f"migration={d.migration_s*1e3:.1f} ms")
+                  f"migration={d.migration_s*1e3:.1f} ms "
+                  f"moved={d.moved_bytes/1e6:.2f} MB")
+
+    def opt_bytes_on(self, tier: str) -> int:
+        """Ledger view of the optimizer state's tier residency."""
+        return self.ledger.object_bytes(self.tenant, self.OPT_OBJ, tier)
 
     def report(self) -> None:
+        place = self.ledger.placement(self.tenant, self.OPT_OBJ)
+        placed = " ".join(f"{t}={b/1e6:.1f}MB"
+                          for t, b in sorted(place.items()))
         print(f"telemetry: {self.trace.total_events} events, "
               f"{self.sampler.samples} samples, "
               f"overhead={self.sampler.overhead_s*1e3:.2f} ms, "
@@ -103,6 +150,9 @@ class _TrainTelemetry:
               f"{len(self.replanner.decisions)} "
               f"(cache_hits={self.replanner.plan_cache_hits}), "
               f"tier_order={'>'.join(self.replanner.tier_order)}")
+        print(f"ledger[{self.tenant}]: opt_state moved="
+              f"{self.ledger.counters.migrated_bytes/1e6:.2f} MB "
+              f"placement: {placed}")
 
 
 def main(argv=None):
@@ -119,15 +169,23 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--adaptive", action="store_true",
-                    help="record per-phase access telemetry and replan "
-                         "host-tier placement online (repro.telemetry)")
-    ap.add_argument("--replan-every", type=int, default=10,
-                    help="steps between adaptive replan attempts")
-    ap.add_argument("--sample-rate", type=float, default=1.0,
+                    help="record per-phase access telemetry, replan "
+                         "host-tier placement online, and migrate the "
+                         "fp32 optimizer state through a "
+                         "TieredStateStore (repro.telemetry/pool)")
+    ap.add_argument("--replan-every", type=int, default=None,
+                    help="steps between adaptive replan attempts "
+                         "(default 10; requires --adaptive)")
+    ap.add_argument("--sample-rate", type=float, default=None,
                     help="telemetry sampling rate (fraction of cache "
                          "lines); 1.0 = full instrumentation, right "
                          "for smoke-scale traffic — drop toward "
-                         "PEBS-like 1e-6 on production-size models")
+                         "PEBS-like 1e-6 on production-size models "
+                         "(default 1.0; requires --adaptive)")
+    ap.add_argument("--tenant", default=None,
+                    help="residency-ledger tenant namespace for this "
+                         "run's training state (default: train; "
+                         "requires --adaptive)")
     from ..topology import TOPOLOGY_CHOICES
     ap.add_argument("--topology", default=None,
                     choices=list(TOPOLOGY_CHOICES),
@@ -135,6 +193,21 @@ def main(argv=None):
                          "topology (hop distance, link bandwidth) "
                          "instead of the flat HBM/HOST pair")
     args = ap.parse_args(argv)
+    if not args.adaptive:
+        # these knobs only affect the adaptive path: accepting them
+        # silently would let a typo'd run think it was adaptive
+        for flag, val in (("--replan-every", args.replan_every),
+                          ("--sample-rate", args.sample_rate),
+                          ("--tenant", args.tenant)):
+            if val is not None:
+                ap.error(f"{flag} only takes effect with --adaptive "
+                         f"(the telemetry sidecar is what consumes it)")
+    if args.replan_every is None:
+        args.replan_every = 10
+    if args.sample_rate is None:
+        args.sample_rate = 1.0
+    if args.tenant is None:
+        args.tenant = "train"
     if not 0.0 < args.sample_rate <= 1.0:
         ap.error(f"--sample-rate must be in (0, 1], "
                  f"got {args.sample_rate}")
@@ -173,8 +246,9 @@ def main(argv=None):
             print(f"restored step {start} (elastic re-shard onto "
                   f"{args.mesh})")
 
-        telem = (_TrainTelemetry(params, args.replan_every,
-                                 args.sample_rate, args.topology)
+        telem = (_TrainTelemetry(params, opt, args.replan_every,
+                                 args.sample_rate, args.topology,
+                                 tenant=args.tenant)
                  if args.adaptive else None)
         for i in range(start, args.steps):
             b = next(it)
@@ -183,7 +257,7 @@ def main(argv=None):
                 params, opt, {"tokens": jnp.asarray(b["tokens"]),
                               "labels": jnp.asarray(b["labels"])})
             if telem is not None:
-                telem.on_step(i)
+                telem.on_step(i, opt)
             if i % 10 == 0 or i == args.steps - 1:
                 jax.block_until_ready(loss)
                 print(f"step {i:4d} loss={float(loss):.4f} "
@@ -200,6 +274,7 @@ def main(argv=None):
         if telem is not None:
             telem.report()
     print("done")
+    return telem
 
 
 if __name__ == "__main__":

@@ -80,10 +80,15 @@ class FlexGenEngine:
 
     def __init__(self, cfg: ModelConfig, params: Any,
                  serve: Optional[ServeConfig] = None,
-                 telemetry=None):
+                 telemetry=None, ledger=None, tenant: str = "flexgen"):
         self.cfg = cfg
         self.serve_cfg = serve or ServeConfig()
         self.telemetry = telemetry
+        # KV residency is accounted in the (possibly shared) ledger
+        # under this engine's tenant namespace
+        self.ledger = ledger
+        self.tenant = tenant
+        self.kv_home: Optional[TieredKVCache] = None
         sc = self.serve_cfg
         # place weights per policy (block-interleaved TieredArrays)
         self.params_tiered = place_pytree(
@@ -128,7 +133,9 @@ class FlexGenEngine:
                 pads = [(0, 0)] * cache[k].ndim
                 pads[3] = (0, pad_to - P)
                 cache[k] = jnp.pad(cache[k], pads)
-        kv_home = TieredKVCache(sc.kv_shares)
+        kv_home = TieredKVCache(sc.kv_shares, ledger=self.ledger,
+                                tenant=self.tenant)
+        self.kv_home = kv_home
         kv_home.stash(cache)
 
         kv_step_bytes = sum(cache[k].nbytes for k in ("kv_k", "kv_v")

@@ -1,0 +1,29 @@
+"""repro.pool: unified multi-tenant residency ledger + tier arbitration.
+
+The repo's answer to the paper's central system question — how a fixed
+fast-tier budget plus CXL-class expansion is shared across competing
+workloads:
+
+- ledger:      ``ResidencyLedger``, the single source of truth for
+               bytes-per-tier-per-tenant; TieredArray state, the paged
+               KV pool, and the adaptive replanner all read/write tier
+               occupancy here, and per-tenant budgets gate placement
+- arbiter:     ``TierBudgetArbiter`` splits the fast tier across tenant
+               namespaces from measured per-tenant demand (fair-share /
+               aggregate-throughput / priority-weighted objectives)
+- state_store: ``TieredStateStore`` holds pytrees (fp32 optimizer
+               state) as TieredArrays and executes replanner deltas as
+               real block re-placements recorded in the ledger
+"""
+from .ledger import (LedgerCounters, LedgerError, ResidencyLedger, Tenant,
+                     UNBOUNDED)
+from .arbiter import (OBJECTIVES, ArbiterDecision, TenantDemand,
+                      TierBudgetArbiter)
+from .state_store import TieredStateStore
+
+__all__ = [
+    "LedgerCounters", "LedgerError", "ResidencyLedger", "Tenant",
+    "UNBOUNDED",
+    "OBJECTIVES", "ArbiterDecision", "TenantDemand", "TierBudgetArbiter",
+    "TieredStateStore",
+]

@@ -1,0 +1,196 @@
+"""TierBudgetArbiter: fair-share splitting of the fast tier across tenants.
+
+The paper's central system question — how a fixed fast-tier (DRAM)
+budget plus CXL expansion should be shared — becomes, with multiple
+workloads on one pool, an arbitration problem: "Dissecting CXL Memory
+Performance at Scale" shows contention for the shared fast tier
+dominates per-object placement effects.  The arbiter reads each
+tenant's *measured* demand from its AccessTrace namespace in the
+``ResidencyLedger`` and splits the fast-tier capacity under a pluggable
+objective:
+
+  * ``fair_share``   — max-min fairness: equal entitlements, capped by
+    demand, with unused capacity water-filled to still-hungry tenants
+    (no tenant can raise its grant without lowering a poorer one's);
+  * ``throughput``   — aggregate-throughput: fast bytes flow to the
+    tenants with the highest traffic intensity (bytes/step per resident
+    byte — the marginal step-time saved per fast byte is proportional
+    to it), filling each tenant's hot set in intensity order;
+  * ``priority``     — weighted fair share: entitlements proportional
+    to each tenant's ``Tenant.weight``.
+
+Budgets land in the ledger (``set_budget``), where every placement path
+— pool promotions, replanner deltas, state-store re-places — consults
+them through ``can_place``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional
+
+from .ledger import ResidencyLedger
+
+OBJECTIVES = ("fair_share", "throughput", "priority")
+
+
+@dataclasses.dataclass
+class TenantDemand:
+    """One tenant's measured appetite for the fast tier."""
+
+    tenant: str
+    resident_bytes: int        # total footprint in the ledger
+    hot_bytes: int             # bytes with observed traffic (fast-worthy)
+    bytes_per_step: float      # traffic rate over the demand window
+    weight: float = 1.0
+
+    @property
+    def intensity(self) -> float:
+        """Traffic per resident byte — the marginal utility of giving
+        this tenant one more fast byte."""
+        return self.bytes_per_step / max(self.hot_bytes, 1)
+
+
+@dataclasses.dataclass
+class ArbiterDecision:
+    """One rebalance: measured demands and the budgets that resulted."""
+
+    epoch: int
+    objective: str
+    budgets: Dict[str, int]
+    demands: List[TenantDemand]
+
+    def budget_of(self, tenant: str) -> int:
+        return self.budgets.get(tenant, 0)
+
+
+class TierBudgetArbiter:
+    """Splits one tier's capacity across the ledger's tenants."""
+
+    def __init__(self, ledger: ResidencyLedger, fast_tier: str,
+                 capacity_bytes: Optional[int] = None,
+                 objective: str = "fair_share",
+                 window_epochs: Optional[int] = 4,
+                 floor_bytes: int = 0,
+                 hot_threshold: float = 0.05):
+        if objective not in OBJECTIVES:
+            raise ValueError(f"unknown objective {objective!r}; "
+                             f"choose from {OBJECTIVES}")
+        self.ledger = ledger
+        self.fast_tier = fast_tier
+        if capacity_bytes is None:
+            capacity_bytes = ledger.capacity_bytes.get(fast_tier)
+        if capacity_bytes is None:
+            raise ValueError(
+                f"no capacity for tier {fast_tier!r}: pass "
+                f"capacity_bytes or set it on the ledger")
+        self.capacity_bytes = int(capacity_bytes)
+        self.objective = objective
+        self.window_epochs = window_epochs
+        # every tenant keeps at least this much fast headroom even when
+        # its trace shows no demand (cold-start protection)
+        self.floor_bytes = int(floor_bytes)
+        # an object is fast-worthy only while it is access-intensive:
+        # per-epoch traffic at least this fraction of its footprint
+        # (the paper's §V-B selection criterion, applied per tenant) —
+        # a drained serving engine's cold KV stops counting as demand
+        self.hot_threshold = float(hot_threshold)
+        self.decisions: List[ArbiterDecision] = []
+
+    # ------------------------------------------------------------------ #
+    # demand measurement                                                 #
+    # ------------------------------------------------------------------ #
+    def demand(self, tenant: str) -> TenantDemand:
+        """Read one tenant's demand from its trace namespace: hot bytes
+        are the footprints of objects with traffic in the window; with
+        no trace attached the whole residency counts as hot."""
+        info = self.ledger.tenants[tenant]
+        nbytes = self.ledger.nbytes_by_obj(tenant)
+        resident = sum(nbytes.values())
+        trace = info.trace
+        if trace is None:
+            return TenantDemand(tenant, resident, resident, float(resident),
+                                info.weight)
+        traffic = trace.object_traffic(self.window_epochs)
+        hot = 0
+        rate = 0.0
+        for obj, t in traffic.items():
+            if t.total_bytes <= 0:
+                continue
+            per_epoch = t.total_bytes / max(t.epochs, 1)
+            rate += per_epoch
+            size = nbytes.get(obj, 0)
+            if size > 0 and per_epoch >= self.hot_threshold * size:
+                hot += size
+        return TenantDemand(tenant, resident, min(hot, resident), rate,
+                            info.weight)
+
+    def demands(self) -> List[TenantDemand]:
+        return [self.demand(t) for t in sorted(self.ledger.tenants)]
+
+    # ------------------------------------------------------------------ #
+    # split objectives                                                   #
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _water_fill(asks: Mapping[str, int], weights: Mapping[str, float],
+                    capacity: int) -> Dict[str, int]:
+        """Weighted max-min: grant each claimant up to its ask,
+        entitlements proportional to weight, redistributing capacity
+        freed by satisfied claimants until none is left."""
+        grant = {t: 0 for t in asks}
+        live = {t for t, a in asks.items() if a > 0}
+        left = capacity
+        while live and left > 0:
+            wsum = sum(weights[t] for t in live)
+            step = {t: int(left * weights[t] / wsum) for t in live}
+            # integer slack goes to the heaviest claimant
+            slack = left - sum(step.values())
+            if slack:
+                step[max(live, key=lambda t: weights[t])] += slack
+            progressed = False
+            for t in sorted(live):
+                take = min(step[t], asks[t] - grant[t])
+                if take > 0:
+                    grant[t] += take
+                    left -= take
+                    progressed = True
+                if grant[t] >= asks[t]:
+                    live.discard(t)
+            if not progressed:
+                break
+        return grant
+
+    def split(self, demands: List[TenantDemand]) -> Dict[str, int]:
+        cap = self.capacity_bytes
+        floors = {d.tenant: min(self.floor_bytes, d.resident_bytes)
+                  for d in demands}
+        cap_after_floor = max(cap - sum(floors.values()), 0)
+        asks = {d.tenant: max(d.hot_bytes - floors[d.tenant], 0)
+                for d in demands}
+        if self.objective == "fair_share":
+            w = {d.tenant: 1.0 for d in demands}
+            grant = self._water_fill(asks, w, cap_after_floor)
+        elif self.objective == "priority":
+            w = {d.tenant: max(d.weight, 1e-9) for d in demands}
+            grant = self._water_fill(asks, w, cap_after_floor)
+        else:  # throughput: fill hot sets in traffic-intensity order
+            grant = {d.tenant: 0 for d in demands}
+            left = cap_after_floor
+            for d in sorted(demands, key=lambda d: -d.intensity):
+                take = min(asks[d.tenant], left)
+                grant[d.tenant] = take
+                left -= take
+        # capacity beyond measured demand stays free: handing it out by
+        # footprint would just re-enable hoarding by idle tenants — the
+        # next rebalance grants it the moment demand shows up
+        return {t: floors[t] + g for t, g in grant.items()}
+
+    # ------------------------------------------------------------------ #
+    def rebalance(self, epoch: int = 0) -> ArbiterDecision:
+        """Measure demand, split, and push budgets into the ledger."""
+        demands = self.demands()
+        budgets = self.split(demands)
+        for tenant, b in budgets.items():
+            self.ledger.set_budget(tenant, self.fast_tier, b)
+        d = ArbiterDecision(epoch, self.objective, budgets, demands)
+        self.decisions.append(d)
+        return d

@@ -167,10 +167,16 @@ class ServingConfig:
     adaptive: bool = False
     replan_every: int = 8   # iterations between replans (<= 0 disables)
     sample_rate: float = 1.0
-    # named repro.topology testbed: the replanner prices the pool's
-    # memory kinds over that machine's hop topology (path latency,
-    # bottleneck bandwidth, shared-link move serialization)
+    # named repro.topology testbed: the scheduler budgets the shared
+    # links KV gathers cross (contention-aware admission), and with
+    # --adaptive the replanner prices the pool's memory kinds over that
+    # machine's hop topology (path latency, bottleneck bandwidth,
+    # shared-link move serialization)
     topology: Optional[str] = None
+    # tenant namespace in the residency ledger (multi-tenant pools:
+    # several engines/trainers sharing one ledger must use distinct
+    # tenant names so the arbiter can split the fast tier among them)
+    tenant: str = "serving"
 
 
 @dataclasses.dataclass
@@ -212,7 +218,8 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, params,
                  serving: Optional[ServingConfig] = None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 ledger=None):
         check_paged_support(cfg)
         self.cfg = cfg
         self.sv = sv = serving or ServingConfig()
@@ -235,35 +242,44 @@ class ServingEngine:
         self.max_batch = max_batch
         spec = spec_from_config(cfg, bt)
         static = sv.policy in ("static", "none", "no_balance")
+        # all tier occupancy flows through the (possibly shared)
+        # residency ledger under this engine's tenant namespace
         self.pool = PagedKVPool(
             num_blocks, bt, spec=spec, fast_block_budget=fast_budget,
-            slow_kind=sv.slow_kind, default_kind=sv.slow_kind)
+            slow_kind=sv.slow_kind, default_kind=sv.slow_kind,
+            ledger=ledger, tenant=sv.tenant)
+        self.ledger = self.pool.ledger
         self._static_split = static
         self.tierer = KVBlockTierer(self.pool, sv.policy)
+        topo = None
+        tb = None
+        if sv.topology:
+            from ..topology import build_topology
+            tb = build_topology(sv.topology)
+            topo = tb.graph
+            # the pool's memory kinds ride the testbed's fast node
+            # and its capacity-expander (CXL-class) node
+            topo.alias_tier(tb.fast, FAST_KIND)
+            topo.alias_tier(tb.capacity_tier, self.pool.slow_kind)
         self.sched = ContinuousBatchingScheduler(
             self.pool, SchedulerConfig(
                 max_batch=max_batch,
-                max_prefill_per_iter=sv.max_prefill_per_iter))
+                max_prefill_per_iter=sv.max_prefill_per_iter),
+            topology=topo)
         self.metrics = ServingMetrics()
         # telemetry: the pool emits access events through a sampling
         # front-end; phase detection + (optionally) adaptive replanning
-        # consume the shared trace
+        # consume the shared trace, which also registers as this
+        # tenant's namespace in the ledger (the arbiter reads it there)
         self.trace = AccessTrace()
         self.sampler = AccessSampler(
             self.trace, SamplerConfig(sample_rate=sv.sample_rate))
         self.pool.attach_telemetry(self.sampler)
+        self.ledger.attach_trace(sv.tenant, self.trace)
         self.phases = PhaseDetector(self.trace)
         self.replanner: Optional[AdaptiveReplanner] = None
         if sv.adaptive:
-            topo = None
-            if sv.topology:
-                from ..topology import build_topology
-                tb = build_topology(sv.topology)
-                topo = tb.graph
-                # the pool's memory kinds ride the testbed's fast node
-                # and its capacity-expander (CXL-class) node
-                topo.alias_tier(tb.fast, FAST_KIND)
-                topo.alias_tier(tb.capacity_tier, self.pool.slow_kind)
+            if tb is not None:
                 tiers = kind_tiers(self.pool,
                                    fast_base=tb.tiers[tb.fast],
                                    slow_base=tb.tiers[tb.capacity_tier])
@@ -277,7 +293,8 @@ class ServingEngine:
                                            move_fn=self._move_seq_blocks,
                                            topology=topo),
                 default_tier=self.pool.slow_kind,
-                topology=topo)
+                topology=topo,
+                ledger=self.ledger, tenant=sv.tenant)
         self._prefill = jax.jit(steps_mod.make_prefill_step(cfg))
         self._decode = jax.jit(functools.partial(_paged_decode, cfg, bt))
         self._next_rid = 0
@@ -462,6 +479,9 @@ class ServingEngine:
             "profiling_samples": float(self.sampler.samples),
             "profiling_overhead_s": self.sampler.overhead_s,
             "phase_shifts": float(len(self.phases.shifts)),
+            "link_deferrals": float(self.sched.link_deferrals),
+            "ledger_migrated_bytes": float(
+                self.ledger.counters.migrated_bytes),
         }
         if self.replanner is not None:
             out.update(self.replanner.summary())

@@ -11,6 +11,12 @@ preempted).  The pool therefore manages fixed-size token blocks:
   * each block is resident in one JAX memory kind ("device" = HBM
     analogue, "pinned_host"/"unpinned_host" = the CXL-class capacity
     tiers), moved with ``migrate`` — the mechanism tiering.py drives;
+  * tier *occupancy* is not private state: every alloc/free/migrate is
+    recorded in a ``repro.pool.ResidencyLedger`` under the pool's
+    tenant namespace, and ``blocks_on``/``fast_used`` read back through
+    it — so several pools (tenants) can share one ledger and one
+    arbitrated fast-tier budget (``ledger.can_place`` gates
+    promotions, replacing the old private fast-block counter);
   * a block table maps ``seq_id -> [block ids]`` (logical order);
   * per-block access bits (touch count + last-touch step, the page-table
     A-bit analogue) feed the promotion/demotion policies adapted from
@@ -102,7 +108,8 @@ class PagedKVPool:
                  spec: Optional[KVBlockSpec] = None,
                  fast_block_budget: Optional[int] = None,
                  slow_kind: str = "pinned_host",
-                 default_kind: Optional[str] = None):
+                 default_kind: Optional[str] = None,
+                 ledger=None, tenant: str = "kv"):
         if num_blocks <= 0:
             raise ValueError("num_blocks must be positive")
         if block_tokens <= 0:
@@ -113,8 +120,6 @@ class PagedKVPool:
         self.spec = spec
         self.slow_kind = slow_kind
         self.default_kind = default_kind or slow_kind
-        self.fast_block_budget = (num_blocks if fast_block_budget is None
-                                  else fast_block_budget)
         self.blocks: List[KVBlock] = [
             KVBlock(bid=i, kind=self.default_kind)
             for i in range(num_blocks)]
@@ -123,6 +128,14 @@ class PagedKVPool:
         self.seq_len: Dict[int, int] = {}       # seq_id -> tokens written
         self.counters = PoolCounters()
         self.telemetry = None                   # AccessTrace/AccessSampler
+        # residency accounting lives in the (possibly shared) ledger; a
+        # private one is created for the single-tenant default
+        from ..pool.ledger import ResidencyLedger
+        self.ledger = ledger if ledger is not None else ResidencyLedger()
+        self.tenant = tenant
+        self.ledger.register_tenant(tenant)
+        self.fast_block_budget = (num_blocks if fast_block_budget is None
+                                  else fast_block_budget)
 
     # ------------------------------------------------------------------ #
     # telemetry                                                          #
@@ -140,8 +153,21 @@ class PagedKVPool:
                                    0.0, phase=phase)
 
     # ------------------------------------------------------------------ #
-    # capacity accounting                                                #
+    # capacity accounting (occupancy reads/writes go through the ledger) #
     # ------------------------------------------------------------------ #
+    def _obj(self, seq_id: int) -> str:
+        return f"seq{seq_id}"
+
+    @property
+    def fast_block_budget(self) -> int:
+        b = self.ledger.budget(self.tenant, FAST_KIND)
+        return self.num_blocks if b is None else b // self.block_nbytes()
+
+    @fast_block_budget.setter
+    def fast_block_budget(self, n_blocks: int) -> None:
+        self.ledger.set_budget(self.tenant, FAST_KIND,
+                               int(n_blocks) * self.block_nbytes())
+
     @property
     def num_blocks(self) -> int:
         return len(self.blocks)
@@ -153,7 +179,8 @@ class PagedKVPool:
         return self.num_blocks - len(self._free)
 
     def blocks_on(self, kind: str) -> int:
-        return sum(1 for b in self.blocks if not b.free and b.kind == kind)
+        return self.ledger.bytes_on(kind, self.tenant) \
+            // self.block_nbytes()
 
     def fast_used(self) -> int:
         return self.blocks_on(FAST_KIND)
@@ -187,6 +214,7 @@ class PagedKVPool:
         tbl = self.table.setdefault(seq_id, [])
         self.seq_len.setdefault(seq_id, 0)
         out = []
+        bn = self.block_nbytes()
         for _ in range(n_blocks):
             k = kind() if callable(kind) else kind
             bid = self._free.pop()
@@ -199,6 +227,8 @@ class PagedKVPool:
             tbl.append(bid)
             out.append(bid)
             self.counters.allocs += 1
+            self.ledger.record_alloc(self.tenant, self._obj(seq_id),
+                                     b.kind, bn)
         return out
 
     def free_seq(self, seq_id: int) -> int:
@@ -216,6 +246,8 @@ class PagedKVPool:
             b.k = b.v = None
             self._free.append(bid)
             self.counters.frees += 1
+        if tbl:
+            self.ledger.retire(self.tenant, self._obj(seq_id))
         return len(tbl)
 
     def seq_blocks(self, seq_id: int) -> List[KVBlock]:
@@ -351,19 +383,27 @@ class PagedKVPool:
     # migration                                                          #
     # ------------------------------------------------------------------ #
     def migrate(self, bid: int, kind: str) -> bool:
-        """Move one block to ``kind``; returns False if it's a no-op."""
+        """Move one block to ``kind``; returns False if it's a no-op.
+
+        Promotions are gated by the ledger (``can_place``): the tenant's
+        arbitrated fast-tier budget and any shared fast-tier capacity
+        both bind, so pools sharing one ledger contend honestly.
+        """
         b = self.blocks[bid]
         if b.free or b.kind == kind:
             return False
+        bn = self.block_nbytes()
         was_fast = b.kind == FAST_KIND
         if kind == FAST_KIND and not was_fast:
-            if self.fast_used() >= self.fast_block_budget:
+            if not self.ledger.can_place(self.tenant, FAST_KIND, bn):
                 return False
             self.counters.promoted += 1
         elif was_fast and kind != FAST_KIND:
             self.counters.demoted += 1
+        self.ledger.record_move(self.tenant, self._obj(b.seq_id),
+                                b.kind, kind, bn)
         b.kind = kind
-        self.counters.migrated_bytes += self.block_nbytes()
+        self.counters.migrated_bytes += bn
         if self.spec is not None and b.k is not None:
             import jax
             sh = self._sharding(kind)
@@ -422,14 +462,32 @@ class TieredKVCache:
     """
 
     def __init__(self, shares: Sequence[Tuple[str, float]],
-                 keys: Sequence[str] = ("kv_k", "kv_v")):
+                 keys: Sequence[str] = ("kv_k", "kv_v"),
+                 ledger=None, tenant: str = "oneshot_kv"):
         self.shares = list(shares)
         self.keys = list(keys)
         self._tiered: Dict[str, object] = {}
+        from ..pool.ledger import ResidencyLedger
+        self.ledger = ledger if ledger is not None else ResidencyLedger()
+        self.tenant = tenant
+        self.ledger.register_tenant(tenant)
 
     @property
     def offloaded(self) -> bool:
         return any(f > 0 for kind, f in self.shares if kind != FAST_KIND)
+
+    def _sync_ledger(self, key: str) -> None:
+        """Mirror one buffer's realized per-kind bytes into the ledger
+        (the TieredArray's block rounding is the truth, not the asked
+        shares)."""
+        from ..core.tiered_array import LOGICAL_KINDS
+        ta = self._tiered[key]
+        placement = {k: ta.bytes_on(k)
+                     for k in set(LOGICAL_KINDS) | set(ta.kinds)
+                     if ta.bytes_on(k) > 0}
+        if self.ledger.has(self.tenant, key):
+            self.ledger.retire(self.tenant, key)
+        self.ledger.register(self.tenant, key, placement)
 
     def stash(self, cache: Dict[str, object]) -> None:
         """Place the cache's KV buffers across the configured shares."""
@@ -441,6 +499,7 @@ class TieredKVCache:
                 arr = cache[key]
                 self._tiered[key] = TieredArray.place(
                     arr.reshape(arr.shape[0], -1), self.shares)
+                self._sync_ledger(key)
 
     def restore(self, cache: Dict[str, object]) -> Dict[str, object]:
         """Materialize tier-resident KV back into the cache dict."""
@@ -459,7 +518,8 @@ class TieredKVCache:
                 cache[key].reshape(cache[key].shape[0], -1))
 
     def bytes_on(self, kind: str) -> int:
-        return sum(ta.bytes_on(kind) for ta in self._tiered.values())
+        """Tier occupancy, read through the ledger (single source)."""
+        return self.ledger.bytes_on(kind, self.tenant)
 
 
 def spec_from_config(cfg, block_tokens: int) -> KVBlockSpec:

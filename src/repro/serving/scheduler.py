@@ -6,8 +6,15 @@ iteration, against the pool's block accounting:
 
   * FIFO admission from the wait queue, capped by (a) an admission
     budget derived from the cost model's capacity reasoning (LIO 3:
-    batch scales with memory capacity) and (b) the pool having enough
-    free blocks for the request's prompt plus a growth margin;
+    batch scales with memory capacity), (b) the pool having enough
+    free blocks for the request's prompt plus a growth margin, and
+    (c) — with a ``TopologyGraph`` attached — a *link budget*: each
+    running request's KV gather is a flow from its blocks' resident
+    kinds to the fast kind, and ``TopologyGraph.contended_flows``
+    fair-shares the PCIe/UPI links those flows cross; a candidate
+    whose admission would drag any flow below
+    ``link_efficiency_floor`` of its offered bandwidth stays queued
+    (block capacity alone does not see shared-link saturation);
   * prefill/decode interleaving: at most ``max_prefill_per_iter`` new
     admissions per iteration, so admission bursts cannot starve the
     running batch (the latency/throughput split of Fig. 11);
@@ -22,11 +29,11 @@ import dataclasses
 import enum
 import math
 from collections import deque
-from typing import Deque, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from .kv_pool import PagedKVPool
+from .kv_pool import FAST_KIND, PagedKVPool
 
 
 class RequestState(enum.Enum):
@@ -116,20 +123,35 @@ class SchedulerConfig:
     # free blocks a request must leave after admission (growth margin,
     # in blocks) before it is let in — crude decode headroom control
     admission_margin_blocks: int = 1
+    # contention-aware admission (repro.topology): a candidate is
+    # admitted only while every gather flow keeps at least this
+    # fraction of its offered bandwidth under fair link sharing
+    link_efficiency_floor: float = 0.5
+    # assumed iteration period for converting a request's KV gather
+    # bytes into an offered bandwidth (GB/s = bytes / period / 1e9)
+    gather_period_s: float = 0.05
 
 
 class ContinuousBatchingScheduler:
-    """Queue + running set + preemption over a PagedKVPool."""
+    """Queue + running set + preemption over a PagedKVPool.
+
+    ``topology`` (a repro.topology.TopologyGraph whose tier nodes are
+    aliased to the pool's memory kinds) switches admission from pure
+    block capacity to capacity + shared-link budgeting.
+    """
 
     def __init__(self, pool: PagedKVPool,
-                 cfg: Optional[SchedulerConfig] = None):
+                 cfg: Optional[SchedulerConfig] = None,
+                 topology=None):
         self.pool = pool
         self.cfg = cfg or SchedulerConfig()
+        self.topology = topology
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []
         self.finished: List[Request] = []
         self._admit_stamp = 0
         self.preemption_events = 0
+        self.link_deferrals = 0       # admissions blocked by link budget
 
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
@@ -149,6 +171,66 @@ class ContinuousBatchingScheduler:
         """Blocks for the request's current context + one decode token."""
         return self.pool.blocks_for_tokens(req.context_len + 1)
 
+    # ------------------------------------------------------------------ #
+    def _gather_flow(self, kind: str, n_blocks: int):
+        """One KV-gather flow: ``n_blocks`` streamed from ``kind``'s
+        node to the fast kind's node each iteration (None if the
+        topology doesn't map the kinds or they share a node)."""
+        from ..topology import Flow
+        src = self.topology.node_of(kind)
+        dst = self.topology.node_of(FAST_KIND)
+        if src is None or dst is None or src == dst:
+            return None
+        offered = (n_blocks * self.pool.block_nbytes()
+                   / self.cfg.gather_period_s / 1e9)
+        return Flow(src, dst, offered) if offered > 0 else None
+
+    def _running_flows(self) -> List:
+        """Per-request gather flows for the running set, grouped by the
+        resident kind of each request's slow-tier blocks (read through
+        the pool's ledger-backed residency)."""
+        flows = []
+        for req in self.running:
+            per_kind: Dict[str, int] = {}
+            for b in self.pool.seq_blocks(req.rid):
+                if b.kind != FAST_KIND:
+                    per_kind[b.kind] = per_kind.get(b.kind, 0) + 1
+            for kind, n in per_kind.items():
+                f = self._gather_flow(kind, n)
+                if f is not None:
+                    flows.append(f)
+        return flows
+
+    def _link_budget_allows(self, req: Request, running: List,
+                            pending: List) -> bool:
+        """Does admitting ``req`` keep its own gather flow above the
+        efficiency floor without dragging any currently-healthy flow
+        below it?  Only the candidate's *marginal* effect counts: a
+        flow already below the floor (e.g. demotion-heavy residency on
+        an unrelated link) must not head-of-line-block admissions that
+        would not make it worse.  ``running`` is the admit-call's
+        snapshot of ``_running_flows()`` (residency cannot change
+        mid-admission); ``pending`` accumulates this call's admitted
+        candidates."""
+        cand = self._gather_flow(self.pool.default_kind,
+                                 self.blocks_needed(req))
+        if cand is None:
+            return True
+        floor = self.cfg.link_efficiency_floor
+        base = running + pending
+        healthy = [r.achieved_GBps >= floor * f.offered_GBps
+                   for f, r in zip(base,
+                                   self.topology.contended_flows(base))]
+        flows = base + [cand]
+        results = self.topology.contended_flows(flows)
+        ok = results[-1].achieved_GBps >= floor * cand.offered_GBps \
+            and all(r.achieved_GBps >= floor * f.offered_GBps
+                    for (f, r), was in zip(zip(base, results), healthy)
+                    if was)
+        if ok:
+            pending.append(cand)
+        return ok
+
     def admit(self, now_s: float = 0.0) -> List[Request]:
         """Admit waiting requests FIFO under batch + block budgets.
 
@@ -157,6 +239,9 @@ class ContinuousBatchingScheduler:
         admitted requests — the engine must prefill each one.
         """
         admitted: List[Request] = []
+        pending_flows: List = []       # flows of this call's admissions
+        running_flows: List = (self._running_flows()
+                               if self.topology is not None else [])
         margin = self.cfg.admission_margin_blocks
         while (self.waiting
                and len(self.running) < self.cfg.max_batch
@@ -166,6 +251,11 @@ class ContinuousBatchingScheduler:
                 break
             need = self.blocks_needed(head)
             if not self.pool.can_alloc(need + margin):
+                break
+            if self.topology is not None and \
+                    not self._link_budget_allows(head, running_flows,
+                                                 pending_flows):
+                self.link_deferrals += 1
                 break
             self.waiting.popleft()
             head.state = RequestState.RUNNING

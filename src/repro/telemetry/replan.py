@@ -39,6 +39,15 @@ hesitation cost once per distinct phase, not once per recurrence.
 Objects that appear mid-run (new sequences, freshly allocated state)
 are costed as if resident on ``default_tier`` — that is where a
 first-touch allocator actually put them.
+
+Residency truth lives in a ``repro.pool.ResidencyLedger``: the live
+"plan" is a *view* of what the ledger says is where.  With a shared
+ledger (the serving engine's pool, a TieredStateStore) the replanner
+prices deltas from the residency the physical client actually realized
+— the client records its own moves — and the tenant's arbitrated
+fast-tier budget caps how much fast capacity the policy may plan over.
+Standalone (no physical client), the replanner registers its objects as
+plan-origin and records realized shares itself.
 """
 from __future__ import annotations
 
@@ -47,10 +56,12 @@ from typing import (Dict, Hashable, Iterable, List, Mapping, Optional,
                     Tuple)
 
 from ..core.costmodel import plan_step_cost
-from ..core.migration import MigrationExecutor, MigrationStats
+from ..core.migration import (HUGE_PAGE_BYTES, MigrationExecutor,
+                              MigrationStats)
 from ..core.policies import (ObjectLevelInterleave, PlacementPlan, Policy,
                              _tier_order)
-from ..core.tiers import MemoryTier
+from ..core.tiers import GiB, MemoryTier
+from ..pool.ledger import ResidencyLedger
 from .events import AccessTrace
 
 
@@ -70,7 +81,8 @@ class ReplanDecision:
 
     epoch: int
     applied: bool
-    reason: str         # initial | win | cached_win | no_win | migration_cost
+    reason: str  # initial | win | cached_win | no_win | migration_cost
+    #              | budget (arbiter shrank the fast budget: mandatory)
     old_step_s: float = 0.0
     new_step_s: float = 0.0
     migration_s: float = 0.0
@@ -93,7 +105,9 @@ class AdaptiveReplanner:
                  executor: Optional[MigrationExecutor] = None,
                  default_tier: Optional[str] = None,
                  initial_plan: Optional[PlacementPlan] = None,
-                 topology=None, origin: Optional[str] = None):
+                 topology=None, origin: Optional[str] = None,
+                 ledger: Optional[ResidencyLedger] = None,
+                 tenant: str = "replan"):
         self.trace = trace
         self.topology = topology
         # distance-adjusted view: path latency/bandwidth folded into the
@@ -111,6 +125,11 @@ class AdaptiveReplanner:
         self.executor = executor or MigrationExecutor(self.tiers,
                                                       topology=topology)
         self.default_tier = default_tier or self.tier_order[-1]
+        # residency ledger: shared (pool/store tenant) or private
+        self.ledger = ledger if ledger is not None \
+            else ResidencyLedger(self.tiers)
+        self.tenant = tenant
+        self.ledger.register_tenant(tenant, trace=trace)
         self.plan = initial_plan
         self.stats = MigrationStats()
         self.decisions: List[ReplanDecision] = []
@@ -130,15 +149,59 @@ class AdaptiveReplanner:
     def moved_bytes(self) -> int:
         return self.stats.migrated_bytes
 
+    def _ensure_registered(self, nbytes: Mapping[str, int]) -> None:
+        """Make the ledger cover every placeable object.
+
+        New objects register at the live plan's shares if it names them
+        (the initial_plan seed) else on ``default_tier`` — first touch.
+        Plan-origin objects whose footprint drifted are re-scaled;
+        client-origin residency is never touched (the client records)."""
+        base = self.plan.shares if self.plan is not None else {}
+        for name, total in nbytes.items():
+            total = int(total)
+            if total <= 0:
+                continue
+            if not self.ledger.has(self.tenant, name):
+                sh = base.get(name, [(self.default_tier, 1.0)])
+                placement = self._exact_placement(sh, total)
+                self.ledger.register(self.tenant, name, placement,
+                                     origin="plan")
+            elif self.ledger.origin_of(self.tenant, name) == "plan":
+                self.ledger.resize(self.tenant, name, total,
+                                   grow_tier=self.default_tier)
+
+    def _exact_placement(self, shares, total: int) -> Dict[str, int]:
+        """Fraction shares -> bytes summing exactly to ``total``;
+        rounding slack lands on the default (slow) tier so it can never
+        inflate a budgeted fast tier."""
+        placement: Dict[str, int] = {}
+        for t, f in shares:
+            if f > 0:
+                placement[t] = placement.get(t, 0) + int(f * total)
+        slack = total - sum(placement.values())
+        if slack:
+            placement[self.default_tier] = placement.get(
+                self.default_tier, 0) + slack
+        return placement
+
     def _current_shares(self, names: Iterable[str]
                         ) -> Dict[str, List]:
-        """The live plan's shares, with unseen objects on default_tier."""
-        shares: Dict[str, List] = {}
-        base = self.plan.shares if self.plan is not None else {}
-        for name in names:
-            shares[name] = list(base.get(
-                name, [(self.default_tier, 1.0)]))
-        return shares
+        """Residency truth from the ledger, per placeable object."""
+        live = self.ledger.shares(self.tenant)
+        return {name: list(live.get(name, [(self.default_tier, 1.0)]))
+                for name in names}
+
+    def _planning_tiers(self) -> Dict[str, MemoryTier]:
+        """The policy's capacity view: the tenant's arbitrated fast-tier
+        budget (when one is set in the ledger) caps what the plan may
+        assume it owns — multi-tenant fairness enters the policy here."""
+        budget = self.ledger.budget(self.tenant, self.fast)
+        if budget is None:
+            return self.tiers
+        fast = self.tiers[self.fast]
+        capped = min(fast.capacity_GiB, budget / GiB)
+        return {**self.tiers,
+                self.fast: dataclasses.replace(fast, capacity_GiB=capped)}
 
     # ------------------------------------------------------------------ #
     def maybe_replan(self, epoch: int, nbytes: Mapping[str, int],
@@ -159,8 +222,19 @@ class AdaptiveReplanner:
             nbytes, window=cfg.window_epochs, pin_fast=pin_fast)
         if not any(o.bytes_per_step > 0 for o in objs):
             return None
+        self._ensure_registered(nbytes)
+        # budget compliance is not a performance optimization: when the
+        # arbiter shrank this tenant's fast budget below its current
+        # holding, a fresh plan against the capped capacity view is
+        # mandatory — a phase-cached plan predates the shrink and would
+        # "apply" a no-op delta while squatting on another tenant's
+        # grant.  Excess below one huge page is rounding, not
+        # squatting: byte-level flapping must not churn plans forever.
+        over_budget = self.ledger.over_budget(
+            self.tenant, self.fast) > HUGE_PAGE_BYTES
         cached, proven = (self._phase_plans.get(phase, (None, False))
-                          if phase is not None else (None, False))
+                          if phase is not None and not over_budget
+                          else (None, False))
         if cached is not None and any(n not in cached.shares
                                       for n in nbytes):
             cached = None      # inventory drifted: the cached plan is
@@ -169,10 +243,23 @@ class AdaptiveReplanner:
             new_plan = cached
             self.plan_cache_hits += 1
         else:
-            new_plan = self.policy.plan(objs, self.tiers)
+            new_plan = self.policy.plan(objs, self._planning_tiers())
 
         if self.plan is None:
-            self.plan = new_plan
+            # first adoption is allocation, not migration: plan-origin
+            # objects take the plan's shares for free (first touch
+            # follows the plan); client-recorded residency stays put
+            for name, total in nbytes.items():
+                if self.ledger.origin_of(self.tenant, name) != "plan":
+                    continue
+                sh = new_plan.shares.get(name)
+                if sh:
+                    self.ledger.set_residency(
+                        self.tenant, name,
+                        self._exact_placement(sh, int(total)))
+            self.plan = PlacementPlan(self._current_shares(nbytes),
+                                      new_plan.policy,
+                                      new_plan.tier_bytes)
             if phase is not None:
                 self._phase_plans[phase] = (new_plan, False)
             d = ReplanDecision(epoch, True, "initial",
@@ -199,31 +286,45 @@ class AdaptiveReplanner:
         # cannot churn (the PMO-4 failure mode)
         min_speedup = (1.0 if cached is not None and proven
                        else cfg.min_speedup)
-        if old_cost < new_cost * min_speedup:
+        if over_budget:
+            d.reason = "budget"
+            self._apply(d, delta, nbytes, new_plan, phase,
+                        cache_proven=False)
+        elif old_cost < new_cost * min_speedup:
             pass                          # hysteresis: win too small
         elif (old_cost - new_cost) * cfg.amortize_steps <= mig_s:
             d.reason = "migration_cost"
         else:
-            self.executor.execute(delta, self.stats)
-            done = sum(b for _, b in self.executor.last_moves)
-            # feedback on denied moves: adopt the residency that was
-            # actually realized, not the one the policy intended
-            realized = MigrationExecutor.realized_shares(
-                old_shares, self.executor.last_moves, nbytes)
-            merged = dict(old_shares)
-            merged.update(realized)
-            self.plan = PlacementPlan(merged, new_plan.policy,
-                                      new_plan.tier_bytes)
-            d.applied = True
             d.reason = "cached_win" if cached is not None else "win"
-            d.moved_bytes = done
-            d.denied_bytes = max(delta.total_bytes - done, 0)
-            if phase is not None:
-                # cache the *intended* plan: it is the phase's target
-                # placement; denials are per-occurrence capacity facts
-                self._phase_plans[phase] = (new_plan, True)
+            self._apply(d, delta, nbytes, new_plan, phase,
+                        cache_proven=True)
         self.decisions.append(d)
         return d
+
+    def _apply(self, d: ReplanDecision, delta, nbytes, new_plan,
+               phase: Optional[Hashable], cache_proven: bool) -> None:
+        """Execute a delta and adopt the realized residency."""
+        self.executor.execute(delta, self.stats)
+        done = sum(b for _, b in self.executor.last_moves)
+        # feedback on denied moves: the ledger adopts the residency
+        # that was actually realized, not the one the policy intended.
+        # Physical clients (pool, state store) recorded their own moves
+        # inside move_fn; the replanner records only for the
+        # plan-origin objects it owns itself.
+        for m, b in self.executor.last_moves:
+            if b > 0 and self.ledger.origin_of(
+                    self.tenant, m.obj) == "plan":
+                self.ledger.record_move(self.tenant, m.obj,
+                                        m.src, m.dst, b)
+        self.plan = PlacementPlan(self._current_shares(nbytes),
+                                  new_plan.policy, new_plan.tier_bytes)
+        d.applied = True
+        d.moved_bytes = done
+        d.denied_bytes = max(delta.total_bytes - done, 0)
+        if phase is not None and cache_proven:
+            # cache the *intended* plan: it is the phase's target
+            # placement; denials are per-occurrence capacity facts
+            self._phase_plans[phase] = (new_plan, True)
 
     # ------------------------------------------------------------------ #
     def summary(self) -> Dict[str, float]:

@@ -20,6 +20,7 @@ def test_list_prints_all_modules():
     names = r.stdout.split()
     assert "tier_characterization" in names
     assert "adaptive_replan_bench" in names
+    assert "multi_tenant_bench" in names
 
 
 def test_unknown_benchmark_fails_loudly():

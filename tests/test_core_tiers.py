@@ -91,3 +91,38 @@ def test_loaded_latency_monotone(frac):
     hi = tier.loaded_latency(min((frac + 0.05), 1.0)
                              * tier.peak_bw_GBps * 0.9)
     assert hi >= lo - 1e-9
+
+
+def test_stream_assignment_topology_caps_shared_bottleneck():
+    """Topology-aware assign_streams: two tiers behind one narrow
+    shared link cannot both water-fill — the link caps their combined
+    marginal gain, so streams route to the independent local tier."""
+    from repro.topology import TopologyGraph
+
+    local = MemoryTier("LOCAL", 110, 200.0, 20.0, 256, kind="dram")
+    far_a = MemoryTier("FAR_A", 110, 200.0, 20.0, 256, kind="dram")
+    far_b = MemoryTier("FAR_B", 110, 200.0, 20.0, 256, kind="dram")
+    tiers = {"LOCAL": local, "FAR_A": far_a, "FAR_B": far_b}
+
+    g = TopologyGraph("shared-upi", origin="s0")
+    g.add_node("s0", "socket")
+    g.add_node("n_local", "numa", tier="LOCAL")
+    g.add_node("s1", "socket")
+    g.add_node("n_a", "numa", tier="FAR_A")
+    g.add_node("n_b", "numa", tier="FAR_B")
+    g.add_link("s0", "n_local", 0.0, 500.0, "local")
+    g.add_link("s0", "s1", 90.0, 60.0, "upi")      # narrow shared hop
+    g.add_link("s1", "n_a", 0.0, 500.0, "local")
+    g.add_link("s1", "n_b", 0.0, 500.0, "local")
+
+    flat_alloc, flat_agg = assign_streams(tiers, 30)
+    topo_alloc, topo_agg = assign_streams(tiers, 30, topology=g)
+    # flat water-filling splits streams evenly over identical tiers
+    assert flat_alloc["FAR_A"] + flat_alloc["FAR_B"] >= 18
+    # behind the 60 GB/s link, far streams stop paying once it is full:
+    # the local tier gets the majority of streams instead
+    assert topo_alloc["LOCAL"] > flat_alloc["LOCAL"]
+    assert topo_alloc["LOCAL"] > topo_alloc["FAR_A"] + topo_alloc["FAR_B"]
+    # delivered aggregate is honest: local peak + the link's capacity
+    assert topo_agg <= local.peak_bw_GBps + 60.0 + 1e-6
+    assert topo_agg < flat_agg

@@ -1,0 +1,404 @@
+"""repro.pool: residency ledger, fair-share arbiter, tiered state store,
+and the ledger-backed refactor of the KV pool + adaptive replanner."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import GiB, paper_system
+from repro.core.migration import MigrationExecutor
+from repro.pool import (LedgerError, ResidencyLedger, TenantDemand,
+                        TierBudgetArbiter, TieredStateStore)
+from repro.serving import FAST_KIND, PagedKVPool, TieredKVCache
+from repro.telemetry import AccessTrace, AdaptiveReplanner, ReplanConfig
+
+G = GiB
+
+
+def _tiers(ldram_gib=96):
+    t = {k: v for k, v in paper_system("A").items()
+         if k in ("LDRAM", "CXL")}
+    t["LDRAM"] = dataclasses.replace(t["LDRAM"], capacity_GiB=ldram_gib)
+    return t
+
+
+# ===================================================================== #
+# ResidencyLedger: accounting invariants                                 #
+# ===================================================================== #
+def test_ledger_register_alloc_free_roundtrip():
+    led = ResidencyLedger()
+    led.register_tenant("a")
+    led.register("a", "obj", {"LDRAM": 10, "CXL": 30})
+    assert led.object_bytes("a", "obj") == 40
+    assert led.bytes_on("LDRAM") == 10
+    led.record_alloc("a", "obj", "CXL", 5)
+    assert led.object_bytes("a", "obj", "CXL") == 35
+    led.record_free("a", "obj", "CXL", 35)
+    assert led.object_bytes("a", "obj") == 10
+    led.record_free("a", "obj", "LDRAM", 999)   # clamped, then retired
+    assert not led.has("a", "obj")
+    assert led.counters.allocs == 1 and led.counters.frees == 1
+
+
+def test_ledger_unknown_tenant_rejected():
+    led = ResidencyLedger()
+    with pytest.raises(LedgerError):
+        led.register("ghost", "x", {"LDRAM": 1})
+
+
+def test_ledger_move_accounting_clamps_to_source():
+    led = ResidencyLedger()
+    led.register_tenant("a")
+    led.register("a", "x", {"CXL": 100})
+    assert led.record_move("a", "x", "CXL", "LDRAM", 60) == 60
+    assert led.record_move("a", "x", "CXL", "LDRAM", 60) == 40  # clamp
+    assert led.placement("a", "x") == {"LDRAM": 100}
+    assert led.counters.migrated_bytes == 100
+    # shares view normalizes to fractions
+    assert led.shares("a")["x"] == [("LDRAM", 1.0)]
+
+
+def test_ledger_tenant_isolation_and_tier_occupancy():
+    led = ResidencyLedger()
+    led.register_tenant("a")
+    led.register_tenant("b")
+    led.register("a", "x", {"LDRAM": 30})
+    led.register("b", "x", {"LDRAM": 50, "CXL": 20})  # same obj name ok
+    assert led.bytes_on("LDRAM", "a") == 30
+    assert led.bytes_on("LDRAM", "b") == 50
+    assert led.bytes_on("LDRAM") == 80
+    assert led.tier_occupancy("LDRAM") == {"a": 30, "b": 50}
+    assert led.tenant_bytes("b") == 70
+
+
+def test_ledger_budget_and_capacity_gate_placement():
+    led = ResidencyLedger(capacity_bytes={"LDRAM": 100})
+    led.register_tenant("a")
+    led.register_tenant("b")
+    led.register("a", "x", {"LDRAM": 40})
+    led.set_budget("a", "LDRAM", 50)
+    assert led.headroom("a", "LDRAM") == 10          # budget binds
+    assert led.can_place("a", "LDRAM", 10)
+    assert not led.can_place("a", "LDRAM", 11)
+    # capacity binds across tenants even without a budget
+    led.register("b", "y", {"LDRAM": 55})
+    assert led.headroom("b", "LDRAM") == 5
+    # budget shrink below usage -> over_budget is visible
+    led.set_budget("a", "LDRAM", 25)
+    assert led.over_budget("a", "LDRAM") == 15
+    assert led.headroom("a", "LDRAM") < 0
+
+
+def test_ledger_priced_move_gated_and_recorded():
+    tiers = _tiers()
+    led = ResidencyLedger(tiers, capacity_bytes={"LDRAM": 64 * G})
+    led.register_tenant("a")
+    led.register("a", "x", {"CXL": 10 * G})
+    moved, cost = led.move("a", "x", "CXL", "LDRAM", 10 * G)
+    assert moved == 10 * G and cost > 0
+    assert led.placement("a", "x") == {"LDRAM": 10 * G}
+    # a full fast tier denies the move
+    led.register("a", "big", {"CXL": 60 * G})
+    moved, _ = led.move("a", "big", "CXL", "LDRAM", 60 * G)
+    assert moved == 54 * G                 # partial grant up to capacity
+    assert led.counters.denied_moves == 0
+    moved, _ = led.move("a", "big", "CXL", "LDRAM", G)
+    assert moved == 0
+    assert led.counters.denied_moves == 1
+
+
+def test_ledger_resize_growth_lands_on_grow_tier():
+    led = ResidencyLedger()
+    led.register_tenant("a")
+    led.register("a", "x", {"LDRAM": 50, "CXL": 50})
+    led.resize("a", "x", 200, grow_tier="CXL")
+    assert led.placement("a", "x") == {"LDRAM": 50, "CXL": 150}
+    led.resize("a", "x", 100)              # shrink: proportional
+    assert led.object_bytes("a", "x") == 100
+    assert led.placement("a", "x")["LDRAM"] == 25
+
+
+# ===================================================================== #
+# TierBudgetArbiter                                                      #
+# ===================================================================== #
+def _demand(t, hot, rate, weight=1.0, resident=None):
+    return TenantDemand(t, resident if resident is not None else hot,
+                        hot, rate, weight)
+
+
+def _arbiter(objective="fair_share", cap=64 * G, **kw):
+    led = ResidencyLedger(capacity_bytes={"LDRAM": cap})
+    return TierBudgetArbiter(led, "LDRAM", objective=objective, **kw), led
+
+
+def test_arbiter_fair_share_caps_at_demand_and_waterfills():
+    arb, _ = _arbiter()
+    split = arb.split([_demand("a", 10 * G, 1.0),
+                       _demand("b", 100 * G, 1.0)])
+    # a's ask is satisfied; the slack water-fills to b
+    assert split["a"] == 10 * G
+    assert split["b"] == 54 * G
+    assert sum(split.values()) <= 64 * G
+
+
+def test_arbiter_fair_share_equal_when_both_hungry():
+    arb, _ = _arbiter()
+    split = arb.split([_demand("a", 100 * G, 1.0),
+                       _demand("b", 100 * G, 1.0)])
+    assert split["a"] == split["b"] == 32 * G
+
+
+def test_arbiter_priority_weighted_split():
+    arb, _ = _arbiter(objective="priority")
+    split = arb.split([_demand("a", 100 * G, 1.0, weight=3.0),
+                       _demand("b", 100 * G, 1.0, weight=1.0)])
+    assert split["a"] == 48 * G and split["b"] == 16 * G
+
+
+def test_arbiter_throughput_fills_intense_tenant_first():
+    arb, _ = _arbiter(objective="throughput")
+    hot = _demand("hot", 40 * G, rate=80.0 * G)      # 2 sweeps/epoch
+    cold = _demand("cold", 60 * G, rate=6.0 * G)     # 0.1 sweeps/epoch
+    split = arb.split([hot, cold])
+    assert split["hot"] == 40 * G                     # full hot set
+    assert split["cold"] == 24 * G                    # the remainder
+
+
+def test_arbiter_unclaimed_capacity_stays_free():
+    arb, _ = _arbiter()
+    split = arb.split([_demand("a", 4 * G, 1.0, resident=40 * G),
+                       _demand("b", 8 * G, 1.0, resident=40 * G)])
+    assert sum(split.values()) == 12 * G     # no hoarding hand-out
+
+
+def test_arbiter_measures_demand_from_traces_and_applies():
+    led = ResidencyLedger(capacity_bytes={"LDRAM": 64 * G})
+    for name in ("serve", "train"):
+        led.register_tenant(name, trace=AccessTrace())
+        led.register(name, "obj", {"CXL": 40 * G})
+    # serve streams its object; train is idle (cold)
+    led.trace("serve").record("obj", read_bytes=40 * G)
+    led.trace("serve").advance_epoch()
+    led.trace("train").advance_epoch()
+    arb = TierBudgetArbiter(led, "LDRAM", window_epochs=2)
+    d = arb.rebalance(epoch=1)
+    assert d.budget_of("serve") == 40 * G
+    assert d.budget_of("train") == 0
+    assert led.budget("serve", "LDRAM") == 40 * G
+    # cold objects below hot_threshold contribute no demand
+    dm = arb.demand("train")
+    assert dm.hot_bytes == 0 and dm.resident_bytes == 40 * G
+
+
+def test_arbiter_rejects_unknown_objective_and_missing_capacity():
+    led = ResidencyLedger()
+    with pytest.raises(ValueError, match="objective"):
+        TierBudgetArbiter(led, "LDRAM", capacity_bytes=G,
+                          objective="chaos")
+    with pytest.raises(ValueError, match="capacity"):
+        TierBudgetArbiter(led, "LDRAM")
+
+
+# ===================================================================== #
+# TieredStateStore: real re-placement through the ledger                 #
+# ===================================================================== #
+def _store(cap_bytes=None):
+    led = ResidencyLedger(
+        _tiers(), capacity_bytes={"LDRAM": cap_bytes} if cap_bytes
+        else None)
+    return TieredStateStore(led, "train"), led
+
+
+def test_state_store_put_gather_roundtrip():
+    import jax.numpy as jnp
+    store, led = _store()
+    tree = {"m": jnp.arange(64, dtype=jnp.float32).reshape(16, 4),
+            "v": jnp.ones((8,), jnp.float32)}
+    store.put("opt", tree, [("CXL", 1.0)])
+    assert led.object_bytes("train", "opt") == 16 * 4 * 4 + 8 * 4
+    assert led.object_bytes("train", "opt", "CXL") == store.nbytes("opt")
+    got = store.gather("opt")
+    np.testing.assert_array_equal(np.asarray(got["m"]),
+                                  np.asarray(tree["m"]))
+
+
+def test_state_store_move_fn_replaces_blocks_and_records():
+    import jax.numpy as jnp
+    store, led = _store()
+    x = jnp.zeros((32, 8), jnp.float32)          # 1 KiB
+    store.put("opt", {"m": x}, [("CXL", 1.0)], )
+    nbytes = store.nbytes("opt")
+    moved = store.move_fn("opt", "CXL", "LDRAM", nbytes)
+    assert moved == nbytes
+    assert led.placement("train", "opt") == {"LDRAM": nbytes}
+    assert store.shares("opt") == [("LDRAM", 1.0)]
+    assert led.counters.migrated_bytes == nbytes
+    # unknown objects and same-tier moves are no-ops
+    assert store.move_fn("ghost", "CXL", "LDRAM", 10) == 0
+    assert store.move_fn("opt", "LDRAM", "LDRAM", 10) == 0
+
+
+def test_state_store_move_fn_respects_budget():
+    import jax.numpy as jnp
+    store, led = _store()
+    led.set_budget("train", "LDRAM", 0)
+    store.put("opt", {"m": jnp.zeros((16, 4), jnp.float32)},
+              [("CXL", 1.0)])
+    assert store.move_fn("opt", "CXL", "LDRAM", 10 ** 9) == 0
+    assert led.object_bytes("train", "opt", "LDRAM") == 0
+
+
+def test_state_store_update_preserves_placement():
+    import jax.numpy as jnp
+    store, led = _store()
+    store.put("opt", {"m": jnp.zeros((16, 4), jnp.float32)},
+              [("LDRAM", 0.5), ("CXL", 0.5)])
+    before = led.placement("train", "opt")
+    store.update("opt", {"m": jnp.ones((16, 4), jnp.float32)})
+    assert led.placement("train", "opt") == before
+    np.testing.assert_array_equal(
+        np.asarray(store.gather("opt")["m"]), np.ones((16, 4)))
+
+
+# ===================================================================== #
+# PagedKVPool through the ledger                                         #
+# ===================================================================== #
+def test_pool_residency_mirrored_in_ledger():
+    pool = PagedKVPool(8, 4, fast_block_budget=4)
+    pool.alloc(1, 3)
+    led = pool.ledger
+    assert led.bytes_on(pool.slow_kind, pool.tenant) == 3
+    assert pool.blocks_on(pool.slow_kind) == 3
+    pool.migrate(pool.table[1][0], FAST_KIND)
+    assert pool.fast_used() == 1
+    assert led.bytes_on(FAST_KIND, pool.tenant) == 1
+    pool.free_seq(1)
+    assert led.tenant_bytes(pool.tenant) == 0
+    assert pool.fast_used() == 0
+
+
+def test_pool_fast_budget_lives_in_ledger():
+    pool = PagedKVPool(8, 4, fast_block_budget=2)
+    assert pool.fast_block_budget == 2
+    assert pool.ledger.budget(pool.tenant, FAST_KIND) == 2
+    pool.fast_block_budget = 5                # arbiter-style update
+    assert pool.ledger.budget(pool.tenant, FAST_KIND) == 5
+
+
+def test_two_pools_share_one_arbitrated_fast_capacity():
+    """Two tenants on one ledger contend for a shared fast-tier
+    capacity: tenant budgets gate promotions on both pools."""
+    led = ResidencyLedger(capacity_bytes={FAST_KIND: 4})
+    pa = PagedKVPool(8, 4, ledger=led, tenant="a")
+    pb = PagedKVPool(8, 4, ledger=led, tenant="b")
+    led.set_budget("a", FAST_KIND, 3)
+    led.set_budget("b", FAST_KIND, 3)
+    pa.alloc(1, 4)
+    pb.alloc(1, 4)
+    assert sum(pa.migrate(b, FAST_KIND) for b in pa.table[1]) == 3
+    # b's budget says 3, but the shared capacity only has 1 left
+    assert sum(pb.migrate(b, FAST_KIND) for b in pb.table[1]) == 1
+    assert led.bytes_on(FAST_KIND) == 4
+    assert pa.fast_used() == 3 and pb.fast_used() == 1
+
+
+def test_tiered_kv_cache_reads_through_ledger():
+    import jax.numpy as jnp
+    cache = {"kv_k": jnp.zeros((4, 2, 8, 2, 4), jnp.bfloat16),
+             "kv_v": jnp.zeros((4, 2, 8, 2, 4), jnp.bfloat16)}
+    tk = TieredKVCache([("device", 0.5), ("pinned_host", 0.5)])
+    tk.stash(cache)
+    total = sum(cache[k].nbytes for k in ("kv_k", "kv_v"))
+    on = {k: tk.bytes_on(k) for k in ("device", "pinned_host")}
+    assert sum(on.values()) == total
+    assert on["device"] > 0 and on["pinned_host"] > 0
+    assert tk.ledger.tenant_bytes(tk.tenant) == total
+
+
+# ===================================================================== #
+# Replanner x ledger: budgets are mandatory                              #
+# ===================================================================== #
+def _hot_trace(spec, epochs=3):
+    tr = AccessTrace()
+    for _ in range(epochs):
+        for obj, nbytes in spec.items():
+            tr.record(obj, read_bytes=nbytes)
+        tr.advance_epoch()
+    return tr
+
+
+def test_replanner_budget_shrink_forces_compliance():
+    """An arbiter shrinking the tenant's fast budget below its holding
+    must trigger a mandatory replan that vacates the excess, even when
+    the hysteresis gate would have vetoed the move."""
+    tiers = _tiers()
+    nb = {"u": 60 * G}
+    tr = _hot_trace({"u": 10 * G})
+    led = ResidencyLedger(tiers)
+    rp = AdaptiveReplanner(
+        tr, tiers, "LDRAM",
+        cfg=ReplanConfig(replan_every=1, min_speedup=100.0),
+        executor=MigrationExecutor(tiers),
+        ledger=led, tenant="t")
+    d0 = rp.maybe_replan(1, nb)
+    assert d0.reason == "initial"
+    held = led.bytes_on("LDRAM", "t")
+    assert held > 0
+    led.set_budget("t", "LDRAM", held // 4)
+    tr.record("u", read_bytes=10 * G)
+    tr.advance_epoch()
+    d = rp.maybe_replan(2, nb)
+    assert d.applied and d.reason == "budget"
+    from repro.core.migration import HUGE_PAGE_BYTES
+    assert led.bytes_on("LDRAM", "t") <= held // 4 + HUGE_PAGE_BYTES
+    # within budget again: the 100x hysteresis blocks further churn
+    tr.record("u", read_bytes=10 * G)
+    tr.advance_epoch()
+    d2 = rp.maybe_replan(3, nb)
+    assert d2 is None or not d2.applied
+
+
+def test_replanner_prices_from_client_residency():
+    """With a shared ledger, the replanner's view of 'where things are'
+    is the client's recorded residency, not its own last plan."""
+    tiers = _tiers()
+    led = ResidencyLedger(tiers)
+    led.register_tenant("t")
+    led.register("t", "u", {"LDRAM": 20 * G, "CXL": 40 * G})
+    tr = _hot_trace({"u": 60 * G})
+    rp = AdaptiveReplanner(tr, tiers, "LDRAM",
+                           cfg=ReplanConfig(replan_every=1),
+                           executor=MigrationExecutor(tiers),
+                           ledger=led, tenant="t")
+    d = rp.maybe_replan(1, {"u": 60 * G})
+    assert d.reason == "initial"
+    # client-origin residency survives initial adoption untouched
+    assert led.placement("t", "u") == {"LDRAM": 20 * G, "CXL": 40 * G}
+    assert rp.plan.fraction_on("u", "LDRAM") == pytest.approx(1 / 3)
+
+def test_replanner_budget_shrink_bypasses_phase_cache():
+    """A phase-cached plan predates an arbiter shrink; the mandatory
+    compliance replan must re-plan against the capped capacity view,
+    not 'apply' the stale cached plan as a no-op."""
+    tiers = _tiers()
+    nb = {"u": 60 * G}
+    tr = _hot_trace({"u": 60 * G})
+    led = ResidencyLedger(tiers)
+    rp = AdaptiveReplanner(
+        tr, tiers, "LDRAM",
+        cfg=ReplanConfig(replan_every=1),
+        executor=MigrationExecutor(tiers),
+        ledger=led, tenant="t")
+    rp.maybe_replan(1, nb, phase="P")           # cached under P
+    held = led.bytes_on("LDRAM", "t")
+    assert held > 0
+    led.set_budget("t", "LDRAM", held // 2)
+    tr.record("u", read_bytes=60 * G)
+    tr.advance_epoch()
+    d = rp.maybe_replan(2, nb, phase="P")       # same phase signature
+    assert d.applied and d.reason == "budget"
+    assert not d.cached                          # cache was bypassed
+    assert d.moved_bytes > 0                     # a real vacate, not a no-op
+    # compliant within move (huge-page) granularity
+    from repro.core.migration import HUGE_PAGE_BYTES
+    assert led.bytes_on("LDRAM", "t") <= held // 2 + HUGE_PAGE_BYTES

@@ -302,3 +302,110 @@ def test_engine_rejects_hybrid_arch():
     cfg = get_smoke_config("jamba-1.5-large-398b")
     with pytest.raises(ValueError, match="attention-only"):
         ServingEngine(cfg, params=None)
+
+
+# ===================================================================== #
+# Contention-aware admission (repro.topology)                           #
+# ===================================================================== #
+def _narrow_link_topology(bw_GBps=5.0):
+    from repro.topology import TopologyGraph
+    g = TopologyGraph("pcie", origin="hbm")
+    g.add_node("hbm", "chip", tier=FAST_KIND)
+    g.add_node("host", "host", tier="pinned_host")
+    g.add_link("hbm", "host", 600.0, bw_GBps, "pcie")
+    return g
+
+
+def test_admission_budgets_shared_link():
+    """Block capacity alone would admit everything; the KV gathers'
+    shared PCIe link must cap the batch instead."""
+    from repro.serving.kv_pool import KVBlockSpec
+    spec = KVBlockSpec(n_units=2, n_attn=2, block_tokens=4, n_kv=2,
+                       head_dim=8)                 # 1 KiB per block
+    pool = PagedKVPool(64, 4, spec=spec)
+    sched = ContinuousBatchingScheduler(
+        pool, SchedulerConfig(max_batch=8, max_prefill_per_iter=8,
+                              link_efficiency_floor=0.9,
+                              gather_period_s=1e-6),
+        topology=_narrow_link_topology(5.0))
+    for i in range(6):
+        sched.submit(_req(i, plen=6))
+    admitted = sched.admit()
+    # each request offers ~2 GB/s of gather over a 5 GB/s link: the
+    # third would drag everyone under the 90% floor
+    assert len(admitted) == 2
+    assert sched.link_deferrals == 1
+    assert len(sched.waiting) == 4
+    # pool capacity was NOT the limit
+    assert pool.can_alloc(sched.blocks_needed(sched.waiting[0]) + 1)
+
+
+def test_admission_link_budget_counts_running_residency():
+    """Running requests' slow-resident blocks load the link; requests
+    whose blocks were promoted to the fast kind stop loading it."""
+    from repro.serving.kv_pool import KVBlockSpec
+    spec = KVBlockSpec(n_units=2, n_attn=2, block_tokens=4, n_kv=2,
+                       head_dim=8)
+    pool = PagedKVPool(64, 4, spec=spec, fast_block_budget=64,
+                       default_kind="pinned_host")
+    sched = ContinuousBatchingScheduler(
+        pool, SchedulerConfig(max_batch=8, max_prefill_per_iter=1,
+                              link_efficiency_floor=0.9,
+                              gather_period_s=1e-6),
+        topology=_narrow_link_topology(5.0))
+    for i in range(3):
+        sched.submit(_req(i, plen=6))
+    first = sched.admit()
+    assert len(first) == 1
+    pool.alloc(first[0].rid, 2)                  # its KV lands slow
+    second = sched.admit()
+    assert len(second) == 1
+    pool.alloc(second[0].rid, 2)
+    assert sched.admit() == []                   # link saturated
+    # promote one running request's blocks to the fast kind: its
+    # gather leaves the PCIe link, freeing budget for the third
+    for bid in pool.table[first[0].rid]:
+        assert pool.migrate(bid, FAST_KIND)
+    assert len(sched.admit()) == 1
+
+
+def test_admission_without_topology_unchanged():
+    pool = _meta_pool(32)
+    sched = ContinuousBatchingScheduler(pool, SchedulerConfig(
+        max_batch=8, max_prefill_per_iter=8))
+    for i in range(4):
+        sched.submit(_req(i))
+    assert len(sched.admit()) == 4
+    assert sched.link_deferrals == 0
+
+
+def test_admission_ignores_preexisting_violations_on_disjoint_links():
+    """A flow already under the floor (heavy residency on one link)
+    must not head-of-line-block a candidate whose gather rides a
+    different, healthy link — only the marginal effect counts."""
+    from repro.topology import TopologyGraph
+    from repro.serving.kv_pool import KVBlockSpec
+    g = TopologyGraph("two-links", origin="hbm")
+    g.add_node("hbm", "chip", tier=FAST_KIND)
+    g.add_node("host1", "host", tier="pinned_host")
+    g.add_node("host2", "host", tier="unpinned_host")
+    g.add_link("hbm", "host1", 600.0, 5.0, "pcie")    # saturated below
+    g.add_link("hbm", "host2", 900.0, 100.0, "pcie")  # plenty free
+    spec = KVBlockSpec(n_units=2, n_attn=2, block_tokens=4, n_kv=2,
+                       head_dim=8)                    # 1 KiB per block
+    pool = PagedKVPool(64, 4, spec=spec, default_kind="unpinned_host")
+    sched = ContinuousBatchingScheduler(
+        pool, SchedulerConfig(max_batch=8, max_prefill_per_iter=2,
+                              link_efficiency_floor=0.9,
+                              gather_period_s=1e-6),
+        topology=g)
+    # two running requests whose 3 blocks each gather over the narrow
+    # link: 2 x ~3 GB/s offered over 5 GB/s -> both already < 90%
+    for rid in (10, 11):
+        r = _req(rid, plen=10)
+        r.state = RequestState.RUNNING
+        sched.running.append(r)
+        pool.alloc(rid, 3, kind="pinned_host")
+    sched.submit(_req(0, plen=6))      # gathers over the wide link
+    assert [r.rid for r in sched.admit()] == [0]
+    assert sched.link_deferrals == 0

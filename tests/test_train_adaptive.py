@@ -1,0 +1,64 @@
+"""End-to-end train.py --adaptive: the replanner's decisions must land
+as *real* optimizer-state moves in the residency ledger (ROADMAP:
+executing replans for training state)."""
+import pytest
+
+from repro.launch import train as train_cli
+
+
+def _run(argv):
+    return train_cli.main(argv)
+
+
+def test_train_adaptive_migrates_opt_state_into_ledger(capsys):
+    telem = _run(["--arch", "llama3-8b", "--smoke", "--steps", "6",
+                  "--batch", "2", "--seq", "32",
+                  "--adaptive", "--replan-every", "2"])
+    assert telem is not None
+    led = telem.ledger
+    # real moves happened and were recorded
+    assert led.counters.migrated_bytes > 0
+    assert telem.replanner.replans_applied >= 1
+    # the ledger's placement is consistent with the applied plan: the
+    # hot fp32 state won fast-tier residency
+    fast_bytes = telem.opt_bytes_on(telem.fast)
+    assert fast_bytes > 0
+    place = led.placement(telem.tenant, telem.OPT_OBJ)
+    assert sum(place.values()) == telem.store.nbytes(telem.OPT_OBJ)
+    plan_fast = telem.replanner.plan.fraction_on(telem.OPT_OBJ,
+                                                 telem.fast)
+    got_fast = fast_bytes / telem.store.nbytes(telem.OPT_OBJ)
+    assert got_fast == pytest.approx(plan_fast, abs=0.05)
+    # the physical store agrees with the ledger (single source of truth)
+    assert telem.store.bytes_on(telem.OPT_OBJ, telem.fast) == fast_bytes
+    out = capsys.readouterr().out
+    assert "opt_state moved=" in out
+
+
+def test_train_without_adaptive_returns_no_telemetry():
+    telem = _run(["--arch", "llama3-8b", "--smoke", "--steps", "1",
+                  "--batch", "2", "--seq", "16"])
+    assert telem is None
+
+
+@pytest.mark.parametrize("flags", [
+    ["--replan-every", "4"],
+    ["--sample-rate", "0.5"],
+])
+def test_train_adaptive_knobs_require_adaptive(flags):
+    """Bugfix: --replan-every / --sample-rate without --adaptive used
+    to be silently accepted; they must error like --topology does."""
+    with pytest.raises(SystemExit):
+        _run(["--arch", "llama3-8b", "--smoke", "--steps", "1"] + flags)
+
+
+def test_train_topology_still_requires_adaptive():
+    with pytest.raises(SystemExit):
+        _run(["--arch", "llama3-8b", "--smoke", "--steps", "1",
+              "--topology", "vendor-a"])
+
+
+def test_train_tenant_requires_adaptive():
+    with pytest.raises(SystemExit):
+        _run(["--arch", "llama3-8b", "--smoke", "--steps", "1",
+              "--tenant", "team-a"])
