@@ -25,11 +25,10 @@ error across sampling rates (the PMO-2 overhead/accuracy tradeoff).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
-from repro.core import (GiB, ObjectLevelInterleave, TierPreferred,
-                        UniformInterleave, DataObject, paper_system,
-                        plan_step_cost)
+from repro.core import (DataObject, GiB, ObjectLevelInterleave, paper_system,
+                        plan_step_cost, TierPreferred, UniformInterleave)
 from repro.core.migration import MigrationExecutor
 from repro.telemetry import (AccessSampler, AccessTrace, AdaptiveReplanner,
                              PhaseDetector, ReplanConfig, SamplerConfig)

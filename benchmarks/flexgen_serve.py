@@ -7,17 +7,15 @@ prefill-vs-decode sensitivity split (LIO 2).
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.core import (GiB, llm_serve_objects, paper_system,
-                        plan_step_cost, policy_search)
+from repro.core import (GiB, llm_serve_objects, paper_system, plan_step_cost,
+                        policy_search)
 from repro.models import lm
-from repro.offload.serve_engine import (FlexGenEngine, ServeConfig,
-                                        max_batch_for_capacity)
+from repro.offload.serve_engine import (FlexGenEngine, max_batch_for_capacity,
+                                        ServeConfig)
 
 PLACEMENTS = {
     "ldram_only": [("device", 1.0)],

@@ -9,9 +9,9 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core import (GiB, ObjectLevelInterleave, TierPreferred,
-                        UniformInterleave, compare_policies,
-                        hpc_workload_objects, paper_system)
+from repro.core import (compare_policies, hpc_workload_objects,
+                        ObjectLevelInterleave, paper_system, TierPreferred,
+                        UniformInterleave)
 
 WORKLOADS = ("BT", "LU", "CG", "MG", "SP", "FT", "XSBench")
 

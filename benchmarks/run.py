@@ -17,15 +17,21 @@ Prints ``name,value,derived`` CSV.  Modules:
   kernel_bench           Pallas kernel microbenches
   roofline               per-cell roofline from the dry-run artifacts
 
-Usage: ``python benchmarks/run.py [--list] [--smoke] [name ...]``
-(no names = all).  Unknown names are an error.  ``--smoke`` asks each
-module that supports it for a reduced, CI-sized run.
+Usage: ``python benchmarks/run.py [--list] [--smoke] [--json PATH]
+[name ...]`` (no names = all).  Unknown names are an error.
+``--smoke`` asks each module that supports it for a reduced, CI-sized
+run.  ``--json PATH`` additionally writes a structured results
+artifact — per-bench status, wall time, and every metric row — which
+CI uploads on each run so the repo accumulates a machine-readable
+perf trajectory.
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import os
+import platform
 import sys
 import time
 import traceback
@@ -52,6 +58,32 @@ MODULES = [
 ]
 
 
+def write_json(path: str, results, smoke: bool, wall_s: float) -> None:
+    """Persist the structured results artifact (CI perf trajectory)."""
+    payload = {
+        "schema_version": 1,
+        "smoke": smoke,
+        "python": platform.python_version(),
+        "benchmarks": results,
+        "totals": {
+            "benchmarks": len(results),
+            "failed": sum(1 for r in results if r["status"] == "failed"),
+            "metrics": sum(len(r["metrics"]) for r in results),
+            "wall_s": wall_s,
+        },
+    }
+    try:
+        import jax
+        payload["jax"] = jax.__version__
+    except Exception:                                  # pragma: no cover
+        payload["jax"] = None
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}: {payload['totals']['metrics']} metrics "
+          f"from {len(results)} benchmarks", file=sys.stderr)
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("names", nargs="*",
@@ -60,6 +92,9 @@ def main(argv=None) -> None:
                     help="list available benchmark names and exit")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced run for modules that support it")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write structured results (per-bench status, "
+                         "wall time, metric rows) to PATH")
     args = ap.parse_args(argv)
 
     if args.list:
@@ -75,10 +110,14 @@ def main(argv=None) -> None:
 
     only = args.names or MODULES
     failures = 0
+    results = []
+    t_start = time.time()
     for name in MODULES:
         if name not in only:
             continue
         t0 = time.time()
+        entry = {"name": name, "status": "ok", "wall_s": 0.0,
+                 "metrics": []}
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             kwargs = {}
@@ -91,12 +130,23 @@ def main(argv=None) -> None:
                     print(f"{key},{val:.6g},{derived}")
                 else:
                     print(f"{key},{val},{derived}")
+                entry["metrics"].append(
+                    {"name": key, "value": val, "unit": derived})
             print(f"# {name}: {len(rows)} rows in "
                   f"{time.time() - t0:.1f}s", file=sys.stderr)
-        except Exception:
+        except Exception as e:
             failures += 1
+            entry["status"] = "failed"
+            entry["error"] = f"{type(e).__name__}: {e}"
             print(f"# {name}: FAILED", file=sys.stderr)
             traceback.print_exc()
+        entry["wall_s"] = round(time.time() - t0, 3)
+        results.append(entry)
+    if args.json:
+        # the artifact is written even on failure: a red run's partial
+        # trajectory is still a data point
+        write_json(args.json, results, args.smoke,
+                   round(time.time() - t_start, 3))
     if failures:
         sys.exit(1)
 

@@ -24,11 +24,10 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core import tpu_v5e_tiers, GB
+from repro.core import GB, tpu_v5e_tiers
 from repro.serving import (ContinuousBatchingScheduler, FAST_KIND,
-                           KVBlockTierer, PagedKVPool, Request,
-                           RequestState, SchedulerConfig,
-                           spec_from_config)
+                           KVBlockTierer, PagedKVPool, Request, RequestState,
+                           SchedulerConfig, spec_from_config)
 
 BLOCK_TOKENS = 16
 

@@ -11,9 +11,8 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import assign_streams, paper_system, tpu_v5e_tiers
+from repro.core import assign_streams, paper_system
 from repro.core.tiered_array import _device_sharding
 
 

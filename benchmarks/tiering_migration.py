@@ -7,8 +7,8 @@ archetypes (stable / scattered / uniform hot sets), including PMO 3
 """
 from __future__ import annotations
 
-from repro.core import (AutoNUMA, Block, MigrationSim, NoBalance, TPP,
-                        Tiering08, make_blocks_from_plan, paper_system,
+from repro.core import (AutoNUMA, Block, make_blocks_from_plan, MigrationSim,
+                        NoBalance, paper_system, Tiering08, TPP,
                         trace_scattered_hotset, trace_stable_hotset,
                         trace_uniform)
 

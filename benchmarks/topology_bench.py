@@ -25,9 +25,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Tuple
 
-from repro.core import (DataObject, GiB, PlacementPlan, UniformInterleave,
-                        distance_weighted_policy, plan_step_cost)
-from repro.topology import Flow, build_topology
+from repro.core import (DataObject, distance_weighted_policy, GiB,
+                        PlacementPlan, plan_step_cost, UniformInterleave)
+from repro.topology import build_topology, Flow
 
 G = GiB
 

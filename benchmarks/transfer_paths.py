@@ -12,8 +12,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.tiered_array import _device_sharding
 from repro.core import tpu_v5e_tiers
+from repro.core.tiered_array import _device_sharding
 
 
 def measured_rows():

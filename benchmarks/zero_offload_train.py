@@ -7,16 +7,13 @@ cost model for the paper's 4B/6B/8B settings.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.core import (compare_policies, llm_train_objects, paper_system,
-                        ObjectLevelInterleave, TierPreferred,
-                        UniformInterleave)
-from repro.data.pipeline import DataConfig, batch_for_step
+                        TierPreferred, UniformInterleave)
+from repro.data.pipeline import batch_for_step, DataConfig
 from repro.models import lm
 from repro.offload.train_engine import OffloadConfig, ZeroOffloadEngine
 

@@ -12,10 +12,10 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.core import (ObjectLevelInterleave, TierPreferred,  # noqa: E402
-                        UniformInterleave, compare_policies,
+from repro.core import (compare_policies,  # noqa: E402
                         distance_weighted_policy, hpc_workload_objects,
-                        paper_system)
+                        ObjectLevelInterleave, paper_system,
+                        TierPreferred, UniformInterleave)
 from repro.topology import build_topology  # noqa: E402
 
 WORKLOADS = ("BT", "LU", "CG", "MG", "SP", "FT", "XSBench")

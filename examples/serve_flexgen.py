@@ -14,7 +14,7 @@ from repro.configs import get_smoke_config              # noqa: E402
 from repro.core import tpu_v5e_tiers                    # noqa: E402
 from repro.models import lm                              # noqa: E402
 from repro.offload.serve_engine import (FlexGenEngine,  # noqa: E402
-                                        ServeConfig, search_placement)
+                                        search_placement, ServeConfig)
 
 
 def main():

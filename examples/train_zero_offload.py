@@ -7,7 +7,6 @@ with real memory-kind placement, checkpoint/restart included.
 """
 import argparse
 import sys
-import time
 
 import jax
 import jax.numpy as jnp

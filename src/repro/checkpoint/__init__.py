@@ -1,1 +1,3 @@
-from .store import save, restore, latest_step
+from .store import latest_step, restore, save
+
+__all__ = ["latest_step", "restore", "save"]

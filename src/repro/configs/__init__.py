@@ -1,4 +1,10 @@
 from .base import (LayerSpec, ModelConfig, ShapeConfig, SHAPES,
                    smoke_variant)
-from .registry import (ARCH_IDS, ASSIGNED_ARCHS, get_config,
-                       get_smoke_config, assigned_cells)
+from .registry import (ARCH_IDS, ASSIGNED_ARCHS, assigned_cells,
+                       get_config, get_smoke_config)
+
+__all__ = [
+    "ARCH_IDS", "ASSIGNED_ARCHS", "assigned_cells", "get_config",
+    "get_smoke_config", "LayerSpec", "ModelConfig", "SHAPES",
+    "ShapeConfig", "smoke_variant",
+]

@@ -2,9 +2,9 @@
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
-from .base import ModelConfig, ShapeConfig, SHAPES, smoke_variant
+from .base import ModelConfig, smoke_variant
 
 ARCH_IDS: List[str] = [
     "llama-3.2-vision-11b",

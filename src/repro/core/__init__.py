@@ -8,23 +8,42 @@
 - tiered_array: block-granular placement over JAX memory kinds
 - interleave: policy -> placement orchestration
 """
-from .tiers import (MemoryTier, paper_system, tpu_v5e_tiers, assign_streams,
-                    interleave_bandwidth, GiB, GB)
-from .objects import (DataObject, total_footprint,
-                      select_interleave_candidates, hpc_workload_objects,
-                      llm_train_objects, llm_serve_objects)
-from .policies import (Policy, PlacementPlan, TierPreferred, FirstTouch,
-                       UniformInterleave, WeightedInterleave,
-                       ObjectLevelInterleave, make_policy)
-from .costmodel import (StepCost, plan_step_cost, compare_policies,
-                        policy_search, SearchResult)
-from .migration import (Block, BlockMove, MigrationExecutor, MigrationSim,
-                        MigrationStats, NoBalance, PlacementDelta,
-                        AutoNUMA, Tiering08, TPP, make_blocks_from_plan,
-                        trace_stable_hotset, trace_scattered_hotset,
-                        trace_uniform, SimResult)
-from .tiered_array import (TieredArray, place_pytree, gather_pytree,
-                           available_memory_kinds, TIER_TO_MEMORY_KIND)
-from .interleave import (objects_from_pytree, realize_plan, plan_and_place,
-                         recommend_streams, distance_weights,
-                         distance_weighted_policy)
+from .costmodel import (compare_policies, plan_step_cost, policy_search,
+                        SearchResult, StepCost)
+from .interleave import (distance_weighted_policy, distance_weights,
+                         objects_from_pytree, plan_and_place, realize_plan,
+                         recommend_streams)
+from .migration import (AutoNUMA, Block, BlockMove, make_blocks_from_plan,
+                        MigrationExecutor, MigrationSim, MigrationStats,
+                        NoBalance, PlacementDelta, SimResult, Tiering08,
+                        TPP, trace_scattered_hotset, trace_stable_hotset,
+                        trace_uniform)
+from .objects import (DataObject, hpc_workload_objects, llm_serve_objects,
+                      llm_train_objects, select_interleave_candidates,
+                      total_footprint)
+from .policies import (FirstTouch, make_policy, ObjectLevelInterleave,
+                       PlacementPlan, Policy, TierPreferred,
+                       UniformInterleave, WeightedInterleave)
+from .tiered_array import (available_memory_kinds, gather_pytree,
+                           place_pytree, TIER_TO_MEMORY_KIND, TieredArray)
+from .tiers import (assign_streams, GB, GiB, interleave_bandwidth,
+                    MemoryTier, paper_system, tpu_v5e_tiers)
+
+__all__ = [
+    "assign_streams", "AutoNUMA", "available_memory_kinds", "Block",
+    "BlockMove", "compare_policies", "DataObject",
+    "distance_weighted_policy", "distance_weights", "FirstTouch",
+    "gather_pytree", "GB", "GiB", "hpc_workload_objects",
+    "interleave_bandwidth", "llm_serve_objects", "llm_train_objects",
+    "make_blocks_from_plan", "make_policy", "MemoryTier",
+    "MigrationExecutor", "MigrationSim", "MigrationStats", "NoBalance",
+    "ObjectLevelInterleave", "objects_from_pytree", "paper_system",
+    "place_pytree", "PlacementDelta", "PlacementPlan", "plan_and_place",
+    "plan_step_cost", "Policy", "policy_search", "realize_plan",
+    "recommend_streams", "SearchResult", "select_interleave_candidates",
+    "SimResult", "StepCost", "TIER_TO_MEMORY_KIND", "TieredArray",
+    "Tiering08", "TierPreferred", "total_footprint",
+    "TPP", "trace_scattered_hotset", "trace_stable_hotset",
+    "trace_uniform", "tpu_v5e_tiers", "UniformInterleave",
+    "WeightedInterleave",
+]

@@ -25,7 +25,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from .objects import DataObject
 from .policies import PlacementPlan, Policy
-from .tiers import MemoryTier, GB
+from .tiers import GB, MemoryTier
 
 
 @dataclasses.dataclass

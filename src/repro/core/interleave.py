@@ -14,8 +14,8 @@ import numpy as np
 
 from .objects import DataObject
 from .policies import PlacementPlan, Policy, WeightedInterleave
-from .tiers import MemoryTier, assign_streams
-from .tiered_array import TieredArray, TIER_TO_MEMORY_KIND
+from .tiered_array import TIER_TO_MEMORY_KIND, TieredArray
+from .tiers import assign_streams, MemoryTier
 
 
 def objects_from_pytree(tree, traffic_fn=None,

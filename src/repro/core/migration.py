@@ -30,7 +30,7 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .tiers import MemoryTier, GB
+from .tiers import GB, MemoryTier
 
 # Per-page kernel cost of a migration (unmap, copy setup, TLB shootdown) —
 # the stall that makes migration hurt OLI by up to -88% in the paper (PMO 4).
@@ -480,6 +480,60 @@ class MigrationExecutor:
             return total
         return self._path_cost_s(delta)
 
+    def move_resource_times(self, m: BlockMove
+                            ) -> Tuple[Dict[object, float], float]:
+        """One move's per-resource occupancy seconds plus its fixed
+        overhead (per-page kernel work + path round-trip latency).
+
+        The building block ``cost_s`` and the cross-tenant
+        ``pool.MoveScheduler`` both price with: a resource is an
+        endpoint tier or a traversed link, moves sharing one serialize
+        on it, moves on disjoint resources overlap.  Without a
+        topology the single resource is the slower endpoint tier (the
+        copy rides it), matching the flat-tier charging.
+        """
+        res_time: Dict[object, float] = {}
+        if m.nbytes <= 0:
+            return res_time, 0.0
+        if self.topology is None:
+            tier = self._slow_endpoint(m)
+            if tier is None:
+                return res_time, 0.0
+            res_time[("tier", tier.name)] = \
+                m.nbytes / (tier.bandwidth(self.streams) * GB)
+            return res_time, (m.nbytes / self.page_bytes) * self.page_cost_s
+        links = self.topology.tier_path(m.src, m.dst)
+        pages = -(-m.nbytes // self.page_bytes)   # ceil
+        lat_ns = sum(l.latency_ns for l in links)
+        overhead = pages * (self.page_cost_s + 2.0 * lat_ns * 1e-9)
+        for tname in (m.src, m.dst):
+            tier = self.tiers.get(tname)
+            if tier is None:
+                continue
+            bw = tier.bandwidth(self.streams) * GB
+            key = ("tier", tname)
+            res_time[key] = res_time.get(key, 0.0) + m.nbytes / bw
+        for link in links:
+            key = ("link", link.key)
+            res_time[key] = res_time.get(key, 0.0) \
+                + m.nbytes / (link.bw_GBps * GB)
+        return res_time, overhead
+
+    def move_resources(self, m: BlockMove) -> List[object]:
+        """The resource keys one move occupies (for grouping/ordering)."""
+        return list(self.move_resource_times(m)[0])
+
+    def move_cost_s(self, m: BlockMove) -> float:
+        """One move priced alone (bottleneck resource + overhead)."""
+        if self.topology is None:
+            tier = self._slow_endpoint(m)
+            if tier is None or m.nbytes <= 0:
+                return 0.0
+            return migration_time_s(m.nbytes, tier, self.streams,
+                                    self.page_bytes, self.page_cost_s)
+        res_time, overhead = self.move_resource_times(m)
+        return (max(res_time.values()) if res_time else 0.0) + overhead
+
     def _path_cost_s(self, delta: PlacementDelta) -> float:
         """Topology pricing: bandwidth charged per traversed resource
         (endpoint tiers + every link on the path), per-page kernel work
@@ -491,38 +545,29 @@ class MigrationExecutor:
         res_time: Dict[object, float] = {}
         overhead = 0.0
         for m in delta.moves:
-            if m.nbytes <= 0:
-                continue
-            links = self.topology.tier_path(m.src, m.dst)
-            pages = -(-m.nbytes // self.page_bytes)   # ceil
-            lat_ns = sum(l.latency_ns for l in links)
-            overhead += pages * (self.page_cost_s + 2.0 * lat_ns * 1e-9)
-            for tname in (m.src, m.dst):
-                tier = self.tiers.get(tname)
-                if tier is None:
-                    continue
-                bw = tier.bandwidth(self.streams) * GB
-                key = ("tier", tname)
-                res_time[key] = res_time.get(key, 0.0) + m.nbytes / bw
-            for l in links:
-                key = ("link", l.key)
-                res_time[key] = res_time.get(key, 0.0) \
-                    + m.nbytes / (l.bw_GBps * GB)
+            r, oh = self.move_resource_times(m)
+            overhead += oh
+            for key, t in r.items():
+                res_time[key] = res_time.get(key, 0.0) + t
         return (max(res_time.values()) if res_time else 0.0) + overhead
 
-    def execute(self, delta: PlacementDelta,
-                stats: Optional[MigrationStats] = None) -> MigrationStats:
-        stats = stats if stats is not None else self.stats
-        # promote/demote classification needs the *distance* view: with
-        # local-normalized tier descriptors the hop latency lives in the
-        # topology, and fast/slow would tie without it
+    def tier_rank(self) -> Dict[str, int]:
+        """Tiers ranked fastest (0) to slowest — the promote/demote
+        classification view.  Needs the *distance* view: with
+        local-normalized tier descriptors the hop latency lives in the
+        topology, and fast/slow would tie without it."""
         rank_tiers = (self.topology.effective_tiers(self.tiers)
                       if self.topology is not None else self.tiers)
         order = sorted(rank_tiers,
                        key=lambda k: (rank_tiers[k].unloaded_latency_ns
                                       + rank_tiers[k].hop_latency_ns,
                                       -rank_tiers[k].peak_bw_GBps))
-        rank = {t: i for i, t in enumerate(order)}
+        return {t: i for i, t in enumerate(order)}
+
+    def execute(self, delta: PlacementDelta,
+                stats: Optional[MigrationStats] = None) -> MigrationStats:
+        stats = stats if stats is not None else self.stats
+        rank = self.tier_rank()
         self.last_moves = []
         for m in delta.moves:
             done = (self.move_fn(m.obj, m.src, m.dst, m.nbytes)

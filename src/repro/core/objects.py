@@ -16,7 +16,7 @@ the "application semantics" §V-B says should guide interleaving.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Mapping, Optional, Tuple
+from typing import Iterable, List, Optional, Tuple
 
 
 @dataclasses.dataclass

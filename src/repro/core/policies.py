@@ -27,7 +27,7 @@ import dataclasses
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 from .objects import DataObject, select_interleave_candidates
-from .tiers import MemoryTier, GiB
+from .tiers import GiB, MemoryTier
 
 
 Share = Tuple[str, float]  # (tier name, fraction of object)

@@ -1,2 +1,7 @@
-from .pipeline import DataConfig, DataIterator, batch_for_step, \
-    global_batch_for_step
+from .pipeline import (batch_for_step, DataConfig, DataIterator,
+                       global_batch_for_step)
+
+__all__ = [
+    "batch_for_step", "DataConfig", "DataIterator",
+    "global_batch_for_step",
+]

@@ -12,10 +12,8 @@ shifting n-gram structure so losses are non-trivial and reproducible.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 

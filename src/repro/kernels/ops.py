@@ -9,7 +9,6 @@ from __future__ import annotations
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 
 from . import decode_attention as _dec
 from . import flash_attention as _fa

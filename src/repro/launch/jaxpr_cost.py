@@ -29,7 +29,7 @@ All numbers are GLOBAL (whole-mesh) — divide by chips for per-device.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Set
+from typing import Dict, Set
 
 import jax
 import numpy as np

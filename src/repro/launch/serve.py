@@ -92,6 +92,7 @@ def run_continuous(args, cfg, params) -> None:
         policy=args.policy, num_blocks=args.num_blocks,
         fast_block_budget=args.fast_blocks, adaptive=args.adaptive,
         replan_every=args.replan_every, sample_rate=args.sample_rate,
+        predictive=args.predictive,
         topology=args.topology, tenant=args.tenant)
     eng = ServingEngine(cfg, params, sv)
     rs = np.random.RandomState(0)
@@ -128,7 +129,10 @@ def run_continuous(args, cfg, params) -> None:
              f"moved={t['moved_bytes']/1e6:.2f} MB "
              f"denied={t['denied_bytes']/1e6:.2f} MB "
              f"plan_cache_hits={int(t['plan_cache_hits'])}"
-             if args.adaptive else ""))
+             if args.adaptive else "")
+          + (f" prefetches={int(t['prefetches'])} "
+             f"budget_preemptions={int(t['budget_preemptions'])}"
+             if args.predictive else ""))
     for rid, row in rep.per_request:
         print(f"  req{rid}: prompt={int(row['prompt_tokens'])} "
               f"new={int(row['new_tokens'])} "
@@ -169,6 +173,11 @@ def main(argv=None):
                          "observed access telemetry (continuous only)")
     ap.add_argument("--replan-every", type=int, default=8,
                     help="scheduler iterations between adaptive replans")
+    ap.add_argument("--predictive", action="store_true",
+                    help="predictive control plane: key replans by "
+                         "phase recurrence signature and pre-stage the "
+                         "proven plan of a predicted next phase "
+                         "(requires --adaptive)")
     ap.add_argument("--sample-rate",
                     type=_rate("--sample-rate"), default=1.0,
                     help="telemetry sampling rate (fraction of cache "
@@ -185,6 +194,10 @@ def main(argv=None):
                          "continuous only)")
     args = ap.parse_args(argv)
 
+    if args.predictive and not args.adaptive:
+        ap.error("--predictive requires --adaptive (prediction "
+                 "pre-stages the adaptive replanner's phase-cached "
+                 "plans)")
     if args.tenant is not None and args.scheduler != "continuous":
         ap.error("--tenant only takes effect with --scheduler "
                  "continuous (the paged pool is what registers a "

@@ -7,8 +7,7 @@ zero allocation), and pinned output shardings.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -1,11 +1,9 @@
 """Step builders: train_step / prefill_step / serve_step from a config."""
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
 from ..models import lm

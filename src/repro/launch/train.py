@@ -14,7 +14,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint import store
 from ..configs import get_config, get_smoke_config
@@ -55,13 +54,14 @@ class _TrainTelemetry:
     OPT_OBJ = "opt_state_fp32"
 
     def __init__(self, params, opt, replan_every: int, sample_rate: float,
-                 topology: str = None, tenant: str = "train"):
+                 topology: str = None, tenant: str = "train",
+                 predictive: bool = False):
         from ..core.migration import MigrationExecutor
         from ..core.tiers import tpu_v5e_tiers
         from ..pool import ResidencyLedger, TieredStateStore
-        from ..telemetry import (AccessSampler, AccessTrace, PhaseDetector,
-                                 AdaptiveReplanner, ReplanConfig,
-                                 SamplerConfig)
+        from ..telemetry import (AccessSampler, AccessTrace,
+                                 AdaptiveReplanner, PhaseDetector,
+                                 ReplanConfig, SamplerConfig)
         self.trace = AccessTrace()
         self.sampler = AccessSampler(
             self.trace, SamplerConfig(sample_rate=sample_rate))
@@ -80,6 +80,7 @@ class _TrainTelemetry:
                      if k in ("HBM", "HOST")}
         self.fast = fast
         self.tenant = tenant
+        self.predictive = predictive
         self.replan_every = max(replan_every, 1)
         slow = [t for t in tiers if t != fast][-1]
         self.ledger = ResidencyLedger(tiers)
@@ -123,9 +124,23 @@ class _TrainTelemetry:
             # refresh the mirror so an applied replan migrates the
             # *current* optimizer bytes, not the init-time ones
             self.store.update(self.OPT_OBJ, self._opt_fp32(opt))
-        d = self.replanner.maybe_replan(epoch, self.nbytes,
-                                        pin_fast=("params_bf16",),
-                                        phase=self.phases.label)
+        d = None
+        if self.predictive and self.phases.signature is not None:
+            # key plans by recurrence signature; pre-stage the proven
+            # plan of a phase predicted to start next epoch
+            cur = self.phases.expected_signature(1)
+            nxt = self.phases.expected_signature(2)
+            if nxt is not None and nxt != cur:
+                d = self.replanner.prefetch_phase(epoch, self.nbytes,
+                                                  nxt)
+            if d is None:
+                d = self.replanner.maybe_replan(
+                    epoch, self.nbytes, pin_fast=("params_bf16",),
+                    phase=cur)
+        else:
+            d = self.replanner.maybe_replan(epoch, self.nbytes,
+                                            pin_fast=("params_bf16",),
+                                            phase=self.phases.label)
         if d is not None and d.reason != "initial":
             print(f"  replan@{step}: {'applied' if d.applied else 'kept'} "
                   f"({d.reason}) old={d.old_step_s*1e3:.1f} ms "
@@ -148,7 +163,8 @@ class _TrainTelemetry:
               f"(shifts={len(self.phases.shifts)}), "
               f"replans={self.replanner.replans_applied}/"
               f"{len(self.replanner.decisions)} "
-              f"(cache_hits={self.replanner.plan_cache_hits}), "
+              f"(cache_hits={self.replanner.plan_cache_hits}, "
+              f"prefetches={self.replanner.prefetches}), "
               f"tier_order={'>'.join(self.replanner.tier_order)}")
         print(f"ledger[{self.tenant}]: opt_state moved="
               f"{self.ledger.counters.migrated_bytes/1e6:.2f} MB "
@@ -186,6 +202,10 @@ def main(argv=None):
                     help="residency-ledger tenant namespace for this "
                          "run's training state (default: train; "
                          "requires --adaptive)")
+    ap.add_argument("--predictive", action="store_true",
+                    help="key replans by phase recurrence signature "
+                         "and pre-stage the proven plan of a predicted "
+                         "next phase (requires --adaptive)")
     from ..topology import TOPOLOGY_CHOICES
     ap.add_argument("--topology", default=None,
                     choices=list(TOPOLOGY_CHOICES),
@@ -202,6 +222,10 @@ def main(argv=None):
             if val is not None:
                 ap.error(f"{flag} only takes effect with --adaptive "
                          f"(the telemetry sidecar is what consumes it)")
+        if args.predictive:
+            ap.error("--predictive requires --adaptive (prediction "
+                     "pre-stages the adaptive replanner's phase-cached "
+                     "plans)")
     if args.replan_every is None:
         args.replan_every = 10
     if args.sample_rate is None:
@@ -248,7 +272,8 @@ def main(argv=None):
 
         telem = (_TrainTelemetry(params, opt, args.replan_every,
                                  args.sample_rate, args.topology,
-                                 tenant=args.tenant)
+                                 tenant=args.tenant,
+                                 predictive=args.predictive)
                  if args.adaptive else None)
         for i in range(start, args.steps):
             b = next(it)

@@ -1,1 +1,3 @@
-from . import modules, lm
+from . import lm, modules
+
+__all__ = ["lm", "modules"]

@@ -21,8 +21,6 @@ plus a scalar "index" (tokens already in cache).
 """
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -16,7 +16,6 @@ from __future__ import annotations
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 F = "__fsdp__"   # placeholder resolved to the fsdp axis

@@ -1,3 +1,9 @@
-from .train_engine import ZeroOffloadEngine, OffloadConfig, StepTiming
-from .serve_engine import (FlexGenEngine, ServeConfig, ServeStats,
-                           search_placement, max_batch_for_capacity)
+from .serve_engine import (FlexGenEngine, max_batch_for_capacity,
+                           search_placement, ServeConfig, ServeStats)
+from .train_engine import OffloadConfig, StepTiming, ZeroOffloadEngine
+
+__all__ = [
+    "FlexGenEngine", "max_batch_for_capacity", "OffloadConfig",
+    "search_placement", "ServeConfig", "ServeStats", "StepTiming",
+    "ZeroOffloadEngine",
+]

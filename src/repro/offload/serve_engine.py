@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Any, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,9 +25,8 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core import costmodel, objects as obj_mod, tiers as tiers_mod
-from ..core.tiered_array import place_pytree, gather_pytree
+from ..core.tiered_array import gather_pytree, place_pytree
 from ..launch import steps as steps_mod
-from ..models import lm
 from ..serving.kv_pool import TieredKVCache
 
 

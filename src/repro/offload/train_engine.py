@@ -23,17 +23,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core.tiered_array import TieredArray, place_pytree, gather_pytree
+from ..core.tiered_array import gather_pytree, place_pytree, TieredArray
 from ..kernels import ops as kops
 from ..launch import steps as steps_mod
-from ..models import lm
 from ..optim import adam
 
 

@@ -1,1 +1,5 @@
-from .adam import AdamConfig, init_state, init_state_shapes, apply_update
+from .adam import AdamConfig, apply_update, init_state, init_state_shapes
+
+__all__ = [
+    "AdamConfig", "apply_update", "init_state", "init_state_shapes",
+]

@@ -14,16 +14,23 @@ workloads:
 - state_store: ``TieredStateStore`` holds pytrees (fp32 optimizer
                state) as TieredArrays and executes replanner deltas as
                real block re-placements recorded in the ledger
+- movesched:   ``MoveScheduler`` batches every tenant's placement
+               deltas per round, coalesces them, and orders them
+               priority-weighted over the bottleneck links their
+               topology paths share before execution
 """
+from .arbiter import (ArbiterDecision, OBJECTIVES, PhaseDemand,
+                      PhaseDemandTable, TenantDemand, TierBudgetArbiter)
 from .ledger import (LedgerCounters, LedgerError, ResidencyLedger, Tenant,
                      UNBOUNDED)
-from .arbiter import (OBJECTIVES, ArbiterDecision, TenantDemand,
-                      TierBudgetArbiter)
+from .movesched import MoveRound, MoveScheduler, ScheduledMove
 from .state_store import TieredStateStore
 
 __all__ = [
     "LedgerCounters", "LedgerError", "ResidencyLedger", "Tenant",
     "UNBOUNDED",
-    "OBJECTIVES", "ArbiterDecision", "TenantDemand", "TierBudgetArbiter",
+    "OBJECTIVES", "ArbiterDecision", "PhaseDemand", "PhaseDemandTable",
+    "TenantDemand", "TierBudgetArbiter",
+    "MoveRound", "MoveScheduler", "ScheduledMove",
     "TieredStateStore",
 ]

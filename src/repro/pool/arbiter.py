@@ -22,11 +22,24 @@ objective:
 Budgets land in the ledger (``set_budget``), where every placement path
 — pool promotions, replanner deltas, state-store re-places — consults
 them through ``can_place``.
+
+**Predictive arbitration** (``predictive=True``): measured demand reacts
+one epoch *after* a phase shift — a recurring decode burst runs its
+first epoch under the previous lull's budget (the burst-entry lag the
+multi-tenant bench exposes).  The predictive arbiter runs a
+``PhaseDetector`` over each tenant's trace namespace and keeps a small
+**phase -> demand table** keyed by recurrence signature: each rebalance
+it (a) EMA-learns the demand measured under the *current* signature and
+(b) grants from the demand remembered for the signatures *predicted*
+for the next two epochs (element-wise max — budget arrives one epoch
+early and is released the epoch a phase actually ends).  Unknown
+signatures fall back to the reactive measured demand, and entries whose
+signature stops recurring are TTL-evicted.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional
+from typing import Dict, Hashable, List, Mapping, Optional
 
 from .ledger import ResidencyLedger
 
@@ -42,12 +55,71 @@ class TenantDemand:
     hot_bytes: int             # bytes with observed traffic (fast-worthy)
     bytes_per_step: float      # traffic rate over the demand window
     weight: float = 1.0
+    source: str = "measured"   # measured | predicted
 
     @property
     def intensity(self) -> float:
         """Traffic per resident byte — the marginal utility of giving
         this tenant one more fast byte."""
         return self.bytes_per_step / max(self.hot_bytes, 1)
+
+
+@dataclasses.dataclass
+class PhaseDemand:
+    """Remembered demand for one recurrence signature."""
+
+    hot_bytes: float
+    bytes_per_step: float
+    last_seen_epoch: int
+    hits: int = 1
+
+
+class PhaseDemandTable:
+    """signature -> EMA-smoothed demand, with TTL + size-bounded eviction.
+
+    The table is deliberately small: it remembers *recurring* phases
+    (burst/lull/steady), not every epoch — ``max_entries`` bounds it and
+    ``ttl_epochs`` retires signatures that stopped recurring so a dead
+    phase cannot keep pre-claiming fast capacity.
+    """
+
+    def __init__(self, ttl_epochs: int = 256, max_entries: int = 32,
+                 alpha: float = 0.5):
+        self.ttl_epochs = int(ttl_epochs)
+        self.max_entries = int(max_entries)
+        self.alpha = float(alpha)
+        self.entries: Dict[Hashable, PhaseDemand] = {}
+        self.evictions = 0
+
+    def observe(self, sig: Hashable, hot_bytes: float,
+                bytes_per_step: float, epoch: int) -> None:
+        e = self.entries.get(sig)
+        if e is None:
+            self.entries[sig] = PhaseDemand(float(hot_bytes),
+                                            float(bytes_per_step), epoch)
+        else:
+            a = self.alpha
+            e.hot_bytes += a * (hot_bytes - e.hot_bytes)
+            e.bytes_per_step += a * (bytes_per_step - e.bytes_per_step)
+            e.last_seen_epoch = epoch
+            e.hits += 1
+
+    def lookup(self, sig: Hashable, epoch: int) -> Optional[PhaseDemand]:
+        e = self.entries.get(sig)
+        if e is None or epoch - e.last_seen_epoch > self.ttl_epochs:
+            return None
+        return e
+
+    def evict_stale(self, epoch: int) -> None:
+        stale = {s for s, e in self.entries.items()
+                 if epoch - e.last_seen_epoch > self.ttl_epochs}
+        live = [s for s in self.entries if s not in stale]
+        if len(live) > self.max_entries:
+            live.sort(key=lambda s: self.entries[s].last_seen_epoch)
+            stale.update(live[: len(live) - self.max_entries])
+        for s in stale:
+            del self.entries[s]
+            self.evictions += 1
 
 
 @dataclasses.dataclass
@@ -71,7 +143,9 @@ class TierBudgetArbiter:
                  objective: str = "fair_share",
                  window_epochs: Optional[int] = 4,
                  floor_bytes: int = 0,
-                 hot_threshold: float = 0.05):
+                 hot_threshold: float = 0.05,
+                 predictive: bool = False,
+                 signature_ttl_epochs: int = 256):
         if objective not in OBJECTIVES:
             raise ValueError(f"unknown objective {objective!r}; "
                              f"choose from {OBJECTIVES}")
@@ -95,11 +169,18 @@ class TierBudgetArbiter:
         # a drained serving engine's cold KV stops counting as demand
         self.hot_threshold = float(hot_threshold)
         self.decisions: List[ArbiterDecision] = []
+        # predictive mode: per-tenant phase detectors + demand tables
+        self.predictive = bool(predictive)
+        self.signature_ttl_epochs = int(signature_ttl_epochs)
+        self._detectors: Dict[str, object] = {}
+        self._tables: Dict[str, PhaseDemandTable] = {}
+        self.predicted_grants = 0     # demands served from the table
 
     # ------------------------------------------------------------------ #
     # demand measurement                                                 #
     # ------------------------------------------------------------------ #
-    def demand(self, tenant: str) -> TenantDemand:
+    def demand(self, tenant: str,
+               window: Optional[int] = None) -> TenantDemand:
         """Read one tenant's demand from its trace namespace: hot bytes
         are the footprints of objects with traffic in the window; with
         no trace attached the whole residency counts as hot."""
@@ -110,7 +191,8 @@ class TierBudgetArbiter:
         if trace is None:
             return TenantDemand(tenant, resident, resident, float(resident),
                                 info.weight)
-        traffic = trace.object_traffic(self.window_epochs)
+        traffic = trace.object_traffic(
+            self.window_epochs if window is None else window)
         hot = 0
         rate = 0.0
         for obj, t in traffic.items():
@@ -124,8 +206,82 @@ class TierBudgetArbiter:
         return TenantDemand(tenant, resident, min(hot, resident), rate,
                             info.weight)
 
-    def demands(self) -> List[TenantDemand]:
-        return [self.demand(t) for t in sorted(self.ledger.tenants)]
+    def demands(self, epoch: int = 0) -> List[TenantDemand]:
+        if not self.predictive:
+            return [self.demand(t) for t in sorted(self.ledger.tenants)]
+        return [self._predicted_demand(t, epoch)
+                for t in sorted(self.ledger.tenants)]
+
+    # ------------------------------------------------------------------ #
+    # prediction                                                         #
+    # ------------------------------------------------------------------ #
+    def detector(self, tenant: str):
+        """The tenant's PhaseDetector (created lazily over its trace;
+        None when the tenant has no trace namespace to detect on)."""
+        det = self._detectors.get(tenant)
+        if det is None:
+            trace = self.ledger.trace(tenant)
+            if trace is None:
+                return None
+            from ..telemetry.phases import PhaseDetector
+            det = PhaseDetector(
+                trace, signature_ttl_epochs=self.signature_ttl_epochs)
+            self._detectors[tenant] = det
+        return det
+
+    def expected_signature(self, tenant: str, ahead: int = 1):
+        """The tenant's predicted recurrence signature ``ahead`` epochs
+        past the last completed one (None without a trace/history)."""
+        det = self.detector(tenant)
+        return det.expected_signature(ahead) if det is not None else None
+
+    def table(self, tenant: str) -> PhaseDemandTable:
+        t = self._tables.get(tenant)
+        if t is None:
+            t = PhaseDemandTable(ttl_epochs=self.signature_ttl_epochs)
+            self._tables[tenant] = t
+        return t
+
+    def _predicted_demand(self, tenant: str, epoch: int) -> TenantDemand:
+        """Demand for the *upcoming* epochs: learn the measured demand
+        under the current signature, then grant from the table entries
+        of the signatures predicted one and two epochs ahead (max — the
+        two-epoch horizon is what lets a pre-staged promotion run the
+        epoch *before* a burst).  Reactive fallback throughout."""
+        det = self.detector(tenant)
+        if det is None:
+            return self.demand(tenant)
+        det.update()
+        sig = det.signature
+        # attribute the measurement to the signature's own run so a
+        # long window cannot smear the previous phase into this one
+        window = self.window_epochs
+        if window is not None and det.epochs_in_signature > 0:
+            window = min(window, det.epochs_in_signature)
+        measured = self.demand(tenant, window=window)
+        table = self.table(tenant)
+        if sig is not None:
+            table.observe(sig, measured.hot_bytes,
+                          measured.bytes_per_step, epoch)
+        table.evict_stale(epoch)
+        hits = []
+        for ahead in (1, 2):
+            nxt = det.expected_signature(ahead)
+            if nxt is None:
+                continue
+            hit = table.lookup(nxt, epoch)
+            if hit is not None:
+                hits.append(hit)
+        if not hits:
+            return measured
+        hot = max(h.hot_bytes for h in hits)
+        rate = max(h.bytes_per_step for h in hits)
+        if hot == measured.hot_bytes and rate == measured.bytes_per_step:
+            return measured
+        self.predicted_grants += 1
+        return TenantDemand(tenant, measured.resident_bytes,
+                            min(int(hot), measured.resident_bytes),
+                            rate, measured.weight, source="predicted")
 
     # ------------------------------------------------------------------ #
     # split objectives                                                   #
@@ -186,8 +342,9 @@ class TierBudgetArbiter:
 
     # ------------------------------------------------------------------ #
     def rebalance(self, epoch: int = 0) -> ArbiterDecision:
-        """Measure demand, split, and push budgets into the ledger."""
-        demands = self.demands()
+        """Measure (or predict) demand, split, and push budgets into
+        the ledger."""
+        demands = self.demands(epoch)
         budgets = self.split(demands)
         for tenant, b in budgets.items():
             self.ledger.set_budget(tenant, self.fast_tier, b)

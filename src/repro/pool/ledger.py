@@ -322,6 +322,17 @@ class ResidencyLedger:
             return 0
         return max(self.bytes_on(tier, tenant) - b, 0)
 
+    def over_budget_tenants(self, tier: str) -> Dict[str, int]:
+        """Every tenant currently above its budget on ``tier`` — the
+        view budget-compliance enforcers (scheduler preemption, state
+        demotion) poll after an arbiter shrink."""
+        out: Dict[str, int] = {}
+        for t in self.tenants:
+            over = self.over_budget(t, tier)
+            if over > 0:
+                out[t] = over
+        return out
+
     # ------------------------------------------------------------------ #
     # priced, gated moves                                                #
     # ------------------------------------------------------------------ #

@@ -18,8 +18,8 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 
-from ..core.tiered_array import (TIER_TO_MEMORY_KIND, TieredArray,
-                                 sharding_for_kind)
+from ..core.tiered_array import (sharding_for_kind, TIER_TO_MEMORY_KIND,
+                                 TieredArray)
 from .ledger import ResidencyLedger
 
 Share = Tuple[str, float]
@@ -123,6 +123,21 @@ class TieredStateStore:
         return [(t, b / max(total, 1)) for t, b in sorted(place.items())]
 
     # ------------------------------------------------------------------ #
+    def demote_over_budget(self, fast_tier: str, slow_tier: str) -> int:
+        """Ledger-driven compliance for training state: when an arbiter
+        shrank this tenant's ``fast_tier`` budget below its holdings,
+        demote blocks to ``slow_tier`` until the ledger reconciles —
+        the state-store mirror of the scheduler's budget preemption
+        (which evicts sequences; state has no queue to re-enter, so it
+        demotes in place).  Returns the bytes demoted."""
+        moved = 0
+        for name in sorted(self._objs):
+            over = self.ledger.over_budget(self.tenant, fast_tier)
+            if over <= 0:
+                break
+            moved += self.move_fn(name, fast_tier, slow_tier, over)
+        return moved
+
     def move_fn(self, obj: str, src: str, dst: str, nbytes: int) -> int:
         """MigrationExecutor hook: realize an object-level byte move as
         block re-placements.  Budget-gated per block through the ledger;

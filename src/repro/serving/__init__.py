@@ -8,16 +8,16 @@ preemption-by-recompute (scheduler), a paged decode engine over the
 Pallas decode-attention kernel (engine), and request/pool/migration
 metrics (metrics).
 """
+from .engine import (check_paged_support, kind_tiers, ServingConfig,
+                     ServingEngine, ServingReport)
 from .kv_pool import (FAST_KIND, KVBlock, KVBlockSpec, PagedKVPool,
-                      PoolExhausted, TieredKVCache, spec_from_config)
-from .tiering import (KVBlockTierer, POLICIES, TieringStats,
-                      make_tiering_policy)
+                      PoolExhausted, spec_from_config, TieredKVCache)
+from .metrics import percentile, PoolSample, RequestMetrics, ServingMetrics
 from .scheduler import (AdmissionPlan, ContinuousBatchingScheduler,
-                        Request, RequestState, SchedulerConfig,
-                        plan_admission)
-from .metrics import PoolSample, RequestMetrics, ServingMetrics, percentile
-from .engine import (ServingConfig, ServingEngine, ServingReport,
-                     check_paged_support, kind_tiers)
+                        plan_admission, Request, RequestState,
+                        SchedulerConfig)
+from .tiering import (KVBlockTierer, make_tiering_policy, POLICIES,
+                      TieringStats)
 
 __all__ = [
     "FAST_KIND", "KVBlock", "KVBlockSpec", "PagedKVPool", "PoolExhausted",

@@ -39,8 +39,8 @@ from ..telemetry import (AccessSampler, AccessTrace, AdaptiveReplanner,
                          PhaseDetector, ReplanConfig, SamplerConfig)
 from .kv_pool import FAST_KIND, PagedKVPool, spec_from_config
 from .metrics import ServingMetrics
-from .scheduler import (ContinuousBatchingScheduler, Request,
-                        RequestState, SchedulerConfig, plan_admission)
+from .scheduler import (ContinuousBatchingScheduler, plan_admission, Request,
+                        RequestState, SchedulerConfig)
 from .tiering import KVBlockTierer
 
 
@@ -167,6 +167,12 @@ class ServingConfig:
     adaptive: bool = False
     replan_every: int = 8   # iterations between replans (<= 0 disables)
     sample_rate: float = 1.0
+    # predictive control plane (requires adaptive): plans are keyed by
+    # the PhaseDetector's recurrence *signatures*, and when the
+    # detector predicts a different phase next epoch the proven plan
+    # cached for it is pre-staged (promotion-dominant deltas only) so
+    # a recurring burst's first iteration runs on its placement
+    predictive: bool = False
     # named repro.topology testbed: the scheduler budgets the shared
     # links KV gathers cross (contention-aware admission), and with
     # --adaptive the replanner prices the pool's memory kinds over that
@@ -278,6 +284,10 @@ class ServingEngine:
         self.ledger.attach_trace(sv.tenant, self.trace)
         self.phases = PhaseDetector(self.trace)
         self.replanner: Optional[AdaptiveReplanner] = None
+        if sv.predictive and not sv.adaptive:
+            raise ValueError("predictive serving requires adaptive=True "
+                             "(prediction pre-stages the replanner's "
+                             "phase-cached plans)")
         if sv.adaptive:
             if tb is not None:
                 tiers = kind_tiers(self.pool,
@@ -304,8 +314,9 @@ class ServingEngine:
 
     # ------------------------------------------------------------------ #
     def submit(self, prompt: np.ndarray, max_new_tokens: int,
-               arrival_s: float = 0.0) -> int:
-        """Queue one request; returns its request id."""
+               arrival_s: float = 0.0, priority: float = 0.0) -> int:
+        """Queue one request; returns its request id.  ``priority``
+        orders budget preemption (lowest evicted first)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         max_new = min(max_new_tokens,
                       self.sv.max_context - prompt.shape[0])
@@ -322,7 +333,7 @@ class ServingEngine:
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid=rid, prompt=prompt, max_new_tokens=max_new,
-                      arrival_s=arrival_s)
+                      arrival_s=arrival_s, priority=priority)
         self.sched.submit(req)
         self.metrics.on_submit(rid, arrival_s, prompt.shape[0])
         return rid
@@ -457,7 +468,9 @@ class ServingEngine:
     def _replan_step(self) -> None:
         """One telemetry epoch: close the bucket, track phases, and (in
         adaptive mode) attempt an object-level replan over live
-        sequences."""
+        sequences.  Predictive mode keys the plan cache by recurrence
+        signature and pre-stages the proven plan of a predicted
+        next-epoch phase during the current one's slack."""
         self.sampler.advance_epoch()
         self.phases.update()
         if (self.replanner is None or self.sv.replan_every <= 0
@@ -467,11 +480,23 @@ class ServingEngine:
         bn = self.pool.block_nbytes()
         nbytes = {f"seq{sid}": len(tbl) * bn
                   for sid, tbl in self.pool.table.items() if tbl}
-        if nbytes:
-            # phase-conditioned plan cache: recurring detector labels
-            # (prefill-heavy vs decode-heavy mixes) reuse their plan
+        if not nbytes:
+            return
+        if self.sv.predictive and self.phases.signature is not None:
+            cur = self.phases.expected_signature(1)
+            nxt = self.phases.expected_signature(2)
+            if nxt is not None and nxt != cur:
+                d = self.replanner.prefetch_phase(self._step, nbytes,
+                                                  nxt)
+                if d is not None:
+                    return
             self.replanner.maybe_replan(self._step, nbytes, force=True,
-                                        phase=self.phases.label)
+                                        phase=cur)
+            return
+        # phase-conditioned plan cache: recurring detector labels
+        # (prefill-heavy vs decode-heavy mixes) reuse their plan
+        self.replanner.maybe_replan(self._step, nbytes, force=True,
+                                    phase=self.phases.label)
 
     def telemetry_summary(self) -> Dict[str, float]:
         out: Dict[str, float] = {
@@ -480,6 +505,7 @@ class ServingEngine:
             "profiling_overhead_s": self.sampler.overhead_s,
             "phase_shifts": float(len(self.phases.shifts)),
             "link_deferrals": float(self.sched.link_deferrals),
+            "budget_preemptions": float(self.sched.budget_preemptions),
             "ledger_migrated_bytes": float(
                 self.ledger.counters.migrated_bytes),
         }
@@ -501,6 +527,10 @@ class ServingEngine:
         self._virtual_skew = 0.0
         while self.sched.active and self._step < max_iterations:
             now = self._now()
+            # an arbiter may have shrunk this tenant's fast budget in
+            # the shared ledger since the last iteration: enforce it
+            # before admitting new work (freed blocks re-admit victims)
+            self.sched.preempt_over_budget()
             admitted = self.sched.admit(now_s=now)
             if not admitted and not self.sched.running:
                 # idle: fast-forward the arrival clock (synthetic traces)

@@ -21,7 +21,14 @@ iteration, against the pool's block accounting:
   * preemption when the pool runs dry mid-decode: the *latest-admitted*
     running request is evicted (LIFO — it has the least sunk decode
     work), its blocks are freed, and it returns to the FRONT of the
-    wait queue so it is re-admitted before fresh arrivals.
+    wait queue so it is re-admitted before fresh arrivals;
+  * **ledger-driven preemption** (``preempt_over_budget``): when a
+    ``TierBudgetArbiter`` shrinks this tenant's fast-tier budget in the
+    shared ``ResidencyLedger``, the scheduler evicts the
+    lowest-priority running sequences holding fast blocks until the
+    tenant is back within budget — the grant moves to the other tenant
+    immediately instead of leaking out block-by-block through tierer
+    churn.
 """
 from __future__ import annotations
 
@@ -51,6 +58,10 @@ class Request:
     prompt: np.ndarray                 # (prompt_len,) int32
     max_new_tokens: int
     arrival_s: float = 0.0
+    # relative importance for budget preemption: when the arbiter
+    # shrinks the tenant's fast budget, the lowest-priority running
+    # sequences are evicted first (ties: latest-admitted)
+    priority: float = 0.0
     state: RequestState = RequestState.WAITING
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     admit_order: int = -1              # monotone admission stamp
@@ -152,6 +163,7 @@ class ContinuousBatchingScheduler:
         self._admit_stamp = 0
         self.preemption_events = 0
         self.link_deferrals = 0       # admissions blocked by link budget
+        self.budget_preemptions = 0   # evictions forced by ledger budget
 
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
@@ -286,6 +298,42 @@ class ContinuousBatchingScheduler:
             if self.pool.free_block_count() >= n_blocks:
                 break
             self._evict(victim)
+            victims.append(victim)
+        return victims
+
+    def preempt_over_budget(self) -> List[Request]:
+        """Ledger-driven preemption: enforce an arbiter budget shrink
+        *now* instead of waiting for tierer churn.
+
+        While this tenant holds more fast-tier bytes than its ledger
+        budget (``ledger.over_budget`` — e.g. a ``TierBudgetArbiter``
+        handed the capacity to another tenant), evict the
+        lowest-priority running sequence that still holds fast blocks
+        (ties: latest-admitted, the least sunk decode work).  Eviction
+        frees the sequence's pool blocks — the ledger retires its
+        residency, reconciling the fast tier immediately — and the
+        request re-enters the queue front for recompute once capacity
+        (or budget) returns.  Sub-block excess is rounding, not
+        squatting, and never triggers an eviction; a shrink with no
+        running fast holder is left to the tierer (nothing a
+        preemption could free).
+        """
+        pool = self.pool
+        bn = max(pool.block_nbytes(), 1)
+        victims: List[Request] = []
+        while self.running:
+            over = pool.ledger.over_budget(pool.tenant, FAST_KIND)
+            if over < bn:
+                break
+            holders = [r for r in self.running
+                       if any(b.kind == FAST_KIND
+                              for b in pool.seq_blocks(r.rid))]
+            if not holders:
+                break
+            victim = min(holders,
+                         key=lambda r: (r.priority, -r.admit_order))
+            self._evict(victim)
+            self.budget_preemptions += 1
             victims.append(victim)
         return victims
 

@@ -15,14 +15,15 @@ lacks:
            through core.migration.MigrationExecutor
 """
 from .events import AccessEvent, AccessTrace, EpochBucket, ObjectTraffic
-from .sampler import LINE_BYTES, AccessSampler, SamplerConfig
-from .phases import (PhaseDetector, PhaseShift, classify_traffic,
-                     traffic_distance)
+from .phases import (classify_traffic, PhaseDetector, PhaseShift,
+                     traffic_distance, traffic_signature)
 from .replan import AdaptiveReplanner, ReplanConfig, ReplanDecision
+from .sampler import AccessSampler, LINE_BYTES, SamplerConfig
 
 __all__ = [
     "AccessEvent", "AccessTrace", "EpochBucket", "ObjectTraffic",
     "LINE_BYTES", "AccessSampler", "SamplerConfig",
     "PhaseDetector", "PhaseShift", "classify_traffic", "traffic_distance",
+    "traffic_signature",
     "AdaptiveReplanner", "ReplanConfig", "ReplanDecision",
 ]

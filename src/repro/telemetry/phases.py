@@ -14,14 +14,24 @@ a phase signal the replanner can act on:
     consecutive epoch vectors exceeds ``threshold`` (request-mix /
     working-set drift) or the label flips (prefill -> decode,
     train -> eval), debounced by ``min_phase_epochs`` so transient
-    epochs cannot thrash the replanner.
+    epochs cannot thrash the replanner;
+  * each epoch also gets a quantized **recurrence signature**
+    (``traffic_signature``): label + log-bucketed intensity + coarse
+    per-object shares.  The detector tracks how long each signature
+    runs and which signature follows it, so ``expected_signature``
+    can predict the *next* epoch's phase for a periodic workload —
+    the signal the predictive ``TierBudgetArbiter`` and the
+    replanner's phase prefetch consume to grant budgets and pre-stage
+    promotions *before* a recurring burst's first epoch.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional
+import math
+from collections import deque
+from typing import Deque, Dict, Hashable, List, Mapping, Optional
 
-from .events import AccessTrace, EpochBucket, ObjectTraffic
+from .events import AccessTrace, ObjectTraffic
 
 
 def classify_traffic(bucket: Mapping[str, ObjectTraffic]) -> str:
@@ -37,6 +47,30 @@ def classify_traffic(bucket: Mapping[str, ObjectTraffic]) -> str:
     if writes / total > 0.35:
         return "write_heavy"
     return "streaming"
+
+
+def traffic_signature(bucket: Mapping[str, ObjectTraffic],
+                      levels: int = 4,
+                      mag_base: float = 4.0) -> Hashable:
+    """Quantized recurrence signature of one epoch's traffic.
+
+    Two epochs of the same workload phase should hash to the same
+    signature even under modest noise, while phases that differ in
+    *intensity* (a decode burst vs a drained lull with the same object
+    mix) must not collide — the coarse label and the normalized share
+    vector are blind to absolute traffic, so the signature also carries
+    a log-bucketed magnitude (``mag_base`` = one bucket per ~4x traffic
+    change).  Shares are rounded to ``levels`` steps per object.
+    """
+    label = classify_traffic(bucket)
+    total = sum(t.total_bytes for t in bucket.values())
+    if total <= 0:
+        return (label, 0, ())
+    mag = int(round(math.log(max(total, 1), mag_base)))
+    shares = tuple(sorted(
+        (obj, q) for obj, t in bucket.items()
+        if (q := round(t.total_bytes / total * levels)) > 0))
+    return (label, mag, shares)
 
 
 def traffic_distance(a: Mapping[str, float],
@@ -66,7 +100,9 @@ class PhaseDetector:
     """
 
     def __init__(self, trace: AccessTrace, threshold: float = 0.35,
-                 min_phase_epochs: int = 2):
+                 min_phase_epochs: int = 2,
+                 max_signatures: int = 32,
+                 signature_ttl_epochs: int = 256):
         self.trace = trace
         self.threshold = threshold
         self.min_phase_epochs = min_phase_epochs
@@ -76,6 +112,86 @@ class PhaseDetector:
         self._prev_vec: Optional[Dict[str, float]] = None
         self._epochs_in_phase = 0
         self._last_seen_epoch = -1
+        # recurrence tracking: the signature of the last completed
+        # epoch, how long its run has lasted, observed run lengths per
+        # signature, and which signature historically follows which
+        self.signature: Optional[Hashable] = None
+        self.max_signatures = max_signatures
+        self.signature_ttl_epochs = signature_ttl_epochs
+        self._sig_run = 0
+        self._sig_durations: Dict[Hashable, Deque[int]] = {}
+        self._sig_successor: Dict[Hashable, Dict[Hashable, int]] = {}
+        self._sig_seen: Dict[Hashable, int] = {}
+
+    def _observe_signature(self, epoch_id: int, bucket) -> None:
+        sig = traffic_signature(bucket)
+        if sig == self.signature:
+            self._sig_run += 1
+        else:
+            prev = self.signature
+            if prev is not None and self._sig_run > 0:
+                self._sig_durations.setdefault(
+                    prev, deque(maxlen=8)).append(self._sig_run)
+                succ = self._sig_successor.setdefault(prev, {})
+                succ[sig] = succ.get(sig, 0) + 1
+            self.signature = sig
+            self._sig_run = 1
+        self._sig_seen[sig] = epoch_id
+        self._evict_stale_signatures(epoch_id)
+
+    def _evict_stale_signatures(self, epoch_id: int) -> None:
+        """Drop recurrence state for signatures not seen recently: a
+        workload that stopped recurring must not keep predicting, and
+        the tables stay bounded on long-lived processes."""
+        stale = {s for s, last in self._sig_seen.items()
+                 if epoch_id - last > self.signature_ttl_epochs}
+        if len(self._sig_seen) - len(stale) > self.max_signatures:
+            keep = sorted(self._sig_seen, key=self._sig_seen.get,
+                          reverse=True)[: self.max_signatures]
+            stale |= set(self._sig_seen) - set(keep) - {self.signature}
+        for s in stale:
+            self._sig_seen.pop(s, None)
+            self._sig_durations.pop(s, None)
+            self._sig_successor.pop(s, None)
+        for succ in self._sig_successor.values():
+            for s in stale:
+                succ.pop(s, None)
+
+    def typical_duration(self, sig: Hashable) -> Optional[int]:
+        """Median observed run length of ``sig`` (None if never ended)."""
+        runs = self._sig_durations.get(sig)
+        if not runs:
+            return None
+        return sorted(runs)[len(runs) // 2]
+
+    def likely_successor(self, sig: Hashable) -> Optional[Hashable]:
+        """The signature that most often followed ``sig``."""
+        succ = self._sig_successor.get(sig)
+        if not succ:
+            return None
+        return max(sorted(succ), key=succ.get)
+
+    def expected_signature(self, ahead: int = 1) -> Optional[Hashable]:
+        """Signature predicted for the epoch ``ahead`` steps after the
+        last completed one (``ahead=1`` = the epoch about to run).
+
+        Walks the learned recurrence forward: while the current
+        signature's run has not reached its typical duration the phase
+        is expected to continue; once it has, the most common successor
+        takes over.  Falls back to "more of the same" whenever duration
+        or successor is unknown — the reactive behaviour.
+        """
+        sig, run = self.signature, self._sig_run
+        if sig is None:
+            return None
+        for _ in range(max(ahead, 0)):
+            dur = self.typical_duration(sig)
+            succ = self.likely_successor(sig)
+            if dur is not None and succ is not None and run + 1 > dur:
+                sig, run = succ, 1
+            else:
+                run += 1
+        return sig
 
     def update(self) -> Optional[PhaseShift]:
         if self.trace.epochs_recorded == 0:
@@ -84,6 +200,7 @@ class PhaseDetector:
         if epoch_id == self._last_seen_epoch:
             return None                      # nothing new completed
         self._last_seen_epoch = epoch_id
+        self._observe_signature(epoch_id, bucket)
         vec = self.trace.epoch_vector(bucket)
         label = classify_traffic(bucket)
         shift: Optional[PhaseShift] = None
@@ -107,3 +224,8 @@ class PhaseDetector:
     @property
     def epochs_in_phase(self) -> int:
         return self._epochs_in_phase
+
+    @property
+    def epochs_in_signature(self) -> int:
+        """Run length of the current recurrence signature."""
+        return self._sig_run

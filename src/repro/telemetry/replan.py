@@ -52,14 +52,13 @@ plan-origin and records realized shares itself.
 from __future__ import annotations
 
 import dataclasses
-from typing import (Dict, Hashable, Iterable, List, Mapping, Optional,
-                    Tuple)
+from typing import Dict, Hashable, Iterable, List, Mapping, Optional, Tuple
 
 from ..core.costmodel import plan_step_cost
 from ..core.migration import (HUGE_PAGE_BYTES, MigrationExecutor,
                               MigrationStats)
-from ..core.policies import (ObjectLevelInterleave, PlacementPlan, Policy,
-                             _tier_order)
+from ..core.policies import (_tier_order, ObjectLevelInterleave,
+                             PlacementPlan, Policy)
 from ..core.tiers import GiB, MemoryTier
 from ..pool.ledger import ResidencyLedger
 from .events import AccessTrace
@@ -83,12 +82,16 @@ class ReplanDecision:
     applied: bool
     reason: str  # initial | win | cached_win | no_win | migration_cost
     #              | budget (arbiter shrank the fast budget: mandatory)
+    #              | prefetch (proven plan pre-staged for a predicted
+    #                phase before its first epoch)
     old_step_s: float = 0.0
     new_step_s: float = 0.0
     migration_s: float = 0.0
     moved_bytes: int = 0           # bytes actually moved when applied
     denied_bytes: int = 0          # intended-but-denied bytes (capacity)
     cached: bool = False           # candidate came from the phase cache
+    deferred: bool = False         # delta handed to a MoveScheduler;
+    #                                moved_bytes lands at its flush
 
     @property
     def predicted_speedup(self) -> float:
@@ -107,7 +110,8 @@ class AdaptiveReplanner:
                  initial_plan: Optional[PlacementPlan] = None,
                  topology=None, origin: Optional[str] = None,
                  ledger: Optional[ResidencyLedger] = None,
-                 tenant: str = "replan"):
+                 tenant: str = "replan",
+                 move_scheduler=None):
         self.trace = trace
         self.topology = topology
         # distance-adjusted view: path latency/bandwidth folded into the
@@ -133,12 +137,27 @@ class AdaptiveReplanner:
         self.plan = initial_plan
         self.stats = MigrationStats()
         self.decisions: List[ReplanDecision] = []
-        # phase signature -> (plan, proven): `proven` means the plan
-        # once cleared the full hysteresis gate, so recurrences may
-        # waive the margin; an initially-adopted plan has not
+        # phase signature -> (plan, proven, budget): `proven` means the
+        # plan once cleared the full hysteresis gate, so recurrences
+        # may waive the margin; an initially-adopted plan has not.
+        # `budget` is the tenant's fast-tier grant the plan was
+        # computed under — a cached plan is only valid while the grant
+        # still matches (an arbiter re-split makes it stale: smaller
+        # means squatting, larger means stranding the new capacity)
         self._phase_plans: Dict[Hashable,
-                                Tuple[PlacementPlan, bool]] = {}
+                                Tuple[PlacementPlan, bool, int]] = {}
         self.plan_cache_hits = 0
+        self.prefetches = 0
+        # optional cross-tenant coordinator (repro.pool.MoveScheduler):
+        # applied deltas are submitted instead of executed, so moves
+        # from every tenant sharing a bottleneck link get ordered and
+        # batched together at the scheduler's flush
+        self.move_scheduler = move_scheduler
+        # one deferred apply may be in flight per flush round: until
+        # the scheduler's callback adopts the realized moves, the
+        # ledger still shows the pre-move residency, and a second
+        # replan would re-derive and double-submit the same delta
+        self._deferred_pending = False
 
     # ------------------------------------------------------------------ #
     @property
@@ -203,6 +222,26 @@ class AdaptiveReplanner:
         return {**self.tiers,
                 self.fast: dataclasses.replace(fast, capacity_GiB=capped)}
 
+    def _budget_key(self) -> int:
+        """The fast-tier grant plans are conditioned on (-1 = none)."""
+        b = self.ledger.budget(self.tenant, self.fast)
+        return -1 if b is None else int(b)
+
+    def _cached_plan(self, phase: Optional[Hashable]
+                     ) -> Tuple[Optional[PlacementPlan], bool]:
+        """The proven-plan cache lookup, invalidated when the tenant's
+        current grant drifted from the one the plan was computed under
+        (beyond huge-page rounding)."""
+        if phase is None:
+            return None, False
+        cached, proven, budget = self._phase_plans.get(
+            phase, (None, False, -1))
+        if cached is None:
+            return None, False
+        if abs(self._budget_key() - budget) > HUGE_PAGE_BYTES:
+            return None, False
+        return cached, proven
+
     # ------------------------------------------------------------------ #
     def maybe_replan(self, epoch: int, nbytes: Mapping[str, int],
                      pin_fast: Iterable[str] = (),
@@ -215,6 +254,9 @@ class AdaptiveReplanner:
         won under a signature are cached and reused without re-running
         the policy or the hysteresis margin."""
         cfg = self.cfg
+        if self._deferred_pending:
+            return None       # last apply still queued in the move
+            #                   scheduler: residency is not adopted yet
         if not force and (cfg.replan_every <= 0
                           or epoch % cfg.replan_every != 0):
             return None
@@ -232,9 +274,8 @@ class AdaptiveReplanner:
         # squatting: byte-level flapping must not churn plans forever.
         over_budget = self.ledger.over_budget(
             self.tenant, self.fast) > HUGE_PAGE_BYTES
-        cached, proven = (self._phase_plans.get(phase, (None, False))
-                          if phase is not None and not over_budget
-                          else (None, False))
+        cached, proven = (self._cached_plan(phase)
+                          if not over_budget else (None, False))
         if cached is not None and any(n not in cached.shares
                                       for n in nbytes):
             cached = None      # inventory drifted: the cached plan is
@@ -261,7 +302,8 @@ class AdaptiveReplanner:
                                       new_plan.policy,
                                       new_plan.tier_bytes)
             if phase is not None:
-                self._phase_plans[phase] = (new_plan, False)
+                self._phase_plans[phase] = (new_plan, False,
+                                            self._budget_key())
             d = ReplanDecision(epoch, True, "initial",
                                cached=cached is not None)
             self.decisions.append(d)
@@ -290,6 +332,9 @@ class AdaptiveReplanner:
             d.reason = "budget"
             self._apply(d, delta, nbytes, new_plan, phase,
                         cache_proven=False)
+        elif delta.total_bytes <= 0:
+            pass          # candidate == current placement: float-noise
+            #               cost differences must not count as applies
         elif old_cost < new_cost * min_speedup:
             pass                          # hysteresis: win too small
         elif (old_cost - new_cost) * cfg.amortize_steps <= mig_s:
@@ -301,17 +346,84 @@ class AdaptiveReplanner:
         self.decisions.append(d)
         return d
 
+    def prefetch_phase(self, epoch: int, nbytes: Mapping[str, int],
+                       phase: Hashable) -> Optional[ReplanDecision]:
+        """Pre-stage the placement for a *predicted* upcoming phase.
+
+        When a phase predictor says signature ``phase`` starts next
+        epoch, the proven plan cached for it is applied now — during
+        the current phase's slack — so the recurring burst's first
+        epoch runs on its placement instead of paying the migration (or
+        worse, running cold).  Deliberately skips the hysteresis and
+        amortization gates: the plan earned adoption when its phase was
+        live, and costing a pre-staged promotion against the current
+        (pre-shift) traffic would always reject it.
+
+        Only **promotion-dominant** deltas are pre-staged: a predicted
+        phase that mostly *releases* the fast tier can wait for its
+        first real epoch at no throughput cost, while demoting early
+        would run the live phase's tail on the next phase's placement.
+
+        Returns None (nothing staged) when no proven plan is cached for
+        the signature, the object inventory drifted, the placement
+        already matches, or the delta is demotion-dominant.
+        """
+        if self._deferred_pending:
+            return None              # an apply is already in flight
+        cached, proven = self._cached_plan(phase)
+        if cached is None or not proven or self.plan is None:
+            return None
+        if any(n not in cached.shares for n in nbytes):
+            return None              # inventory drifted
+        self._ensure_registered(nbytes)
+        old_shares = self._current_shares(nbytes)
+        delta = self.executor.delta(old_shares, cached.shares, nbytes)
+        if delta.total_bytes <= 0:
+            return None              # already in place
+        if delta.bytes_into(self.fast) <= delta.bytes_out_of(self.fast):
+            return None              # demotion-dominant: react instead
+        mig_s = self.executor.cost_s(delta)
+        d = ReplanDecision(epoch, False, "prefetch", migration_s=mig_s,
+                           cached=True)
+        self.plan_cache_hits += 1
+        self.prefetches += 1
+        self._apply(d, delta, nbytes, cached, phase, cache_proven=True)
+        self.decisions.append(d)
+        return d
+
     def _apply(self, d: ReplanDecision, delta, nbytes, new_plan,
                phase: Optional[Hashable], cache_proven: bool) -> None:
-        """Execute a delta and adopt the realized residency."""
+        """Execute a delta (or defer it to the cross-tenant move
+        scheduler) and adopt the realized residency."""
+        if self.move_scheduler is not None:
+            d.applied = True
+            d.deferred = True
+            d.moved_bytes = 0        # real bytes land at the flush
+            self._deferred_pending = True
+            weight = self.ledger.tenants[self.tenant].weight
+            self.move_scheduler.submit(
+                self.tenant, delta,
+                move_fn=self.executor.move_fn, priority=weight,
+                stats=self.stats,
+                on_done=lambda moves_done, _d=d: self._adopt(
+                    _d, moves_done, nbytes, new_plan, phase,
+                    cache_proven))
+            return
         self.executor.execute(delta, self.stats)
-        done = sum(b for _, b in self.executor.last_moves)
+        self._adopt(d, self.executor.last_moves, nbytes, new_plan,
+                    phase, cache_proven)
+
+    def _adopt(self, d: ReplanDecision, moves_done, nbytes, new_plan,
+               phase: Optional[Hashable], cache_proven: bool) -> None:
+        """Post-execute bookkeeping for the realized moves."""
+        self._deferred_pending = False
+        done = sum(b for _, b in moves_done)
         # feedback on denied moves: the ledger adopts the residency
         # that was actually realized, not the one the policy intended.
         # Physical clients (pool, state store) recorded their own moves
         # inside move_fn; the replanner records only for the
         # plan-origin objects it owns itself.
-        for m, b in self.executor.last_moves:
+        for m, b in moves_done:
             if b > 0 and self.ledger.origin_of(
                     self.tenant, m.obj) == "plan":
                 self.ledger.record_move(self.tenant, m.obj,
@@ -320,11 +432,13 @@ class AdaptiveReplanner:
                                   new_plan.policy, new_plan.tier_bytes)
         d.applied = True
         d.moved_bytes = done
-        d.denied_bytes = max(delta.total_bytes - done, 0)
+        intended = sum(m.nbytes for m, _ in moves_done)
+        d.denied_bytes = max(intended - done, 0)
         if phase is not None and cache_proven:
             # cache the *intended* plan: it is the phase's target
             # placement; denials are per-occurrence capacity facts
-            self._phase_plans[phase] = (new_plan, True)
+            self._phase_plans[phase] = (new_plan, True,
+                                        self._budget_key())
 
     # ------------------------------------------------------------------ #
     def summary(self) -> Dict[str, float]:
@@ -336,4 +450,5 @@ class AdaptiveReplanner:
             "denied_bytes": float(sum(d.denied_bytes for d in applied)),
             "migration_s": float(sum(d.migration_s for d in applied)),
             "plan_cache_hits": float(self.plan_cache_hits),
+            "prefetches": float(self.prefetches),
         }

@@ -8,10 +8,10 @@ plus the TPU adaptation.  ``effective_tiers`` is the bridge into the
 analytic layer: distance-adjusted MemoryTier copies that the cost
 model, migration executor, and adaptive replanner price against.
 """
-from .graph import (Flow, FlowResult, LinkKey, TopologyGraph, TopoLink,
-                    TopoNode)
-from .builders import (TOPOLOGY_CHOICES, Testbed, build_topology,
+from .builders import (build_topology, Testbed, TOPOLOGY_CHOICES,
                        tpu_pod, two_socket_system)
+from .graph import (Flow, FlowResult, LinkKey, TopoLink, TopologyGraph,
+                    TopoNode)
 
 __all__ = [
     "Flow", "FlowResult", "LinkKey", "TopologyGraph", "TopoLink",

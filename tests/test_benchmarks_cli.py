@@ -1,4 +1,5 @@
 """benchmarks/run.py CLI contract: --list, unknown names fail loudly."""
+import json
 import os
 import subprocess
 import sys
@@ -34,3 +35,24 @@ def test_unknown_mixed_with_known_still_fails():
     r = _run("tier_characterization", "typo")
     assert r.returncode == 2
     assert "typo" in r.stderr
+
+
+def test_json_artifact_schema(tmp_path):
+    out = tmp_path / "bench.json"
+    r = _run("--smoke", "--json", str(out), "tier_characterization")
+    assert r.returncode == 0
+    payload = json.loads(out.read_text())
+    assert payload["schema_version"] == 1
+    assert payload["smoke"] is True
+    assert payload["totals"]["benchmarks"] == 1
+    assert payload["totals"]["failed"] == 0
+    (entry,) = payload["benchmarks"]
+    assert entry["name"] == "tier_characterization"
+    assert entry["status"] == "ok"
+    assert entry["wall_s"] >= 0
+    assert entry["metrics"], "metric rows must be captured"
+    row = entry["metrics"][0]
+    assert set(row) == {"name", "value", "unit"}
+    # the CSV stdout and the artifact agree on the row count
+    csv_rows = [l for l in r.stdout.splitlines() if "," in l]
+    assert len(csv_rows) == len(entry["metrics"])

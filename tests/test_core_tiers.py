@@ -1,10 +1,8 @@
 """Tier performance models: reproduce the paper's §III characterization."""
-import math
-
 import pytest
 from _hyp import given, st
 
-from repro.core import (MemoryTier, assign_streams, interleave_bandwidth,
+from repro.core import (assign_streams, interleave_bandwidth, MemoryTier,
                         paper_system, tpu_v5e_tiers)
 
 

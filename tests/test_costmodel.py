@@ -3,10 +3,10 @@ import dataclasses
 
 import pytest
 
-from repro.core import (ObjectLevelInterleave, TierPreferred,
-                        UniformInterleave, compare_policies,
-                        hpc_workload_objects, paper_system, plan_step_cost,
-                        policy_search, llm_serve_objects, GiB)
+from repro.core import (compare_policies, GiB, hpc_workload_objects,
+                        llm_serve_objects, ObjectLevelInterleave,
+                        paper_system, plan_step_cost, policy_search,
+                        TierPreferred, UniformInterleave)
 
 
 def _tiers(ldram_gib):

@@ -1,10 +1,8 @@
 """Data pipeline: determinism, sharding partition, O(1) resume."""
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
-from repro.data.pipeline import (DataConfig, DataIterator, batch_for_step,
-                                 global_batch_for_step)
+from repro.data.pipeline import batch_for_step, DataConfig, DataIterator
 
 CFG = DataConfig(vocab=1000, seq_len=16, global_batch=8, seed=42)
 

@@ -1,19 +1,16 @@
 """End-to-end engine tests: ZeRO-Offload train + FlexGen serve (tiny)."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.data.pipeline import DataConfig, batch_for_step
-from repro.models import lm
-from repro.offload.serve_engine import (FlexGenEngine, ServeConfig,
-                                        max_batch_for_capacity,
-                                        search_placement)
-from repro.offload.train_engine import OffloadConfig, ZeroOffloadEngine
 from repro.core import tpu_v5e_tiers
+from repro.data.pipeline import batch_for_step, DataConfig
+from repro.models import lm
+from repro.offload.serve_engine import (FlexGenEngine, max_batch_for_capacity,
+                                        search_placement, ServeConfig)
+from repro.offload.train_engine import OffloadConfig, ZeroOffloadEngine
 
 
 @pytest.fixture(scope="module")

@@ -1,12 +1,11 @@
 """Launch layer: cell building, jaxpr cost walker, HLO collective parse."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch import hlo_analysis as H
 from repro.launch import jaxpr_cost as JC
-from repro.launch.mesh import make_mesh, dp_axes, dp_size, tp_size
+from repro.launch.mesh import dp_axes, dp_size, make_mesh, tp_size
 
 
 def test_mesh_helpers():

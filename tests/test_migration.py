@@ -1,11 +1,10 @@
 """Memory-tiering runtimes: reproduce the paper's §VI PMO findings."""
 import pytest
 
-from repro.core import (AutoNUMA, Block, MigrationExecutor,
-                        MigrationSim, NoBalance, TPP, Tiering08,
-                        make_blocks_from_plan, paper_system,
-                        trace_scattered_hotset, trace_stable_hotset,
-                        trace_uniform)
+from repro.core import (AutoNUMA, Block, make_blocks_from_plan,
+                        MigrationExecutor, MigrationSim, NoBalance,
+                        paper_system, Tiering08, TPP, trace_scattered_hotset,
+                        trace_stable_hotset, trace_uniform)
 from repro.topology import build_topology
 
 MB64 = 64 * 1024**2

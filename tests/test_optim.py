@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.kernels import ref as kref
 from repro.optim import AdamConfig, apply_update, init_state

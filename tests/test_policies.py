@@ -2,9 +2,9 @@
 import pytest
 from _hyp import given, settings, st
 
-from repro.core import (DataObject, FirstTouch, ObjectLevelInterleave,
-                        TierPreferred, UniformInterleave, paper_system,
-                        select_interleave_candidates, GiB)
+from repro.core import (DataObject, FirstTouch, GiB, ObjectLevelInterleave,
+                        paper_system, select_interleave_candidates,
+                        TierPreferred, UniformInterleave)
 
 
 def _objs():

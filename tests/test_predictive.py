@@ -1,0 +1,402 @@
+"""Predictive control plane: phase-signature prediction, pre-granted
+arbiter budgets, plan prefetch, ledger-driven scheduler preemption, and
+cross-tenant move scheduling."""
+import dataclasses
+
+import numpy as np
+
+from repro.core import GiB, ObjectLevelInterleave, paper_system, PlacementPlan
+from repro.core.migration import BlockMove, MigrationExecutor, PlacementDelta
+from repro.pool import (MoveScheduler, PhaseDemandTable, ResidencyLedger,
+                        TierBudgetArbiter)
+from repro.serving import (ContinuousBatchingScheduler, FAST_KIND,
+                           PagedKVPool, Request)
+from repro.telemetry import (AccessTrace, AdaptiveReplanner, PhaseDetector,
+                             ReplanConfig, traffic_signature)
+from repro.topology import two_socket_system
+
+G = GiB
+
+
+def _tiers(ldram_gib=64):
+    t = {k: v for k, v in paper_system("A").items()
+         if k in ("LDRAM", "CXL")}
+    t["LDRAM"] = dataclasses.replace(t["LDRAM"], capacity_GiB=ldram_gib)
+    return t
+
+
+def _emit(trace, burst):
+    """One epoch of burst (hot, heavy) or lull (trickle) traffic."""
+    if burst:
+        trace.record("kv", read_bytes=120 * G, write_bytes=2 * G)
+        trace.record("w", read_bytes=35 * G)
+    else:
+        trace.record("kv", read_bytes=1 * G)
+        trace.record("w", read_bytes=2 * G)
+    trace.advance_epoch()
+
+
+# ===================================================================== #
+# PhaseDetector: recurrence signatures + prediction                      #
+# ===================================================================== #
+def test_signature_separates_intensity_not_just_mix():
+    tr = AccessTrace()
+    _emit(tr, True)
+    burst_sig = traffic_signature(tr.last_completed())
+    _emit(tr, False)
+    lull_sig = traffic_signature(tr.last_completed())
+    # same label (streaming reads), very different intensity
+    assert burst_sig != lull_sig
+    assert burst_sig[0] == lull_sig[0] == "streaming"
+
+
+def test_detector_learns_cycle_and_predicts_successor():
+    tr = AccessTrace()
+    det = PhaseDetector(tr)
+    for _ in range(3):                       # 3 cycles of 2-burst/6-lull
+        for _ in range(2):
+            _emit(tr, True)
+            det.update()
+        for _ in range(6):
+            _emit(tr, False)
+            det.update()
+    lull_sig = det.signature
+    burst_sig = det.likely_successor(lull_sig)
+    assert burst_sig is not None and burst_sig != lull_sig
+    assert det.typical_duration(lull_sig) == 6
+    assert det.typical_duration(burst_sig) == 2
+    # we just observed the last lull epoch of cycle 3 (run == 6):
+    # the next epoch must flip to the burst signature
+    assert det.epochs_in_signature == 6
+    assert det.expected_signature(1) == burst_sig
+    assert det.expected_signature(2) == burst_sig
+    # mid-lull, the phase is expected to continue
+    _emit(tr, True)
+    det.update()
+    _emit(tr, True)
+    det.update()
+    _emit(tr, False)
+    det.update()
+    assert det.expected_signature(1) == lull_sig
+
+
+def test_detector_evicts_stale_signatures():
+    tr = AccessTrace()
+    det = PhaseDetector(tr, signature_ttl_epochs=4)
+    _emit(tr, True)
+    det.update()
+    old = det.signature
+    for _ in range(8):
+        _emit(tr, False)
+        det.update()
+    assert old not in det._sig_seen          # TTL'd out
+
+
+# ===================================================================== #
+# PhaseDemandTable                                                       #
+# ===================================================================== #
+def test_phase_demand_table_ema_ttl_and_bound():
+    t = PhaseDemandTable(ttl_epochs=10, max_entries=2, alpha=0.5)
+    t.observe("a", 100, 10.0, epoch=1)
+    t.observe("a", 200, 20.0, epoch=2)       # EMA moves halfway
+    assert t.lookup("a", 3).hot_bytes == 150
+    t.observe("b", 50, 5.0, epoch=3)
+    t.observe("c", 70, 7.0, epoch=4)         # bound of 2: oldest evicted
+    t.evict_stale(4)
+    assert len(t.entries) == 2 and "a" not in t.entries
+    assert t.lookup("b", 20) is None         # TTL expired at lookup
+    t.evict_stale(20)
+    assert not t.entries
+
+
+# ===================================================================== #
+# Predictive arbiter: burst budget granted before the burst             #
+# ===================================================================== #
+def _cycle_arbiter(predictive):
+    tiers = _tiers()
+    led = ResidencyLedger(tiers, capacity_bytes={"LDRAM": 64 * G})
+    tr = AccessTrace()
+    led.register_tenant("serve", trace=tr)
+    led.register("serve", "kv", {"CXL": 48 * G})
+    led.register("serve", "w", {"CXL": 14 * G})
+    arb = TierBudgetArbiter(led, "LDRAM", objective="fair_share",
+                            window_epochs=1, predictive=predictive)
+    burst_len, lull_len = 2, 6
+    grants = []
+    epoch = 0
+    for _ in range(3):                       # 3 cycles; cycle 3 measured
+        for i in range(burst_len + lull_len):
+            epoch += 1
+            dec = arb.rebalance(epoch)
+            grants.append(dec.budget_of("serve"))
+            _emit(tr, burst=i < burst_len)
+    return grants, burst_len + lull_len
+
+
+def test_predictive_arbiter_grants_burst_budget_at_entry():
+    reactive, period = _cycle_arbiter(False)
+    predictive, _ = _cycle_arbiter(True)
+    entry = 2 * period                       # cycle-3 burst entry (0-idx)
+    steady = 2 * period + 1                  # second burst epoch
+    # reactive lags: at burst entry it still grants the lull-sized
+    # budget, only the next rebalance sees the burst traffic
+    assert reactive[entry] < reactive[steady]
+    # predictive pre-grants: entry already gets the burst-sized budget
+    assert predictive[entry] >= reactive[steady]
+    assert predictive[entry] > 2 * reactive[entry]
+
+
+def test_predictive_arbiter_falls_back_to_measured():
+    tiers = _tiers()
+    led = ResidencyLedger(tiers, capacity_bytes={"LDRAM": 64 * G})
+    led.register_tenant("quiet")             # no trace at all
+    led.register("quiet", "x", {"CXL": 8 * G})
+    arb = TierBudgetArbiter(led, "LDRAM", predictive=True)
+    dec = arb.rebalance(1)
+    assert dec.demands[0].source == "measured"
+
+
+# ===================================================================== #
+# prefetch_phase: proven plans pre-staged for predicted phases           #
+# ===================================================================== #
+def _burst_replanner():
+    tiers = _tiers()
+    led = ResidencyLedger(tiers, capacity_bytes={"LDRAM": 64 * G})
+    tr = AccessTrace()
+    led.register_tenant("serve", trace=tr)
+    led.register("serve", "kv", {"CXL": 48 * G}, origin="plan")
+    led.register("serve", "w", {"CXL": 14 * G}, origin="plan")
+    seed = PlacementPlan({"kv": [("CXL", 1.0)], "w": [("CXL", 1.0)]},
+                         "first_touch", {})
+    rp = AdaptiveReplanner(
+        tr, tiers, "LDRAM",
+        policy=ObjectLevelInterleave("LDRAM", ["CXL"],
+                                     bandwidth_weighted=True),
+        cfg=ReplanConfig(replan_every=1, window_epochs=1,
+                         amortize_steps=32),
+        executor=MigrationExecutor(tiers), initial_plan=seed,
+        default_tier="CXL", ledger=led, tenant="serve")
+    return rp, tr, led
+
+
+def test_prefetch_applies_proven_plan_before_phase():
+    rp, tr, led = _burst_replanner()
+    nbytes = {"kv": 48 * G, "w": 14 * G}
+    _emit(tr, True)
+    d = rp.maybe_replan(1, nbytes, phase="burst")
+    assert d.applied and d.reason == "win"   # promoted; cached proven
+    moved_up = led.bytes_on("LDRAM", "serve")
+    assert moved_up > 0
+    # phase flips to lull; the mandatory-free path is not triggered
+    # (no budget), so the placement drifts back down via a lull replan
+    _emit(tr, False)
+    d = rp.maybe_replan(2, nbytes, phase="lull")
+    if d is not None and d.applied:
+        pass                                  # lull plan adopted
+    rp.ledger.set_residency("serve", "kv", {"CXL": 48 * G})
+    rp.ledger.set_residency("serve", "w", {"CXL": 14 * G})
+    rp.plan = PlacementPlan({"kv": [("CXL", 1.0)], "w": [("CXL", 1.0)]},
+                            "lull", {})
+    # prediction says the burst returns next epoch: pre-stage its plan
+    d = rp.prefetch_phase(3, nbytes, "burst")
+    assert d is not None and d.applied and d.reason == "prefetch"
+    assert led.bytes_on("LDRAM", "serve") == moved_up
+    assert rp.prefetches == 1
+
+
+def test_prefetch_skips_demotion_dominant_and_unknown_phases():
+    rp, tr, led = _burst_replanner()
+    nbytes = {"kv": 48 * G, "w": 14 * G}
+    _emit(tr, True)
+    rp.maybe_replan(1, nbytes, phase="burst")     # burst plan proven
+    # unknown signature: nothing cached
+    assert rp.prefetch_phase(2, nbytes, "never-seen") is None
+    # placement already matches the burst plan: nothing to move
+    assert rp.prefetch_phase(2, nbytes, "burst") is None
+    # a lull plan that mostly releases the fast tier must NOT be
+    # pre-staged: demoting early would run the live burst cold
+    lull_plan = PlacementPlan({"kv": [("CXL", 1.0)],
+                               "w": [("CXL", 1.0)]}, "lull", {})
+    rp._phase_plans["lull"] = (lull_plan, True, rp._budget_key())
+    assert rp.prefetch_phase(2, nbytes, "lull") is None
+    assert rp.prefetches == 0                     # nothing pre-staged
+
+
+def test_phase_cache_invalidated_when_grant_changes():
+    rp, tr, led = _burst_replanner()
+    nbytes = {"kv": 48 * G, "w": 14 * G}
+    led.set_budget("serve", "LDRAM", 32 * G)
+    _emit(tr, True)
+    d = rp.maybe_replan(1, nbytes, phase="burst")
+    assert d.applied
+    cached, proven = rp._cached_plan("burst")
+    assert cached is not None and proven
+    # the arbiter re-splits: the plan computed under 32G is stale
+    led.set_budget("serve", "LDRAM", 48 * G)
+    cached, proven = rp._cached_plan("burst")
+    assert cached is None
+
+
+# ===================================================================== #
+# Ledger-driven preemption: arbiter shrink -> scheduler eviction         #
+# ===================================================================== #
+def _running_pool_sched(num_blocks=12, fast_budget=6):
+    pool = PagedKVPool(num_blocks, 4, fast_block_budget=fast_budget)
+    sched = ContinuousBatchingScheduler(pool)
+    reqs = []
+    for rid, prio in ((0, 2.0), (1, 0.0), (2, 1.0)):
+        r = Request(rid=rid, prompt=np.zeros(6, np.int32),
+                    max_new_tokens=4, priority=prio)
+        sched.submit(r)
+        reqs.append(r)
+    admitted = sched.admit()
+    assert len(admitted) == 2                   # max_prefill_per_iter
+    admitted += sched.admit()
+    assert len(admitted) == 3
+    for r in reqs:
+        pool.alloc(r.rid, 2, kind=FAST_KIND)    # every seq holds fast
+    return pool, sched, reqs
+
+
+def test_budget_shrink_preempts_lowest_priority_first():
+    pool, sched, reqs = _running_pool_sched()
+    assert sched.preempt_over_budget() == []    # within budget: no-op
+    # arbiter shrink: budget drops from 6 to 2 fast blocks
+    pool.ledger.set_budget(pool.tenant, FAST_KIND,
+                           2 * pool.block_nbytes())
+    victims = sched.preempt_over_budget()
+    # rid1 (prio 0.0) then rid2 (prio 1.0) evicted; rid0 (2.0) survives
+    assert [v.rid for v in victims] == [1, 2]
+    assert [r.rid for r in sched.running] == [0]
+    assert sched.budget_preemptions == 2
+    # the ledger reconciled: eviction freed the fast bytes
+    assert pool.ledger.over_budget(pool.tenant, FAST_KIND) == 0
+    assert pool.fast_used() == 2
+    # victims rejoin the queue front for recompute, LIFO
+    assert [r.rid for r in sched.waiting] == [2, 1]
+    assert all(r.preemptions == 1 for r in victims)
+
+
+def test_budget_preemption_stops_when_no_fast_holders():
+    pool = PagedKVPool(8, 4, fast_block_budget=4)
+    sched = ContinuousBatchingScheduler(pool)
+    r = Request(rid=0, prompt=np.zeros(6, np.int32), max_new_tokens=4)
+    sched.submit(r)
+    sched.admit()
+    pool.alloc(0, 2)                            # slow blocks only
+    pool.ledger.set_budget(pool.tenant, FAST_KIND, 0)
+    assert sched.preempt_over_budget() == []    # nothing to free
+    assert sched.running == [r]
+
+
+# ===================================================================== #
+# MoveScheduler: coalescing, ordering, shared-link makespan             #
+# ===================================================================== #
+def _far_socket():
+    tb = two_socket_system("A", cxl_socket=1)
+    tiers = {k: v for k, v in tb.tiers.items() if k != "NVMe"}
+    return tiers, tb.graph
+
+
+def test_movesched_serializes_in_priority_order_on_shared_link():
+    tiers, graph = _far_socket()
+    ex = MigrationExecutor(tiers, topology=graph)
+    led = ResidencyLedger(tiers)
+    led.register_tenant("hi", weight=2.0)
+    led.register_tenant("lo", weight=1.0)
+    ms = MoveScheduler(ex, ledger=led)
+    # both promotions ride the SAME bottleneck CXL link (and the UPI
+    # hop behind it): one shared path, pure serialization
+    ms.submit("lo", PlacementDelta([BlockMove("opt", "CXL", "LDRAM",
+                                              8 * G)]))
+    ms.submit("hi", PlacementDelta([BlockMove("kv", "CXL", "LDRAM",
+                                              8 * G)]))
+    r = ms.flush(1)
+    assert [m.tenant for m in r.moves] == ["hi", "lo"]   # weight order
+    hi, lo = r.moves
+    # the shared link serializes them: lo queues behind hi's traffic
+    # and finishes last, despite being submitted first
+    assert hi.start_s == 0.0
+    assert lo.start_s > 0.0
+    assert lo.finish_s > hi.finish_s
+    assert r.makespan_s <= r.independent_s * (1 + 1e-9)
+    assert r.tenant_finish_s("hi") < r.tenant_finish_s("lo")
+
+
+def test_movesched_batched_beats_independent_on_partial_overlap():
+    # hi's move bottlenecks on the (serve-only) CXL link; lo's rides
+    # the shared UPI — batching overlaps the disjoint portions, so the
+    # round is strictly faster than per-tenant execution
+    tiers, graph = _far_socket()
+    ex = MigrationExecutor(tiers, topology=graph)
+    ms = MoveScheduler(ex)
+    ms.submit("hi", PlacementDelta([BlockMove("kv", "CXL", "LDRAM",
+                                              16 * G)]), priority=2.0)
+    ms.submit("lo", PlacementDelta([BlockMove("opt", "RDRAM", "LDRAM",
+                                              16 * G)]), priority=1.0)
+    r = ms.flush(1)
+    assert r.makespan_s < r.independent_s * 0.999
+
+
+def test_movesched_coalesces_same_direction_and_nets_opposing():
+    tiers, graph = _far_socket()
+    ms = MoveScheduler(MigrationExecutor(tiers, topology=graph))
+    ms.submit("t", PlacementDelta([
+        BlockMove("kv", "CXL", "LDRAM", 6 * G),
+        BlockMove("kv", "CXL", "LDRAM", 2 * G),     # merges
+        BlockMove("kv", "LDRAM", "CXL", 3 * G),     # nets away
+    ]))
+    r = ms.flush(1)
+    assert len(r.moves) == 1
+    assert r.moves[0].move == BlockMove("kv", "CXL", "LDRAM", 5 * G)
+    assert r.coalesced_bytes == 6 * G
+
+
+def test_movesched_demotions_first_at_equal_priority():
+    tiers, graph = _far_socket()
+    ms = MoveScheduler(MigrationExecutor(tiers, topology=graph))
+    ms.submit("a", PlacementDelta([BlockMove("x", "CXL", "LDRAM", G)]))
+    ms.submit("b", PlacementDelta([BlockMove("y", "LDRAM", "CXL", G)]))
+    r = ms.flush(1)
+    # b's demotion frees contended fast capacity before a's promotion
+    assert [m.tenant for m in r.moves] == ["b", "a"]
+
+
+def test_movesched_runs_deferred_replanner_callbacks():
+    tiers = _tiers()
+    led = ResidencyLedger(tiers, capacity_bytes={"LDRAM": 64 * G})
+    ms = MoveScheduler(MigrationExecutor(tiers), ledger=led)
+    tr = AccessTrace()
+    led.register_tenant("serve", trace=tr)
+    led.register("serve", "kv", {"CXL": 48 * G}, origin="plan")
+    led.register("serve", "w", {"CXL": 14 * G}, origin="plan")
+    seed = PlacementPlan({"kv": [("CXL", 1.0)], "w": [("CXL", 1.0)]},
+                         "first_touch", {})
+    rp = AdaptiveReplanner(
+        tr, tiers, "LDRAM",
+        policy=ObjectLevelInterleave("LDRAM", ["CXL"],
+                                     bandwidth_weighted=True),
+        cfg=ReplanConfig(replan_every=1, window_epochs=1,
+                         amortize_steps=32),
+        executor=MigrationExecutor(tiers), initial_plan=seed,
+        default_tier="CXL", ledger=led, tenant="serve",
+        move_scheduler=ms)
+    _emit(tr, True)
+    d = rp.maybe_replan(1, {"kv": 48 * G, "w": 14 * G}, phase="burst")
+    assert d.applied and d.deferred
+    assert d.moved_bytes == 0                   # not executed yet
+    assert led.bytes_on("LDRAM", "serve") == 0
+    # residency is not adopted until the flush: a second replan (or
+    # prefetch) before it must not re-derive and double-submit the
+    # same delta
+    assert rp.maybe_replan(1, {"kv": 48 * G, "w": 14 * G},
+                           phase="burst") is None
+    assert rp.prefetch_phase(1, {"kv": 48 * G, "w": 14 * G},
+                             "burst") is None
+    assert ms.pending_moves == 2                # still one submission
+    r = ms.flush(1)
+    assert d.moved_bytes > 0                    # callback adopted moves
+    assert led.bytes_on("LDRAM", "serve") == d.moved_bytes
+    assert r.moved_bytes("serve") == d.moved_bytes
+    # the live plan is the realized residency
+    assert dict(rp.plan.shares)["kv"]

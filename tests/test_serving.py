@@ -8,10 +8,9 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.models import lm
 from repro.serving import (ContinuousBatchingScheduler, FAST_KIND,
-                           KVBlockTierer, PagedKVPool, PoolExhausted,
-                           Request, RequestState, SchedulerConfig,
-                           ServingConfig, ServingEngine, plan_admission,
-                           spec_from_config)
+                           KVBlockTierer, PagedKVPool, plan_admission,
+                           PoolExhausted, Request, RequestState,
+                           SchedulerConfig, ServingConfig, ServingEngine)
 
 
 def _meta_pool(num_blocks=16, block_tokens=4, fast_budget=None, **kw):
@@ -383,8 +382,8 @@ def test_admission_ignores_preexisting_violations_on_disjoint_links():
     """A flow already under the floor (heavy residency on one link)
     must not head-of-line-block a candidate whose gather rides a
     different, healthy link — only the marginal effect counts."""
-    from repro.topology import TopologyGraph
     from repro.serving.kv_pool import KVBlockSpec
+    from repro.topology import TopologyGraph
     g = TopologyGraph("two-links", origin="hbm")
     g.add_node("hbm", "chip", tier=FAST_KIND)
     g.add_node("host1", "host", tier="pinned_host")

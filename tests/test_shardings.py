@@ -94,8 +94,8 @@ def test_serve_params_tp_only():
     """Inference cells drop FSDP (TP-resident weights, §Perf O5)."""
     import jax
     from repro.configs import get_smoke_config
-    from repro.models import lm, shardings as sh
     from repro.launch.mesh import make_mesh
+    from repro.models import lm, shardings as sh
     mesh = make_mesh((1, 1), ("data", "model"))
     cfg = get_smoke_config("llama3-8b")
     shapes = jax.eval_shape(

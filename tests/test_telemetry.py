@@ -4,13 +4,12 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core import (GiB, ObjectLevelInterleave, TierPreferred,
-                        paper_system, plan_step_cost)
-from repro.core.migration import (MigrationExecutor, MigrationStats,
-                                  migration_time_s)
+from repro.core import GiB, ObjectLevelInterleave, paper_system
+from repro.core.migration import (migration_time_s, MigrationExecutor,
+                                  MigrationStats)
 from repro.telemetry import (AccessSampler, AccessTrace, AdaptiveReplanner,
-                             PhaseDetector, ReplanConfig, SamplerConfig,
-                             classify_traffic, traffic_distance)
+                             classify_traffic, PhaseDetector, ReplanConfig,
+                             SamplerConfig, traffic_distance)
 
 G = GiB
 
@@ -475,7 +474,7 @@ def test_engine_replan_every_zero_disables_replans():
 # metrics percentiles                                                     #
 # ---------------------------------------------------------------------- #
 def test_metrics_percentiles_and_migrated_bytes_per_token():
-    from repro.serving import ServingMetrics, percentile
+    from repro.serving import percentile, ServingMetrics
 
     assert percentile([], 95) == 0.0
     assert percentile([3.0], 50) == 3.0

@@ -1,12 +1,10 @@
 """TieredArray: block placement over memory kinds, gather/update."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
-from repro.core import TieredArray, available_memory_kinds, place_pytree, \
-    gather_pytree
+from repro.core import (available_memory_kinds, gather_pytree, place_pytree,
+                        TieredArray)
 
 
 def test_roundtrip_contiguous():

@@ -3,11 +3,10 @@ import dataclasses
 
 import pytest
 
-from repro.core import (DataObject, GiB, PlacementPlan,
-                        UniformInterleave, distance_weighted_policy,
-                        plan_step_cost)
+from repro.core import (DataObject, distance_weighted_policy, GiB,
+                        PlacementPlan, plan_step_cost, UniformInterleave)
 from repro.telemetry import AccessTrace, AdaptiveReplanner
-from repro.topology import (Flow, TopologyGraph, build_topology,
+from repro.topology import (build_topology, Flow, TopologyGraph,
                             two_socket_system)
 
 G = GiB
