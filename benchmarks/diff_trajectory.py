@@ -1,0 +1,129 @@
+"""Benchmark trajectory diffing: fail CI on headline-metric regression.
+
+Compares the current ``run.py --json`` artifact against a baseline
+artifact (the previous main run's, fetched by CI) and fails when any
+**headline** metric regressed by more than ``--threshold`` (default
+15%), or disappeared from the current run entirely.
+
+Headline metrics are the machine-independent *ratios* the ROADMAP's
+acceptance bars are phrased in — speedups and fairness/lag ratios whose
+value does not drift with runner hardware — never absolute tok/s or
+wall seconds, which vary run-to-run on shared CI machines.  All
+headline metrics are higher-is-better.
+
+Exit codes: 0 = no regression (or no baseline to compare against,
+which is normal on the first run and on forks without artifact
+access); 1 = regression; 2 = usage / unreadable current artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, Optional
+
+# name -> why it is headline (all higher-is-better ratios)
+HEADLINE = {
+    "adaptive_replan.speedup_vs_best_static":
+        "adaptive replanning beats the best static plan",
+    "topology.interleave.speedup":
+        "distance-weighted interleave beats uniform",
+    "multi_tenant.fair_share.vs_best_static":
+        "fair-share arbitration beats the best static split",
+    "multi_tenant.fair_share.vs_free_for_all":
+        "fair-share arbitration beats free-for-all hoarding",
+    "multi_tenant.throughput.vs_best_static":
+        "throughput arbitration beats the best static split",
+    "multi_tenant.predictive.burst_entry_ratio":
+        "prediction hides the burst-entry lag",
+    "multi_tenant.predictive.migration_batch_speedup":
+        "batched cross-tenant moves beat uncoordinated execution",
+}
+
+
+def load_metrics(path: str) -> Dict[str, float]:
+    """Flatten one run.py artifact to {metric name: value}."""
+    with open(path) as f:
+        payload = json.load(f)
+    out: Dict[str, float] = {}
+    for bench in payload.get("benchmarks", []):
+        for row in bench.get("metrics", []):
+            val = row.get("value")
+            if isinstance(val, (int, float)) and not isinstance(val, bool):
+                out[row["name"]] = float(val)
+    return out
+
+
+def diff(baseline: Dict[str, float], current: Dict[str, float],
+         threshold: float) -> int:
+    """Print the comparison; return the number of regressions."""
+    regressions = 0
+    compared = 0
+    for name, why in sorted(HEADLINE.items()):
+        base = baseline.get(name)
+        cur: Optional[float] = current.get(name)
+        if base is None:
+            # baseline predates this metric — nothing to regress from
+            continue
+        if cur is None:
+            regressions += 1
+            print(f"REGRESSION {name}: present in baseline "
+                  f"({base:.4g}) but missing from the current run "
+                  f"({why})")
+            continue
+        compared += 1
+        floor = base * (1.0 - threshold)
+        delta = (cur - base) / base if base else 0.0
+        if cur < floor:
+            regressions += 1
+            print(f"REGRESSION {name}: {base:.4g} -> {cur:.4g} "
+                  f"({delta:+.1%}, floor {floor:.4g}) — {why}")
+        else:
+            print(f"ok         {name}: {base:.4g} -> {cur:.4g} "
+                  f"({delta:+.1%})")
+    print(f"# compared {compared} headline metrics, "
+          f"{regressions} regression(s), threshold {threshold:.0%}")
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True,
+                    help="previous run.py --json artifact (may not exist)")
+    ap.add_argument("--current", required=True,
+                    help="this run's run.py --json artifact")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max tolerated fractional drop (default 0.15)")
+    args = ap.parse_args(argv)
+
+    if not (0.0 < args.threshold < 1.0):
+        print(f"--threshold must be in (0, 1), got {args.threshold}",
+              file=sys.stderr)
+        return 2
+    if not os.path.exists(args.current):
+        print(f"current artifact {args.current} not found",
+              file=sys.stderr)
+        return 2
+    if not os.path.exists(args.baseline):
+        # first run on a branch / artifact expired / fork without
+        # artifact access: nothing to diff is not a failure
+        print(f"# no baseline at {args.baseline} — skipping trajectory "
+              f"diff (first run or artifact unavailable)")
+        return 0
+    try:
+        baseline = load_metrics(args.baseline)
+    except (json.JSONDecodeError, OSError) as e:
+        print(f"# baseline {args.baseline} unreadable ({e}) — skipping "
+              f"trajectory diff")
+        return 0
+    current = load_metrics(args.current)
+    if not current:
+        print(f"current artifact {args.current} holds no metrics",
+              file=sys.stderr)
+        return 2
+    return 1 if diff(baseline, current, args.threshold) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,10 +37,16 @@ import time
 import traceback
 
 # script invocation puts benchmarks/ on sys.path; the package imports
-# (`benchmarks.<name>`) need the repo root
+# (`benchmarks.<name>`) need the repo root, and the bench modules need
+# `repro` importable even when PYTHONPATH=src was not exported
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
+_SRC = os.path.join(_ROOT, "src")
+if os.path.isdir(_SRC) and _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+from repro.obs import MetricsRegistry  # noqa: E402
 
 MODULES = [
     "tier_characterization",
@@ -58,13 +64,15 @@ MODULES = [
 ]
 
 
-def write_json(path: str, results, smoke: bool, wall_s: float) -> None:
+def write_json(path: str, results, smoke: bool, wall_s: float,
+               registry: MetricsRegistry) -> None:
     """Persist the structured results artifact (CI perf trajectory)."""
     payload = {
         "schema_version": 1,
         "smoke": smoke,
         "python": platform.python_version(),
         "benchmarks": results,
+        "registry": registry.snapshot(),
         "totals": {
             "benchmarks": len(results),
             "failed": sum(1 for r in results if r["status"] == "failed"),
@@ -111,6 +119,9 @@ def main(argv=None) -> None:
     only = args.names or MODULES
     failures = 0
     results = []
+    # every metric row also lands in a central registry so the JSON
+    # artifact (and anything downstream) reads one uniform namespace
+    registry = MetricsRegistry()
     t_start = time.time()
     for name in MODULES:
         if name not in only:
@@ -132,6 +143,10 @@ def main(argv=None) -> None:
                     print(f"{key},{val},{derived}")
                 entry["metrics"].append(
                     {"name": key, "value": val, "unit": derived})
+                if isinstance(val, (int, float)) \
+                        and not isinstance(val, bool):
+                    registry.gauge(f"bench.{key}",
+                                   help=str(derived)).set(float(val))
             print(f"# {name}: {len(rows)} rows in "
                   f"{time.time() - t0:.1f}s", file=sys.stderr)
         except Exception as e:
@@ -146,7 +161,7 @@ def main(argv=None) -> None:
         # the artifact is written even on failure: a red run's partial
         # trajectory is still a data point
         write_json(args.json, results, args.smoke,
-                   round(time.time() - t_start, 3))
+                   round(time.time() - t_start, 3), registry)
     if failures:
         sys.exit(1)
 

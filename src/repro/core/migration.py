@@ -421,6 +421,7 @@ class MigrationExecutor:
         self.page_cost_s = page_cost_s
         self.move_fn = move_fn
         self.topology = topology   # repro.topology.TopologyGraph or None
+        self.tracer = None         # optional repro.obs.TraceRecorder
         self.stats = MigrationStats()
         # (move, bytes actually moved) for the most recent execute()
         self.last_moves: List[Tuple[BlockMove, int]] = []
@@ -573,6 +574,11 @@ class MigrationExecutor:
             done = (self.move_fn(m.obj, m.src, m.dst, m.nbytes)
                     if self.move_fn is not None else m.nbytes)
             self.last_moves.append((m, max(int(done), 0)))
+            if self.tracer is not None:
+                self.tracer.event(
+                    "migration.move", cat="migration", obj=m.obj,
+                    src=m.src, dst=m.dst, nbytes=m.nbytes,
+                    done_bytes=max(int(done), 0))
             if done <= 0:
                 continue
             stats.migrated_bytes += int(done)

@@ -93,7 +93,9 @@ def run_continuous(args, cfg, params) -> None:
         fast_block_budget=args.fast_blocks, adaptive=args.adaptive,
         replan_every=args.replan_every, sample_rate=args.sample_rate,
         predictive=args.predictive,
-        topology=args.topology, tenant=args.tenant)
+        topology=args.topology, tenant=args.tenant,
+        slo_p95_ttft_s=args.slo_p95_ttft,
+        slo_p95_decode_s=args.slo_p95_decode)
     eng = ServingEngine(cfg, params, sv)
     rs = np.random.RandomState(0)
     lens = [args.prompt_len, max(args.prompt_len // 2, 4)]
@@ -133,12 +135,42 @@ def run_continuous(args, cfg, params) -> None:
           + (f" prefetches={int(t['prefetches'])} "
              f"budget_preemptions={int(t['budget_preemptions'])}"
              if args.predictive else ""))
+    if rep.slo.get("targets"):
+        for tgt in rep.slo["targets"]:
+            print(f"slo: {tgt['metric']} "
+                  f"p{int(tgt['quantile']*100)} <= "
+                  f"{tgt['threshold_s']*1e3:.1f} ms -> "
+                  f"{tgt['violations']} violation(s) over "
+                  f"{rep.slo['checks']} check(s)")
     for rid, row in rep.per_request:
+        # undefined latencies are omitted from the row, not -1.0
+        ttft = row.get("ttft_s")
+        dec = row.get("decode_tok_s")
+        ttft_str = f"{ttft*1e3:.1f} ms" if ttft is not None else "n/a"
+        dec_str = f"{dec:.1f} tok/s" if dec is not None else "n/a"
         print(f"  req{rid}: prompt={int(row['prompt_tokens'])} "
               f"new={int(row['new_tokens'])} "
-              f"ttft={row['ttft_s']*1e3:.1f} ms "
-              f"decode={row['decode_tok_s']:.1f} tok/s "
+              f"ttft={ttft_str} decode={dec_str} "
               f"preempted={int(row['preemptions'])}x")
+    _write_obs_artifacts(args, eng)
+
+
+def _write_obs_artifacts(args, eng) -> None:
+    """--trace-out / --metrics-out exports for a continuous run."""
+    if args.trace_out:
+        if args.trace_out.endswith(".jsonl"):
+            n = eng.tracer.to_jsonl(args.trace_out)
+            kind = "jsonl"
+        else:
+            n = eng.tracer.to_chrome(args.trace_out)
+            kind = "chrome trace_event"
+        print(f"trace: wrote {n} events ({kind}) -> {args.trace_out}")
+    if args.metrics_out:
+        text = eng.registry.to_prometheus_text()
+        with open(args.metrics_out, "w") as fh:
+            fh.write(text)
+        print(f"metrics: wrote {len(eng.registry.names())} series "
+              f"(prometheus text) -> {args.metrics_out}")
 
 
 def main(argv=None):
@@ -192,6 +224,21 @@ def main(argv=None):
                     help="residency-ledger tenant namespace for this "
                          "engine's KV pool (default: serving; "
                          "continuous only)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the control-plane trace here after the "
+                         "run: .jsonl = one event per line, anything "
+                         "else = Chrome trace_event JSON for "
+                         "chrome://tracing / Perfetto (continuous only)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics registry as Prometheus "
+                         "text exposition here (continuous only)")
+    ap.add_argument("--slo-p95-ttft", type=float, default=None,
+                    help="live SLO target: p95 TTFT threshold in "
+                         "seconds (continuous only)")
+    ap.add_argument("--slo-p95-decode", type=float, default=None,
+                    help="live SLO target: p95 inter-token decode "
+                         "latency threshold in seconds "
+                         "(continuous only)")
     args = ap.parse_args(argv)
 
     if args.predictive and not args.adaptive:
@@ -204,6 +251,15 @@ def main(argv=None):
                  "ledger tenant)")
     if args.tenant is None:
         args.tenant = "serving"
+    if args.scheduler != "continuous":
+        for flag, val in (("--trace-out", args.trace_out),
+                          ("--metrics-out", args.metrics_out),
+                          ("--slo-p95-ttft", args.slo_p95_ttft),
+                          ("--slo-p95-decode", args.slo_p95_decode)):
+            if val is not None:
+                ap.error(f"{flag} only takes effect with --scheduler "
+                         "continuous (the observability plane "
+                         "instruments the paged engine)")
 
     if args.topology:
         if args.scheduler != "continuous":

@@ -59,6 +59,7 @@ class _TrainTelemetry:
         from ..core.migration import MigrationExecutor
         from ..core.tiers import tpu_v5e_tiers
         from ..pool import ResidencyLedger, TieredStateStore
+        from ..obs import MetricsRegistry, TraceRecorder
         from ..telemetry import (AccessSampler, AccessTrace,
                                  AdaptiveReplanner, PhaseDetector,
                                  ReplanConfig, SamplerConfig)
@@ -66,6 +67,11 @@ class _TrainTelemetry:
         self.sampler = AccessSampler(
             self.trace, SamplerConfig(sample_rate=sample_rate))
         self.phases = PhaseDetector(self.trace)
+        # observability plane: control-plane trace (step-indexed clock —
+        # the loop drives epochs, not wall time) + metrics registry
+        self._epoch = 0
+        self.tracer = TraceRecorder(clock=lambda: float(self._epoch))
+        self.registry = MetricsRegistry()
         graph, fast = None, "HBM"
         if topology:
             from ..topology import build_topology
@@ -103,7 +109,9 @@ class _TrainTelemetry:
             executor=MigrationExecutor(tiers, move_fn=self.store.move_fn,
                                        topology=graph),
             default_tier=slow,
-            topology=graph, ledger=self.ledger, tenant=tenant)
+            topology=graph, ledger=self.ledger, tenant=tenant,
+            tracer=self.tracer)
+        self.replanner.executor.tracer = self.tracer
         self.nbytes = {
             "params_bf16": self.param_bytes,
             "grads_bf16": self.param_bytes,
@@ -120,6 +128,10 @@ class _TrainTelemetry:
         emit_step_traffic(self.sampler, self.param_bytes)
         self.phases.update()
         epoch = step + 1
+        self._epoch = epoch
+        self.tracer.event("phase.update", cat="phase", epoch=epoch,
+                          label=str(self.phases.label),
+                          shifts=len(self.phases.shifts))
         if opt is not None and epoch % self.replan_every == 0:
             # refresh the mirror so an applied replan migrates the
             # *current* optimizer bytes, not the init-time ones
@@ -151,6 +163,31 @@ class _TrainTelemetry:
     def opt_bytes_on(self, tier: str) -> int:
         """Ledger view of the optimizer state's tier residency."""
         return self.ledger.object_bytes(self.tenant, self.OPT_OBJ, tier)
+
+    def write_artifacts(self, trace_out=None, metrics_out=None) -> None:
+        """--trace-out / --metrics-out exports for a training run."""
+        if trace_out:
+            if trace_out.endswith(".jsonl"):
+                n = self.tracer.to_jsonl(trace_out)
+                kind = "jsonl"
+            else:
+                n = self.tracer.to_chrome(trace_out)
+                kind = "chrome trace_event"
+            print(f"trace: wrote {n} events ({kind}) -> {trace_out}")
+        if metrics_out:
+            self.registry.set_gauges(self.replanner.summary(),
+                                     prefix="train.replan")
+            self.registry.set_gauges(
+                {"trace_events": float(self.trace.total_events),
+                 "profiling_samples": float(self.sampler.samples),
+                 "profiling_overhead_s": self.sampler.overhead_s,
+                 "phase_shifts": float(len(self.phases.shifts))},
+                prefix="train.telemetry")
+            self.ledger.publish(self.registry)
+            with open(metrics_out, "w") as fh:
+                fh.write(self.registry.to_prometheus_text())
+            print(f"metrics: wrote {len(self.registry.names())} series "
+                  f"(prometheus text) -> {metrics_out}")
 
     def report(self) -> None:
         place = self.ledger.placement(self.tenant, self.OPT_OBJ)
@@ -206,6 +243,13 @@ def main(argv=None):
                     help="key replans by phase recurrence signature "
                          "and pre-stage the proven plan of a predicted "
                          "next phase (requires --adaptive)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the control-plane trace here after the "
+                         "run: .jsonl = one event per line, else Chrome "
+                         "trace_event JSON (requires --adaptive)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics registry as Prometheus "
+                         "text exposition here (requires --adaptive)")
     from ..topology import TOPOLOGY_CHOICES
     ap.add_argument("--topology", default=None,
                     choices=list(TOPOLOGY_CHOICES),
@@ -218,7 +262,9 @@ def main(argv=None):
         # silently would let a typo'd run think it was adaptive
         for flag, val in (("--replan-every", args.replan_every),
                           ("--sample-rate", args.sample_rate),
-                          ("--tenant", args.tenant)):
+                          ("--tenant", args.tenant),
+                          ("--trace-out", args.trace_out),
+                          ("--metrics-out", args.metrics_out)):
             if val is not None:
                 ap.error(f"{flag} only takes effect with --adaptive "
                          f"(the telemetry sidecar is what consumes it)")
@@ -298,6 +344,7 @@ def main(argv=None):
                        metadata={"step": args.steps})
         if telem is not None:
             telem.report()
+            telem.write_artifacts(args.trace_out, args.metrics_out)
     print("done")
     return telem
 

@@ -1,0 +1,26 @@
+"""repro.obs: unified observability plane for the control plane.
+
+The paper's method is measurement — latency/bandwidth/tail behavior
+under tiering — and this package gives the repro's own control plane
+the same treatment:
+
+- trace:    ring-bounded structured spans/events across the decision
+            path (phase detect -> arbiter grant -> replan verdict ->
+            move round -> executed deltas), exportable as JSONL and
+            Chrome trace_event JSON
+- registry: central counters/gauges/histograms with DDSketch-style
+            streaming percentile sketches + Prometheus text exporter
+- slo:      live rolling-window SLO monitors (TTFT / decode latency
+            p50/p95/p99 vs thresholds) and the online burst-entry /
+            steady lag-ratio monitor
+"""
+from .registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                       PercentileSketch)
+from .slo import LagRatioMonitor, SLOMonitor, SLOTarget
+from .trace import replan_chains, TraceEvent, TraceRecorder
+
+__all__ = [
+    "TraceEvent", "TraceRecorder", "replan_chains",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "PercentileSketch",
+    "LagRatioMonitor", "SLOMonitor", "SLOTarget",
+]

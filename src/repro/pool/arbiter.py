@@ -145,7 +145,8 @@ class TierBudgetArbiter:
                  floor_bytes: int = 0,
                  hot_threshold: float = 0.05,
                  predictive: bool = False,
-                 signature_ttl_epochs: int = 256):
+                 signature_ttl_epochs: int = 256,
+                 tracer=None):
         if objective not in OBJECTIVES:
             raise ValueError(f"unknown objective {objective!r}; "
                              f"choose from {OBJECTIVES}")
@@ -175,6 +176,7 @@ class TierBudgetArbiter:
         self._detectors: Dict[str, object] = {}
         self._tables: Dict[str, PhaseDemandTable] = {}
         self.predicted_grants = 0     # demands served from the table
+        self.tracer = tracer          # optional repro.obs.TraceRecorder
 
     # ------------------------------------------------------------------ #
     # demand measurement                                                 #
@@ -350,4 +352,16 @@ class TierBudgetArbiter:
             self.ledger.set_budget(tenant, self.fast_tier, b)
         d = ArbiterDecision(epoch, self.objective, budgets, demands)
         self.decisions.append(d)
+        if self.tracer is not None:
+            by_tenant = {dm.tenant: dm for dm in demands}
+            for tenant, b in sorted(budgets.items()):
+                dm = by_tenant.get(tenant)
+                self.tracer.event(
+                    "arbiter.grant", cat="arbiter", tid=tenant,
+                    epoch=epoch, tenant=tenant, budget_bytes=b,
+                    objective=self.objective,
+                    hot_bytes=dm.hot_bytes if dm else 0,
+                    resident_bytes=dm.resident_bytes if dm else 0,
+                    bytes_per_step=dm.bytes_per_step if dm else 0.0,
+                    source=dm.source if dm else "measured")
         return d

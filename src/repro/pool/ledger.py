@@ -378,3 +378,21 @@ class ResidencyLedger:
         for t in tiers:
             out[f"bytes_on.{t}"] = float(self.bytes_on(t))
         return out
+
+    def publish(self, registry, prefix: str = "ledger") -> int:
+        """Publish the summary plus per-tenant residency and budgets
+        into a repro.obs.MetricsRegistry as gauges; returns the number
+        of gauges set."""
+        n = registry.set_gauges(self.summary(), prefix=prefix)
+        tiers = sorted({t for res in self._res.values() for t in res})
+        for tenant in sorted(self.tenants):
+            for tier in tiers:
+                registry.gauge(
+                    f"{prefix}.{tenant}.bytes_on.{tier}").set(
+                        float(self.bytes_on(tier, tenant)))
+                n += 1
+            for tier, b in sorted(self._budget.get(tenant, {}).items()):
+                registry.gauge(
+                    f"{prefix}.{tenant}.budget.{tier}").set(float(b))
+                n += 1
+        return n

@@ -100,9 +100,11 @@ class MoveScheduler:
     ordered, link-aware batch through the shared executor."""
 
     def __init__(self, executor: MigrationExecutor,
-                 ledger: Optional[ResidencyLedger] = None):
+                 ledger: Optional[ResidencyLedger] = None,
+                 tracer=None):
         self.executor = executor
         self.ledger = ledger
+        self.tracer = tracer           # optional repro.obs.TraceRecorder
         self.rounds: List[MoveRound] = []
         self._pending: List[_Submission] = []
 
@@ -110,6 +112,12 @@ class MoveScheduler:
     @property
     def pending_moves(self) -> int:
         return sum(len(s.delta.moves) for s in self._pending)
+
+    @property
+    def has_pending(self) -> bool:
+        """Any submission queued for the next flush (even move-less
+        ones, whose ``on_done`` must still fire)."""
+        return bool(self._pending)
 
     def submit(self, tenant: str, delta: PlacementDelta,
                move_fn: Optional[Callable] = None,
@@ -234,6 +242,26 @@ class MoveScheduler:
                            coalesced)
         self.rounds.append(round_)
         self._pending = []
+        if self.tracer is not None:
+            now = float(self.tracer.clock())
+            self.tracer.event(
+                "movesched.round", cat="movesched", epoch=epoch,
+                moves=len(scheduled), makespan_s=makespan,
+                independent_s=independent_s, saved_s=round_.saved_s,
+                coalesced_bytes=coalesced)
+            # per-move spans anchored at flush time, offset by their
+            # fluid-schedule start/finish — the timeline a trace viewer
+            # shows is the schedule the batch actually priced
+            for sm in scheduled:
+                m = sm.move
+                self.tracer.complete(
+                    "movesched.move", cat="movesched", tid=sm.tenant,
+                    ts=now + sm.start_s,
+                    dur=max(sm.finish_s - sm.start_s, 0.0),
+                    epoch=epoch, tenant=sm.tenant, obj=m.obj,
+                    src=m.src, dst=m.dst, nbytes=m.nbytes,
+                    done_bytes=sm.done_bytes, priority=sm.priority,
+                    resources=[str(r) for r in sm.resources])
         return round_
 
     # ------------------------------------------------------------------ #

@@ -183,6 +183,13 @@ class ServingConfig:
     # several engines/trainers sharing one ledger must use distinct
     # tenant names so the arbiter can split the fast tier among them)
     tenant: str = "serving"
+    # observability plane (repro.obs): ring bound on the control-plane
+    # trace, and optional p95 SLO thresholds (seconds) for TTFT and
+    # inter-token decode latency — violations are counted live by the
+    # rolling-window SLOMonitor and surfaced in the report
+    trace_max_events: int = 65536
+    slo_p95_ttft_s: Optional[float] = None
+    slo_p95_decode_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -192,6 +199,7 @@ class ServingReport:
     tiering: Dict[str, int]
     policy: str
     telemetry: Dict[str, float] = dataclasses.field(default_factory=dict)
+    slo: Dict[str, object] = dataclasses.field(default_factory=dict)
 
 
 def kind_tiers(pool: PagedKVPool,
@@ -267,12 +275,35 @@ class ServingEngine:
             # and its capacity-expander (CXL-class) node
             topo.alias_tier(tb.fast, FAST_KIND)
             topo.alias_tier(tb.capacity_tier, self.pool.slow_kind)
+        # observability plane: one tracer + registry + SLO monitor per
+        # engine, all on the engine's virtual timebase (_now), created
+        # before the components they instrument
+        self._t0 = 0.0
+        self._virtual_skew = 0.0
+        self._step = 0
+        from ..obs import (LagRatioMonitor, MetricsRegistry, SLOMonitor,
+                           SLOTarget, TraceRecorder)
+        self.tracer = TraceRecorder(clock=self._now,
+                                    max_events=sv.trace_max_events)
+        self.registry = MetricsRegistry()
+        slo_targets = []
+        if sv.slo_p95_ttft_s is not None:
+            slo_targets.append(SLOTarget("ttft", 0.95, sv.slo_p95_ttft_s))
+        if sv.slo_p95_decode_s is not None:
+            slo_targets.append(
+                SLOTarget("decode_latency", 0.95, sv.slo_p95_decode_s))
+        self.slo = SLOMonitor(slo_targets, clock=self._now,
+                              registry=self.registry, tracer=self.tracer)
+        self.lag = LagRatioMonitor()
+        self._lag_tokens = 0          # decode tokens at last epoch close
+        self._lag_time = 0.0          # _now() at last epoch close
         self.sched = ContinuousBatchingScheduler(
             self.pool, SchedulerConfig(
                 max_batch=max_batch,
                 max_prefill_per_iter=sv.max_prefill_per_iter),
-            topology=topo)
-        self.metrics = ServingMetrics()
+            topology=topo, tracer=self.tracer)
+        self.metrics = ServingMetrics(registry=self.registry,
+                                      slo=self.slo)
         # telemetry: the pool emits access events through a sampling
         # front-end; phase detection + (optionally) adaptive replanning
         # consume the shared trace, which also registers as this
@@ -304,13 +335,30 @@ class ServingEngine:
                                            topology=topo),
                 default_tier=self.pool.slow_kind,
                 topology=topo,
-                ledger=self.ledger, tenant=sv.tenant)
+                ledger=self.ledger, tenant=sv.tenant,
+                tracer=self.tracer)
+            self.replanner.executor.tracer = self.tracer
+        # predictive engines run the full control plane in-engine: a
+        # predictive TierBudgetArbiter rebalances this tenant's
+        # fast-tier grant each replan epoch (capacity = the configured
+        # fast-block budget, so single-tenant grants can never exceed
+        # what the pool was sized for), and replan deltas defer to a
+        # MoveScheduler round so the trace shows the scheduled batch
+        self.arbiter = None
+        self.movesched = None
+        if sv.predictive:
+            from ..pool import MoveScheduler, TierBudgetArbiter
+            self.arbiter = TierBudgetArbiter(
+                self.ledger, FAST_KIND,
+                capacity_bytes=fast_budget * self.pool.block_nbytes(),
+                objective="fair_share", predictive=True,
+                tracer=self.tracer)
+            self.movesched = MoveScheduler(
+                self.replanner.executor, self.ledger, tracer=self.tracer)
+            self.replanner.move_scheduler = self.movesched
         self._prefill = jax.jit(steps_mod.make_prefill_step(cfg))
         self._decode = jax.jit(functools.partial(_paged_decode, cfg, bt))
         self._next_rid = 0
-        self._t0 = 0.0
-        self._virtual_skew = 0.0
-        self._step = 0
 
     # ------------------------------------------------------------------ #
     def submit(self, prompt: np.ndarray, max_new_tokens: int,
@@ -371,7 +419,8 @@ class ServingEngine:
         L = toks.shape[1]
         need = self.pool.blocks_for_tokens(L + 1)
         if not self.pool.can_alloc(need):
-            self.sched.preempt_for_blocks(need, protect=req)
+            for v in self.sched.preempt_for_blocks(need, protect=req):
+                self.metrics.on_preempt(v.rid, now)
         if req.state is not RequestState.RUNNING:
             return                     # pool too tight: preempted itself
         logits, cache = self._prefill(self.params,
@@ -399,7 +448,8 @@ class ServingEngine:
                     self.pool.table[req.rid]):
                 continue
             if not self.pool.can_alloc(1):
-                self.sched.preempt_for_blocks(1, protect=req)
+                for v in self.sched.preempt_for_blocks(1, protect=req):
+                    self.metrics.on_preempt(v.rid, self._now())
             if req.state is not RequestState.RUNNING:
                 continue               # preempted itself
             self.pool.alloc(req.rid, 1, kind=self._alloc_kind)
@@ -473,30 +523,52 @@ class ServingEngine:
         next-epoch phase during the current one's slack."""
         self.sampler.advance_epoch()
         self.phases.update()
+        # live lag monitor: one (phase, tokens, time) sample per epoch
+        now = self._now()
+        self.lag.observe_epoch(str(self.phases.label),
+                               self.metrics.decode_tokens
+                               - self._lag_tokens,
+                               now - self._lag_time)
+        self._lag_tokens = self.metrics.decode_tokens
+        self._lag_time = now
+        self.tracer.event("phase.update", cat="phase",
+                          epoch=self._step, label=str(self.phases.label),
+                          shifts=len(self.phases.shifts))
+        if self.slo.targets and self._step % 16 == 0:
+            self.slo.check()
         if (self.replanner is None or self.sv.replan_every <= 0
                 or self._step == 0
                 or self._step % self.sv.replan_every != 0):
             return
+        if self.arbiter is not None:
+            self.arbiter.rebalance(epoch=self._step)
         bn = self.pool.block_nbytes()
         nbytes = {f"seq{sid}": len(tbl) * bn
                   for sid, tbl in self.pool.table.items() if tbl}
         if not nbytes:
             return
-        if self.sv.predictive and self.phases.signature is not None:
-            cur = self.phases.expected_signature(1)
-            nxt = self.phases.expected_signature(2)
-            if nxt is not None and nxt != cur:
-                d = self.replanner.prefetch_phase(self._step, nbytes,
-                                                  nxt)
-                if d is not None:
-                    return
+        try:
+            if self.sv.predictive and self.phases.signature is not None:
+                cur = self.phases.expected_signature(1)
+                nxt = self.phases.expected_signature(2)
+                if nxt is not None and nxt != cur:
+                    d = self.replanner.prefetch_phase(self._step, nbytes,
+                                                      nxt)
+                    if d is not None:
+                        return
+                self.replanner.maybe_replan(self._step, nbytes,
+                                            force=True, phase=cur)
+                return
+            # phase-conditioned plan cache: recurring detector labels
+            # (prefill-heavy vs decode-heavy mixes) reuse their plan
             self.replanner.maybe_replan(self._step, nbytes, force=True,
-                                        phase=cur)
-            return
-        # phase-conditioned plan cache: recurring detector labels
-        # (prefill-heavy vs decode-heavy mixes) reuse their plan
-        self.replanner.maybe_replan(self._step, nbytes, force=True,
-                                    phase=self.phases.label)
+                                        phase=self.phases.label)
+        finally:
+            # deferred applies must land this epoch: flush the move
+            # round so the realized residency is adopted before the
+            # next iteration reads the ledger
+            if self.movesched is not None and self.movesched.has_pending:
+                self.movesched.flush(epoch=self._step)
 
     def telemetry_summary(self) -> Dict[str, float]:
         out: Dict[str, float] = {
@@ -511,6 +583,18 @@ class ServingEngine:
         }
         if self.replanner is not None:
             out.update(self.replanner.summary())
+        if self.movesched is not None:
+            for k, v in self.movesched.summary().items():
+                out[f"movesched.{k}"] = v
+        if self.arbiter is not None:
+            out["arbiter_rebalances"] = float(len(self.arbiter.decisions))
+            out["arbiter_predicted_grants"] = float(
+                self.arbiter.predicted_grants)
+        lag = self.lag.ratio()
+        if lag is not None:
+            out["live_burst_entry_ratio"] = float(lag)
+        out["trace_recorded_events"] = float(len(self.tracer))
+        out["trace_dropped_events"] = float(self.tracer.dropped)
         return out
 
     # ------------------------------------------------------------------ #
@@ -530,7 +614,8 @@ class ServingEngine:
             # an arbiter may have shrunk this tenant's fast budget in
             # the shared ledger since the last iteration: enforce it
             # before admitting new work (freed blocks re-admit victims)
-            self.sched.preempt_over_budget()
+            for v in self.sched.preempt_over_budget():
+                self.metrics.on_preempt(v.rid, now)
             admitted = self.sched.admit(now_s=now)
             if not admitted and not self.sched.running:
                 # idle: fast-forward the arrival clock (synthetic traces)
@@ -560,8 +645,18 @@ class ServingEngine:
         # adaptive replan moves also migrate pool blocks; surface them in
         # the tiering counters the report exposes
         tstats["migrated_bytes"] = self.pool.counters.migrated_bytes
+        if self.slo.targets:
+            self.slo.check()           # final window evaluation
+        summary = self.metrics.summary(tstats)
+        telemetry = self.telemetry_summary()
+        # publish the run's aggregates into the central registry so a
+        # --metrics-out export carries engine + ledger + control-plane
+        # state alongside the streaming histograms
+        self.registry.set_gauges(summary, prefix="serving.summary")
+        self.registry.set_gauges(telemetry, prefix="serving.telemetry")
+        self.ledger.publish(self.registry)
         return ServingReport(
-            summary=self.metrics.summary(tstats),
+            summary=summary,
             per_request=self.metrics.per_request_rows(),
             tiering=tstats, policy=self.tierer.policy_name,
-            telemetry=self.telemetry_summary())
+            telemetry=telemetry, slo=self.slo.summary())

@@ -25,6 +25,7 @@ class RequestMetrics:
     arrival_s: float = 0.0
     admitted_s: Optional[float] = None
     first_token_s: Optional[float] = None
+    last_token_s: Optional[float] = None
     finished_s: Optional[float] = None
     prompt_tokens: int = 0
     new_tokens: int = 0
@@ -64,9 +65,16 @@ class PoolSample:
 
 
 class ServingMetrics:
-    """Aggregates request lifecycles, pool occupancy, and migration."""
+    """Aggregates request lifecycles, pool occupancy, and migration.
 
-    def __init__(self):
+    ``registry`` (a repro.obs.MetricsRegistry) and ``slo`` (a
+    repro.obs.SLOMonitor) are optional sinks: when attached, request
+    lifecycle events also stream into central histograms (TTFT,
+    inter-token decode gap, end-to-end latency) and the live SLO
+    windows, without changing any of the aggregate math here.
+    """
+
+    def __init__(self, registry=None, slo=None):
         self.requests: Dict[int, RequestMetrics] = {}
         self.samples: List[PoolSample] = []
         self.iterations = 0
@@ -75,6 +83,8 @@ class ServingMetrics:
         self.decode_tokens = 0
         self.start_s: Optional[float] = None
         self.end_s: Optional[float] = None
+        self.registry = registry
+        self.slo = slo
 
     # ------------------------------------------------------------------ #
     def on_submit(self, rid: int, arrival_s: float,
@@ -94,15 +104,49 @@ class ServingMetrics:
         r = self.requests[rid]
         if r.first_token_s is None:
             r.first_token_s = now_s
+            ttft = now_s - r.arrival_s
+            if self.registry is not None:
+                self.registry.histogram(
+                    "serving.ttft_s", help="time to first token").observe(ttft)
+            if self.slo is not None:
+                self.slo.observe("ttft", ttft, now=now_s)
+        elif r.last_token_s is not None:
+            gap = now_s - r.last_token_s
+            if self.registry is not None:
+                self.registry.histogram(
+                    "serving.decode_gap_s",
+                    help="inter-token decode latency").observe(gap)
+            if self.slo is not None:
+                self.slo.observe("decode_latency", gap, now=now_s)
+        r.last_token_s = now_s
         r.new_tokens += 1
         self.decode_tokens += 1
+
+    def on_preempt(self, rid: int, now_s: float = 0.0) -> None:
+        """Record a preemption as it happens (not only at finish), so
+        preempted-but-unfinished requests show up in the summary."""
+        r = self.requests.get(rid)
+        if r is not None:
+            r.preemptions += 1
+        if self.registry is not None:
+            self.registry.counter(
+                "serving.preemptions", help="request evictions").inc()
 
     def on_finish(self, rid: int, now_s: float, preemptions: int) -> None:
         r = self.requests[rid]
         r.finished_s = now_s
-        r.preemptions = preemptions
+        # the scheduler's count is authoritative; on_preempt keeps the
+        # live count, so take whichever saw more
+        r.preemptions = max(r.preemptions, preemptions)
         if self.end_s is None or now_s > self.end_s:
             self.end_s = now_s
+        if self.registry is not None:
+            self.registry.counter(
+                "serving.finished", help="completed requests").inc()
+            if r.latency_s is not None:
+                self.registry.histogram(
+                    "serving.latency_s",
+                    help="end-to-end request latency").observe(r.latency_s)
 
     def on_iteration(self, step: int, used_blocks: int, fast_blocks: int,
                      running: int, waiting: int) -> None:
@@ -147,7 +191,10 @@ class ServingMetrics:
             "p50_decode_tok_s": percentile(toks, 50),
             "p95_decode_tok_s": percentile(toks, 95),
             "mean_pool_blocks": self.mean_occupancy(),
-            "preemptions": float(sum(r.preemptions for r in done)),
+            # all requests, not just finished: a preempted request that
+            # never re-finished must still count
+            "preemptions": float(sum(r.preemptions
+                                     for r in self.requests.values())),
         }
         if tiering:
             for k, v in tiering.items():
@@ -160,15 +207,23 @@ class ServingMetrics:
         return out
 
     def per_request_rows(self) -> List[Tuple[int, Dict[str, float]]]:
+        """Exportable per-request rows.
+
+        ``ttft_s`` / ``decode_tok_s`` are *omitted* (not sentinel
+        ``-1.0``) when undefined, so downstream tooling can never
+        mistake a never-started request for a negative latency.
+        """
         rows = []
         for rid in sorted(self.requests):
             r = self.requests[rid]
-            rows.append((rid, {
+            row: Dict[str, float] = {
                 "prompt_tokens": float(r.prompt_tokens),
                 "new_tokens": float(r.new_tokens),
-                "ttft_s": r.ttft_s if r.ttft_s is not None else -1.0,
-                "decode_tok_s": (r.decode_tok_s
-                                 if r.decode_tok_s is not None else -1.0),
                 "preemptions": float(r.preemptions),
-            }))
+            }
+            if r.ttft_s is not None:
+                row["ttft_s"] = r.ttft_s
+            if r.decode_tok_s is not None:
+                row["decode_tok_s"] = r.decode_tok_s
+            rows.append((rid, row))
         return rows

@@ -153,10 +153,11 @@ class ContinuousBatchingScheduler:
 
     def __init__(self, pool: PagedKVPool,
                  cfg: Optional[SchedulerConfig] = None,
-                 topology=None):
+                 topology=None, tracer=None):
         self.pool = pool
         self.cfg = cfg or SchedulerConfig()
         self.topology = topology
+        self.tracer = tracer          # optional repro.obs.TraceRecorder
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []
         self.finished: List[Request] = []
@@ -275,6 +276,12 @@ class ContinuousBatchingScheduler:
             self._admit_stamp += 1
             self.running.append(head)
             admitted.append(head)
+            if self.tracer is not None:
+                self.tracer.event("sched.admit", cat="sched", ts=now_s,
+                                  rid=head.rid, blocks=need,
+                                  running=len(self.running),
+                                  waiting=len(self.waiting),
+                                  readmission=head.preemptions > 0)
         return admitted
 
     # ------------------------------------------------------------------ #
@@ -297,7 +304,7 @@ class ContinuousBatchingScheduler:
         for victim in others + last:       # protect evicted only last
             if self.pool.free_block_count() >= n_blocks:
                 break
-            self._evict(victim)
+            self._evict(victim, reason="capacity")
             victims.append(victim)
         return victims
 
@@ -332,17 +339,21 @@ class ContinuousBatchingScheduler:
                 break
             victim = min(holders,
                          key=lambda r: (r.priority, -r.admit_order))
-            self._evict(victim)
+            self._evict(victim, reason="budget")
             self.budget_preemptions += 1
             victims.append(victim)
         return victims
 
-    def _evict(self, req: Request) -> None:
+    def _evict(self, req: Request, reason: str = "capacity") -> None:
         self.pool.free_seq(req.rid)
         self.running.remove(req)
         req.state = RequestState.PREEMPTED
         req.preemptions += 1
         self.preemption_events += 1
+        if self.tracer is not None:
+            self.tracer.event("sched.preempt", cat="sched", rid=req.rid,
+                              reason=reason, priority=req.priority,
+                              preemptions=req.preemptions)
         # LIFO re-entry: most recently evicted goes first
         self.waiting.appendleft(req)
 
@@ -351,3 +362,7 @@ class ContinuousBatchingScheduler:
         self.running.remove(req)
         req.state = RequestState.FINISHED
         self.finished.append(req)
+        if self.tracer is not None:
+            self.tracer.event("sched.finish", cat="sched", rid=req.rid,
+                              new_tokens=len(req.out_tokens),
+                              preemptions=req.preemptions)

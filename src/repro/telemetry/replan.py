@@ -111,8 +111,9 @@ class AdaptiveReplanner:
                  topology=None, origin: Optional[str] = None,
                  ledger: Optional[ResidencyLedger] = None,
                  tenant: str = "replan",
-                 move_scheduler=None):
+                 move_scheduler=None, tracer=None):
         self.trace = trace
+        self.tracer = tracer           # optional repro.obs.TraceRecorder
         self.topology = topology
         # distance-adjusted view: path latency/bandwidth folded into the
         # tier descriptors, so every ordering and costing below honors
@@ -160,6 +161,17 @@ class AdaptiveReplanner:
         self._deferred_pending = False
 
     # ------------------------------------------------------------------ #
+    def _trace_decision(self, d: ReplanDecision) -> None:
+        if self.tracer is None:
+            return
+        self.tracer.event(
+            "replan.decision", cat="replan", tid=self.tenant,
+            epoch=d.epoch, tenant=self.tenant, applied=d.applied,
+            reason=d.reason, old_step_s=d.old_step_s,
+            new_step_s=d.new_step_s, migration_s=d.migration_s,
+            moved_bytes=d.moved_bytes, denied_bytes=d.denied_bytes,
+            cached=d.cached, deferred=d.deferred)
+
     @property
     def replans_applied(self) -> int:
         return sum(1 for d in self.decisions if d.applied)
@@ -307,6 +319,7 @@ class AdaptiveReplanner:
             d = ReplanDecision(epoch, True, "initial",
                                cached=cached is not None)
             self.decisions.append(d)
+            self._trace_decision(d)
             return d
 
         old_shares = self._current_shares(nbytes)
@@ -344,6 +357,7 @@ class AdaptiveReplanner:
             self._apply(d, delta, nbytes, new_plan, phase,
                         cache_proven=True)
         self.decisions.append(d)
+        self._trace_decision(d)
         return d
 
     def prefetch_phase(self, epoch: int, nbytes: Mapping[str, int],
@@ -389,6 +403,7 @@ class AdaptiveReplanner:
         self.prefetches += 1
         self._apply(d, delta, nbytes, cached, phase, cache_proven=True)
         self.decisions.append(d)
+        self._trace_decision(d)
         return d
 
     def _apply(self, d: ReplanDecision, delta, nbytes, new_plan,
@@ -434,6 +449,12 @@ class AdaptiveReplanner:
         d.moved_bytes = done
         intended = sum(m.nbytes for m, _ in moves_done)
         d.denied_bytes = max(intended - done, 0)
+        if self.tracer is not None:
+            self.tracer.event(
+                "replan.adopt", cat="replan", tid=self.tenant,
+                epoch=d.epoch, tenant=self.tenant, reason=d.reason,
+                moved_bytes=d.moved_bytes, denied_bytes=d.denied_bytes,
+                moves=len(moves_done), deferred=d.deferred)
         if phase is not None and cache_proven:
             # cache the *intended* plan: it is the phase's target
             # placement; denials are per-occurrence capacity facts

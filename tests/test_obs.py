@@ -1,0 +1,384 @@
+"""Observability plane (repro.obs): percentile sketches, trace ring +
+exports, metrics registry, live SLO monitors, and the instrumented
+control-plane decision chain end to end."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import lm
+from repro.obs import (Counter, LagRatioMonitor, MetricsRegistry,
+                       PercentileSketch, SLOMonitor, SLOTarget,
+                       TraceRecorder, replan_chains)
+from repro.serving import ServingConfig, ServingEngine
+from repro.serving.metrics import ServingMetrics
+
+
+# ===================================================================== #
+# PercentileSketch: bounded relative error vs exact percentiles         #
+# ===================================================================== #
+@pytest.mark.parametrize("seed", [0, 7])
+def test_sketch_bounded_relative_error(seed):
+    rs = np.random.RandomState(seed)
+    values = rs.lognormal(mean=-2.0, sigma=1.5, size=4000)
+    sk = PercentileSketch(rel_err=0.01)
+    for v in values:
+        sk.add(float(v))
+    for q in (0.50, 0.90, 0.95, 0.99):
+        exact = float(np.percentile(values, q * 100.0))
+        got = sk.quantile(q)
+        # the log-bucket guarantee is rel_err on the value; rank
+        # interpolation differences add a little, hence 3x slack
+        assert abs(got - exact) <= 3 * 0.01 * exact, (
+            f"q={q}: sketch {got} vs exact {exact}")
+
+
+def test_sketch_zero_and_negative_collapse_to_zero_bucket():
+    sk = PercentileSketch()
+    for v in (0.0, -1.0, -5.5, 0.0):
+        sk.add(v)
+    assert sk.quantile(0.5) == 0.0
+    s = sk.summary()
+    assert s["count"] == 4
+    assert s["min"] == -5.5 and s["max"] == 0.0
+
+
+def test_sketch_summary_moments_exact():
+    sk = PercentileSketch()
+    for v in (1.0, 2.0, 3.0, 4.0):
+        sk.add(v)
+    s = sk.summary()
+    assert s["count"] == 4
+    assert s["sum"] == pytest.approx(10.0)
+    assert s["mean"] == pytest.approx(2.5)
+
+
+# ===================================================================== #
+# TraceRecorder: ring bound, exports, round-trips                       #
+# ===================================================================== #
+def _fake_clock(times):
+    it = iter(times)
+    last = [0.0]
+
+    def clock():
+        try:
+            last[0] = next(it)
+        except StopIteration:
+            pass
+        return last[0]
+    return clock
+
+
+def test_trace_ring_eviction_counts_drops():
+    tr = TraceRecorder(clock=lambda: 0.0, max_events=10)
+    for i in range(25):
+        tr.event("e", seq=i)
+    assert len(tr) == 10
+    assert tr.dropped == 15
+    # the survivors are the newest events
+    assert [ev.args["seq"] for ev in tr.events] == list(range(15, 25))
+
+
+def test_trace_jsonl_roundtrip(tmp_path):
+    tr = TraceRecorder(clock=_fake_clock([0.5, 1.25]))
+    tr.event("grant", cat="arbiter", tid="serve",
+             nbytes=1024, source="predicted")
+    tr.complete("move", cat="movesched", tid="train", ts=1.0, dur=0.75,
+                obj="opt_state", resources=["upi", "CXL"])
+    path = tmp_path / "trace.jsonl"
+    assert tr.to_jsonl(str(path)) == 2
+    back = TraceRecorder.read_jsonl(str(path))
+    assert [ev.to_dict() for ev in back] == \
+        [ev.to_dict() for ev in tr.events]
+    assert back[1].ph == "X" and back[1].dur_s == 0.75
+
+
+def test_trace_chrome_export_structure(tmp_path):
+    tr = TraceRecorder(clock=lambda: 2.0, max_events=2)
+    tr.event("decision", cat="replan", applied=True)
+    tr.complete("round", ts=1.0, dur=0.5)
+    tr.event("extra")                       # evicts "decision"
+    path = tmp_path / "trace.json"
+    assert tr.to_chrome(str(path)) == 2
+    payload = json.loads(path.read_text())
+    evs = payload["traceEvents"]
+    assert [e["ph"] for e in evs] == ["X", "i"]
+    assert evs[0]["ts"] == pytest.approx(1.0 * 1e6)   # microseconds
+    assert evs[0]["dur"] == pytest.approx(0.5 * 1e6)
+    assert evs[1]["s"] == "t"               # instant scope present
+    assert payload["metadata"]["dropped_events"] == 1
+
+
+def test_trace_span_times_block_and_attaches_args():
+    tr = TraceRecorder(clock=_fake_clock([1.0, 3.5]))
+    with tr.span("work", cat="test") as args:
+        args["result"] = 42
+    (ev,) = tr.events
+    assert ev.ph == "X"
+    assert ev.ts_s == 1.0 and ev.dur_s == pytest.approx(2.5)
+    assert ev.args["result"] == 42
+
+
+def test_trace_json_safe_numpy_args(tmp_path):
+    tr = TraceRecorder(clock=lambda: 0.0)
+    tr.event("e", nbytes=np.int64(7), frac=np.float32(0.5),
+             shape=(3, 4))
+    path = tmp_path / "t.jsonl"
+    tr.to_jsonl(str(path))                  # must not raise
+    (ev,) = TraceRecorder.read_jsonl(str(path))
+    assert ev.args["nbytes"] == 7
+    assert ev.args["shape"] == [3, 4]
+
+
+# ===================================================================== #
+# MetricsRegistry: get-or-create, conflicts, Prometheus text            #
+# ===================================================================== #
+def test_registry_get_or_create_is_idempotent():
+    reg = MetricsRegistry()
+    c1 = reg.counter("a.count")
+    c1.inc(3)
+    assert reg.counter("a.count") is c1
+    assert reg.counter("a.count").value == 3
+
+
+def test_registry_type_conflict_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+
+
+def test_counter_rejects_negative_increment():
+    with pytest.raises(ValueError):
+        Counter("c").inc(-1)
+
+
+def test_registry_set_gauges_skips_non_numeric():
+    reg = MetricsRegistry()
+    n = reg.set_gauges({"a": 1.5, "b": True, "c": "text", "d": 2},
+                       prefix="pre")
+    assert n == 2
+    assert sorted(reg.names()) == ["pre.a", "pre.d"]
+    assert reg.gauge("pre.a").value == 1.5
+
+
+def test_registry_prometheus_text():
+    reg = MetricsRegistry()
+    reg.counter("serving.finished", help="done").inc(5)
+    reg.gauge("pool.fast-frac").set(0.75)
+    h = reg.histogram("serving.ttft_s")
+    for v in (0.1, 0.2, 0.3):
+        h.observe(v)
+    text = reg.to_prometheus_text()
+    assert "# TYPE serving_finished counter" in text
+    assert "serving_finished 5" in text
+    assert "pool_fast_frac 0.75" in text           # sanitized name
+    assert 'serving_ttft_s{quantile="0.95"}' in text
+    assert "serving_ttft_s_count 3" in text
+    assert "serving_ttft_s_sum" in text
+
+
+def test_registry_snapshot_expands_histograms():
+    reg = MetricsRegistry()
+    reg.histogram("h").observe(2.0)
+    snap = reg.snapshot()
+    assert snap["h.count"] == 1
+    assert snap["h.p50"] == pytest.approx(2.0, rel=0.05)
+
+
+# ===================================================================== #
+# SLOMonitor: rolling-window violations under an injected clock         #
+# ===================================================================== #
+def test_slo_violations_counted_under_fake_clock():
+    now = [0.0]
+    tr = TraceRecorder(clock=lambda: now[0])
+    reg = MetricsRegistry()
+    mon = SLOMonitor([SLOTarget("ttft", 0.95, threshold_s=0.2)],
+                     clock=lambda: now[0], registry=reg, tracer=tr)
+    for i in range(20):
+        mon.observe("ttft", 0.05)
+    assert mon.check() == []                # all fast: no violation
+    for i in range(20):
+        mon.observe("ttft", 0.5)            # now the window is slow
+    now[0] = 3.0
+    violated = mon.check()
+    assert len(violated) == 1
+    target, value = violated[0]
+    assert target.key == "ttft.p95" and value > 0.2
+    assert mon.violations["ttft.p95"] == 1
+    assert reg.counter("slo.violations.ttft.p95").value == 1
+    (ev,) = tr.filter(name="slo.violation")
+    assert ev.ts_s == 3.0 and ev.args["threshold_s"] == 0.2
+    s = mon.summary()
+    assert s["checks"] == 2
+    assert s["targets"][0]["violations"] == 1
+
+
+def test_slo_window_is_rolling():
+    mon = SLOMonitor([SLOTarget("ttft", 0.50, threshold_s=1.0)],
+                     window=4)
+    for v in (5.0, 5.0, 5.0, 5.0, 0.1, 0.1, 0.1, 0.1):
+        mon.observe("ttft", v)
+    assert mon.check() == []        # the slow samples rolled out
+
+
+# ===================================================================== #
+# LagRatioMonitor: online burst-entry / steady ratio                    #
+# ===================================================================== #
+def _feed_cycles(mon, cycles, entry_rate, steady_rate,
+                 burst_len=4, lull_len=4):
+    for _ in range(cycles):
+        for pos in range(burst_len):
+            rate = entry_rate if pos == 0 else steady_rate
+            mon.observe_epoch("burst", rate, 1.0)
+        for _ in range(lull_len):
+            mon.observe_epoch("lull", 10.0, 1.0)
+
+
+def test_lag_ratio_matches_synthetic_phases():
+    mon = LagRatioMonitor(warmup_occurrences=2, steady_from=2)
+    _feed_cycles(mon, cycles=4, entry_rate=80.0, steady_rate=100.0)
+    # warmup discards the first two burst occurrences entirely
+    assert len(mon.entry_rates["burst"]) == 2
+    assert mon.ratio("burst") == pytest.approx(0.8)
+    # the busiest phase is picked automatically
+    assert mon.ratio() == pytest.approx(0.8)
+    assert mon.summary()["phase"] == "burst"
+
+
+def test_lag_ratio_none_until_past_warmup():
+    mon = LagRatioMonitor(warmup_occurrences=2)
+    _feed_cycles(mon, cycles=2, entry_rate=50.0, steady_rate=100.0)
+    assert mon.ratio("burst") is None
+
+
+def test_lag_ratio_ignores_zero_time_epochs():
+    mon = LagRatioMonitor(warmup_occurrences=0, steady_from=2)
+    mon.observe_epoch("burst", 100.0, 0.0)   # skipped, but still pos 0
+    for _ in range(3):
+        mon.observe_epoch("burst", 100.0, 1.0)
+    assert mon.ratio("burst") is None        # no entry sample recorded
+
+
+# ===================================================================== #
+# ServingMetrics: live preemption counting + omitted-key rows           #
+# ===================================================================== #
+def test_summary_counts_preemptions_of_unfinished_requests():
+    m = ServingMetrics()
+    m.on_submit(1, 0.0, 8)
+    m.on_submit(2, 0.0, 8)
+    m.on_preempt(1, 0.1)
+    m.on_preempt(1, 0.2)
+    m.on_preempt(2, 0.3)
+    # request 1 finishes (scheduler agrees on 2); request 2 never does
+    m.on_finish(1, 1.0, preemptions=2)
+    s = m.summary()
+    assert s["preemptions"] == 3.0          # 2 finished + 1 in flight
+    assert s["finished"] == 1.0
+
+
+def test_on_finish_takes_max_of_live_and_scheduler_counts():
+    m = ServingMetrics()
+    m.on_submit(1, 0.0, 8)
+    m.on_finish(1, 1.0, preemptions=4)      # no live on_preempt calls
+    assert m.summary()["preemptions"] == 4.0
+
+
+def test_per_request_rows_omit_undefined_latencies():
+    m = ServingMetrics()
+    m.on_submit(1, 0.0, 8)                  # never admitted: no tokens
+    m.on_submit(2, 0.0, 8)
+    m.on_token(2, 0.5)
+    for t in (0.6, 0.7):
+        m.on_token(2, t)
+    m.on_finish(2, 0.7, preemptions=0)
+    rows = dict(m.per_request_rows())
+    assert "ttft_s" not in rows[1] and "decode_tok_s" not in rows[1]
+    assert rows[2]["ttft_s"] == pytest.approx(0.5)
+    assert rows[2]["decode_tok_s"] > 0
+
+
+def test_serving_metrics_publish_to_registry_and_slo():
+    reg = MetricsRegistry()
+    slo = SLOMonitor([SLOTarget("ttft", 0.95, threshold_s=0.1)],
+                     registry=reg)
+    m = ServingMetrics(registry=reg, slo=slo)
+    m.on_submit(1, 0.0, 8)
+    m.on_token(1, 0.4)                      # ttft 0.4 > threshold
+    m.on_token(1, 0.45)
+    m.on_finish(1, 0.45, preemptions=0)
+    assert slo.check()                      # violation observed
+    snap = reg.snapshot()
+    assert snap["serving.ttft_s.count"] == 1
+    assert snap["serving.finished"] == 1
+
+
+# ===================================================================== #
+# End-to-end: the instrumented predictive engine's decision chain       #
+# ===================================================================== #
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_smoke_config("llama3-8b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_engine_trace_reconstructs_decision_chain(tiny, tmp_path):
+    """A predictive serve leaves a trace from which the full replan
+    chain — phase -> grant -> verdict -> scheduled moves — rebuilds."""
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params, ServingConfig(
+        block_tokens=8, max_batch=2, max_context=32, policy="tiering08",
+        adaptive=True, predictive=True, replan_every=4,
+        slo_p95_ttft_s=1e-6))               # violates: everything is slower
+    rs = np.random.RandomState(0)
+    for i in range(4):
+        eng.submit(rs.randint(0, cfg.vocab, (8,)).astype(np.int32),
+                   max_new_tokens=8, arrival_s=0.002 * i)
+    rep = eng.run()
+    assert rep.summary["finished"] == 4.0
+
+    chains = replan_chains(eng.tracer.events)
+    assert chains, "no epoch-keyed control-plane events recorded"
+    assert any(c["decisions"] for c in chains.values())
+    assert any(c["grants"] for c in chains.values())
+    assert any(c["phases"] for c in chains.values())
+    # grants carry the demand source the predictive arbiter decided on
+    grant = next(c["grants"][0] for c in chains.values() if c["grants"])
+    assert grant.args["source"] in ("measured", "predicted")
+
+    # the impossible TTFT target must have been caught live
+    assert rep.slo["targets"][0]["violations"] > 0
+
+    # exports round-trip through both formats
+    jl = tmp_path / "t.jsonl"
+    assert eng.tracer.to_jsonl(str(jl)) == len(eng.tracer.events)
+    assert len(TraceRecorder.read_jsonl(str(jl))) == len(eng.tracer.events)
+    ch = tmp_path / "t.json"
+    eng.tracer.to_chrome(str(ch))
+    assert json.loads(ch.read_text())["traceEvents"]
+
+    # the registry saw the run: summary gauges + latency histograms
+    snap = eng.registry.snapshot()
+    assert snap["serving.summary.finished"] == 4.0
+    assert snap["serving.ttft_s.count"] == 4
+    assert any(k.startswith("ledger.") for k in snap)
+
+
+def test_serve_cli_writes_obs_artifacts(tmp_path):
+    """The launch CLI contract CI smokes: --trace-out/--metrics-out
+    leave parseable, non-empty artifacts behind."""
+    from repro.launch import serve
+    trace = tmp_path / "trace.jsonl"
+    metrics = tmp_path / "metrics.prom"
+    serve.main(["--smoke", "--scheduler", "continuous", "--adaptive",
+                "--num-requests", "3", "--new-tokens", "6",
+                "--trace-out", str(trace),
+                "--metrics-out", str(metrics)])
+    events = TraceRecorder.read_jsonl(str(trace))
+    assert events
+    assert any(ev.name == "sched.admit" for ev in events)
+    text = metrics.read_text()
+    assert "# TYPE" in text and "serving_" in text
