@@ -39,13 +39,24 @@ HEADLINE = {
         "prediction hides the burst-entry lag",
     "multi_tenant.predictive.migration_batch_speedup":
         "batched cross-tenant moves beat uncoordinated execution",
+    "calibration.move_time.error_ratio":
+        "calibration shrinks p95 move-time error vs the builder model",
+    "calibration.plan_quality.recovery":
+        "calibrated plans recover near-oracle on perturbed hardware",
+    "prediction.accuracy.move_time":
+        "audited move-time predictions land within tolerance",
+    "prediction.accuracy.phase":
+        "phase-signature predictions hit on recurring workloads",
 }
 
 
-def load_metrics(path: str) -> Dict[str, float]:
-    """Flatten one run.py artifact to {metric name: value}."""
+def load_payload(path: str) -> dict:
     with open(path) as f:
-        payload = json.load(f)
+        return json.load(f)
+
+
+def flatten_metrics(payload: dict) -> Dict[str, float]:
+    """Flatten one run.py artifact to {metric name: value}."""
     out: Dict[str, float] = {}
     for bench in payload.get("benchmarks", []):
         for row in bench.get("metrics", []):
@@ -53,6 +64,10 @@ def load_metrics(path: str) -> Dict[str, float]:
             if isinstance(val, (int, float)) and not isinstance(val, bool):
                 out[row["name"]] = float(val)
     return out
+
+
+def load_metrics(path: str) -> Dict[str, float]:
+    return flatten_metrics(load_payload(path))
 
 
 def diff(baseline: Dict[str, float], current: Dict[str, float],
@@ -112,12 +127,24 @@ def main(argv=None) -> int:
               f"diff (first run or artifact unavailable)")
         return 0
     try:
-        baseline = load_metrics(args.baseline)
+        base_payload = load_payload(args.baseline)
     except (json.JSONDecodeError, OSError) as e:
         print(f"# baseline {args.baseline} unreadable ({e}) — skipping "
               f"trajectory diff")
         return 0
-    current = load_metrics(args.current)
+    cur_payload = load_payload(args.current)
+    # a smoke artifact's numbers come from reduced problem sizes —
+    # diffing them against a full run would flag phantom regressions
+    # (or hide real ones), so refuse the comparison outright
+    base_smoke = bool(base_payload.get("smoke", False))
+    cur_smoke = bool(cur_payload.get("smoke", False))
+    if base_smoke != cur_smoke:
+        print(f"# baseline smoke={base_smoke} vs current "
+              f"smoke={cur_smoke} — artifacts are not comparable, "
+              f"skipping trajectory diff")
+        return 0
+    baseline = flatten_metrics(base_payload)
+    current = flatten_metrics(cur_payload)
     if not current:
         print(f"current artifact {args.current} holds no metrics",
               file=sys.stderr)

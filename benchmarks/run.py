@@ -14,6 +14,8 @@ Prints ``name,value,derived`` CSV.  Modules:
                          distance-weighted interleave, link contention
   multi_tenant_bench     two tenants on one pool: fair-share fast-tier
                          arbitration vs static splits and free-for-all
+  calibration_bench      prediction audit + self-calibrating cost model
+                         on a perturbed testbed vs the builder defaults
   kernel_bench           Pallas kernel microbenches
   roofline               per-cell roofline from the dry-run artifacts
 
@@ -59,17 +61,21 @@ MODULES = [
     "adaptive_replan_bench",
     "topology_bench",
     "multi_tenant_bench",
+    "calibration_bench",
     "kernel_bench",
     "roofline",
 ]
 
 
 def write_json(path: str, results, smoke: bool, wall_s: float,
-               registry: MetricsRegistry) -> None:
+               registry: MetricsRegistry, argv=None) -> None:
     """Persist the structured results artifact (CI perf trajectory)."""
     payload = {
         "schema_version": 1,
         "smoke": smoke,
+        # the exact invocation, so trajectory diffs can refuse to
+        # compare runs produced under different conditions
+        "argv": list(argv if argv is not None else sys.argv[1:]),
         "python": platform.python_version(),
         "benchmarks": results,
         "registry": registry.snapshot(),
@@ -103,6 +109,10 @@ def main(argv=None) -> None:
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write structured results (per-bench status, "
                          "wall time, metric rows) to PATH")
+    ap.add_argument("--prom", metavar="PATH", default=None,
+                    help="write the central registry (every metric row "
+                         "plus module-published probe/calibration "
+                         "gauges) as Prometheus text exposition to PATH")
     args = ap.parse_args(argv)
 
     if args.list:
@@ -131,10 +141,14 @@ def main(argv=None) -> None:
                  "metrics": []}
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            params = inspect.signature(mod.run).parameters
             kwargs = {}
-            if args.smoke and "smoke" in inspect.signature(
-                    mod.run).parameters:
+            if args.smoke and "smoke" in params:
                 kwargs["smoke"] = True
+            if "registry" in params:
+                # modules that publish gauges directly (probe results,
+                # calibration state) write into the central registry
+                kwargs["registry"] = registry
             rows = mod.run(**kwargs)
             for key, val, derived in rows:
                 if isinstance(val, float):
@@ -161,7 +175,13 @@ def main(argv=None) -> None:
         # the artifact is written even on failure: a red run's partial
         # trajectory is still a data point
         write_json(args.json, results, args.smoke,
-                   round(time.time() - t_start, 3), registry)
+                   round(time.time() - t_start, 3), registry,
+                   argv=argv)
+    if args.prom:
+        with open(args.prom, "w") as f:
+            f.write(registry.to_prometheus_text())
+        print(f"# wrote {args.prom}: {len(registry.names())} series "
+              f"(prometheus text)", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -89,8 +89,16 @@ def measured_host_tier_rows(n_mb: int = 64, iters: int = 5):
     return rows
 
 
-def run():
+def run(registry=None):
+    measured = measured_host_tier_rows()
     rows = (fig2_latency_rows() + fig3_bandwidth_rows()
             + fig4_loaded_latency_rows() + sec3_stream_assignment_rows()
-            + measured_host_tier_rows())
+            + measured)
+    if registry is not None:
+        # probe results double as calibration inputs: publish them
+        # under probe.* so the Prometheus dump and the --json artifact
+        # carry what a CostModelCalibrator would be fitted from
+        registry.set_gauges({f"probe.{name}": val
+                             for name, val, _ in measured
+                             if isinstance(val, (int, float))})
     return rows

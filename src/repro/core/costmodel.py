@@ -63,7 +63,8 @@ def plan_step_cost(objs: Sequence[DataObject], plan: PlacementPlan,
                    tiers: Mapping[str, MemoryTier],
                    total_streams: int = 32,
                    compute_time_s: float = 0.0,
-                   topology=None, origin: Optional[str] = None) -> StepCost:
+                   topology=None, origin: Optional[str] = None,
+                   calibrator=None) -> StepCost:
     """Evaluate a placement plan with PHASED access semantics.
 
     HPC sweeps touch objects in phases (one array at a time), so the step
@@ -80,7 +81,14 @@ def plan_step_cost(objs: Sequence[DataObject], plan: PlacementPlan,
     every interconnect link it crosses: tiers behind one UPI/PCIe hop
     *interfere* instead of serving in parallel, within an object's
     phase and across the step.
+
+    With a ``calibrator`` (``repro.obs.calibrate.CostModelCalibrator``)
+    the tier descriptors and the graph's link parameters are replaced
+    by their probe-fitted / online-corrected versions first, so the
+    step price reflects measured hardware instead of builder defaults.
     """
+    if calibrator is not None:
+        tiers, topology = calibrator.calibrated_view(tiers, topology)
     tier_links = {}
     if topology is not None:
         tiers = topology.effective_tiers(tiers, origin)
@@ -168,8 +176,8 @@ def policy_search(objs: Sequence[DataObject],
                   grid: int = 10,
                   total_streams: int = 32,
                   compute_time_s: float = 0.0,
-                  topology=None, origin: Optional[str] = None
-                  ) -> SearchResult:
+                  topology=None, origin: Optional[str] = None,
+                  calibrator=None) -> SearchResult:
     """Grid search over fast-tier fractions per movable object.
 
     Mirrors FlexGen's cost-model-driven search: for each non-pinned object,
@@ -183,9 +191,16 @@ def policy_search(objs: Sequence[DataObject],
     distance-adjusted (path-aware) view from ``origin`` — a far-socket
     CXL card spills *after* remote DRAM, and plans that route traffic
     over a shared hop are priced with that hop's serialization.
+
+    A ``calibrator`` swaps both the tiers and the graph for their
+    measured-corrected versions before the search, so the chosen plan
+    optimizes real numbers (capacities stay the builder's — calibration
+    corrects speeds, not sizes).
     """
     from .policies import _tier_order  # local import to avoid cycle
 
+    if calibrator is not None:
+        tiers, topology = calibrator.calibrated_view(tiers, topology)
     search_tiers = (topology.effective_tiers(tiers, origin)
                     if topology is not None else tiers)
     order = _tier_order(search_tiers)

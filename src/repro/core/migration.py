@@ -26,6 +26,7 @@ behaviour the paper uncovered.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -422,9 +423,32 @@ class MigrationExecutor:
         self.move_fn = move_fn
         self.topology = topology   # repro.topology.TopologyGraph or None
         self.tracer = None         # optional repro.obs.TraceRecorder
+        self.audit = None          # optional repro.obs.PredictionLedger
+        self.calibrator = None     # optional obs.CostModelCalibrator
+        # True when move_fn performs real transfers whose wall time is
+        # comparable to the model's seconds (e.g. TieredStateStore's
+        # device_put re-placements) — gates wall-clock audit joins and
+        # the online calibration feed; bookkeeping move_fns leave it off
+        self.physical_moves = False
+        # the un-calibrated parameters recalibrate() corrects from
+        self._base_tiers = dict(tiers)
+        self._base_topology = topology
+        self._executions = 0
         self.stats = MigrationStats()
         # (move, bytes actually moved) for the most recent execute()
         self.last_moves: List[Tuple[BlockMove, int]] = []
+
+    def recalibrate(self) -> None:
+        """Swap pricing parameters for the calibrator's corrected view.
+
+        Idempotent and cheap; the owner calls it after a probe fit or
+        whenever online scales moved (e.g. each replan epoch), so
+        ``cost_s`` / ``move_cost_s`` / fluid schedules price with
+        measured numbers.  Without a calibrator it is a no-op."""
+        if self.calibrator is None:
+            return
+        self.tiers, self.topology = self.calibrator.calibrated_view(
+            self._base_tiers, self._base_topology)
 
     # ------------------------------------------------------------------ #
     @staticmethod
@@ -570,6 +594,18 @@ class MigrationExecutor:
         stats = stats if stats is not None else self.stats
         rank = self.tier_rank()
         self.last_moves = []
+        # audit the priced move time against the realized wall time —
+        # only meaningful when move_fn performs real transfers
+        audited = (self.audit is not None and self.physical_moves
+                   and self.move_fn is not None and delta.moves)
+        if audited:
+            self._executions += 1
+            key = self._executions
+            predicted = self.cost_s(delta)
+            self.audit.predict("migration.move_time", key, predicted,
+                               moves=len(delta.moves),
+                               nbytes=delta.total_bytes)
+            t0 = time.perf_counter()
         for m in delta.moves:
             done = (self.move_fn(m.obj, m.src, m.dst, m.nbytes)
                     if self.move_fn is not None else m.nbytes)
@@ -586,6 +622,16 @@ class MigrationExecutor:
                 stats.promoted += 1
             elif rank.get(m.dst, 0) > rank.get(m.src, 0):
                 stats.demoted += 1
+        if audited:
+            realized = time.perf_counter() - t0
+            touched = sorted({t for m in delta.moves
+                              for t in (m.src, m.dst)})
+            self.audit.realize("migration.move_time", key, realized,
+                               resources=touched)
+            if self.calibrator is not None and predicted > 0.0:
+                self.calibrator.observe_time_ratio(realized / predicted,
+                                                   tiers=touched)
+                self.recalibrate()
         return stats
 
     @staticmethod

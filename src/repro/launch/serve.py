@@ -92,7 +92,7 @@ def run_continuous(args, cfg, params) -> None:
         policy=args.policy, num_blocks=args.num_blocks,
         fast_block_budget=args.fast_blocks, adaptive=args.adaptive,
         replan_every=args.replan_every, sample_rate=args.sample_rate,
-        predictive=args.predictive,
+        predictive=args.predictive, calibrate=args.calibrate,
         topology=args.topology, tenant=args.tenant,
         slo_p95_ttft_s=args.slo_p95_ttft,
         slo_p95_decode_s=args.slo_p95_decode)
@@ -122,6 +122,16 @@ def run_continuous(args, cfg, params) -> None:
           f"demoted={rep.tiering['demoted']} "
           f"hint_faults={rep.tiering['hint_faults']}")
     t = rep.telemetry
+    if t.get("audit.matched", 0.0) > 0:
+        acc = {k.split("prediction.accuracy.", 1)[1]: v
+               for k, v in sorted(t.items())
+               if k.startswith("prediction.accuracy.")}
+        print("audit: "
+              + f"joins={int(t['audit.matched'])} "
+              + " ".join(f"acc[{m}]={v:.2f}" for m, v in acc.items())
+              + (f" probes={int(t['calibration.probes'])} "
+                 f"obs={int(t['calibration.observations'])}"
+                 if args.calibrate else ""))
     print(f"telemetry: events={int(t['trace_events'])} "
           f"samples={int(t['profiling_samples'])} "
           f"overhead={t['profiling_overhead_s']*1e3:.2f} ms "
@@ -171,6 +181,13 @@ def _write_obs_artifacts(args, eng) -> None:
             fh.write(text)
         print(f"metrics: wrote {len(eng.registry.names())} series "
               f"(prometheus text) -> {args.metrics_out}")
+    if args.audit_out:
+        import json
+
+        with open(args.audit_out, "w") as fh:
+            json.dump(eng.audit_report(), fh, indent=2, sort_keys=True)
+        print(f"audit: wrote prediction residual report -> "
+              f"{args.audit_out}")
 
 
 def main(argv=None):
@@ -210,6 +227,12 @@ def main(argv=None):
                          "phase recurrence signature and pre-stage the "
                          "proven plan of a predicted next phase "
                          "(requires --adaptive)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="self-calibrating cost model: probe the "
+                         "pool's slow tier at startup and keep "
+                         "correcting planning bandwidths online from "
+                         "prediction-audit residuals (requires "
+                         "--adaptive)")
     ap.add_argument("--sample-rate",
                     type=_rate("--sample-rate"), default=1.0,
                     help="telemetry sampling rate (fraction of cache "
@@ -232,6 +255,10 @@ def main(argv=None):
     ap.add_argument("--metrics-out", default=None,
                     help="write the metrics registry as Prometheus "
                          "text exposition here (continuous only)")
+    ap.add_argument("--audit-out", default=None,
+                    help="write the prediction-audit residual report "
+                         "(JSON: per-model accuracy, p95 relative "
+                         "error, drift state) here (continuous only)")
     ap.add_argument("--slo-p95-ttft", type=float, default=None,
                     help="live SLO target: p95 TTFT threshold in "
                          "seconds (continuous only)")
@@ -245,6 +272,13 @@ def main(argv=None):
         ap.error("--predictive requires --adaptive (prediction "
                  "pre-stages the adaptive replanner's phase-cached "
                  "plans)")
+    if args.calibrate and not args.adaptive:
+        ap.error("--calibrate requires --adaptive (the corrections "
+                 "feed the adaptive replanner's cost model)")
+    if args.calibrate and args.scheduler != "continuous":
+        ap.error("--calibrate only takes effect with --scheduler "
+                 "continuous (the calibrator corrects the paged "
+                 "engine's planning tiers)")
     if args.tenant is not None and args.scheduler != "continuous":
         ap.error("--tenant only takes effect with --scheduler "
                  "continuous (the paged pool is what registers a "
@@ -254,6 +288,7 @@ def main(argv=None):
     if args.scheduler != "continuous":
         for flag, val in (("--trace-out", args.trace_out),
                           ("--metrics-out", args.metrics_out),
+                          ("--audit-out", args.audit_out),
                           ("--slo-p95-ttft", args.slo_p95_ttft),
                           ("--slo-p95-decode", args.slo_p95_decode)):
             if val is not None:

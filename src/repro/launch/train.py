@@ -55,11 +55,11 @@ class _TrainTelemetry:
 
     def __init__(self, params, opt, replan_every: int, sample_rate: float,
                  topology: str = None, tenant: str = "train",
-                 predictive: bool = False):
+                 predictive: bool = False, calibrate: bool = False):
         from ..core.migration import MigrationExecutor
         from ..core.tiers import tpu_v5e_tiers
         from ..pool import ResidencyLedger, TieredStateStore
-        from ..obs import MetricsRegistry, TraceRecorder
+        from ..obs import MetricsRegistry, PredictionLedger, TraceRecorder
         from ..telemetry import (AccessSampler, AccessTrace,
                                  AdaptiveReplanner, PhaseDetector,
                                  ReplanConfig, SamplerConfig)
@@ -102,6 +102,27 @@ class _TrainTelemetry:
         # fast residency the planner may pin but never has to move
         self.ledger.register(tenant, "params_bf16",
                              {fast: self.param_bytes})
+        # prediction audit plane: always on — move-time forecasts join
+        # wall-clock outcomes (the store's move_fn does real device_put)
+        self.audit = PredictionLedger(registry=self.registry,
+                                      tracer=self.tracer)
+        self.calibrator = None
+        if calibrate:
+            from ..core.tiered_array import TIER_TO_MEMORY_KIND
+            from ..obs import (CostModelCalibrator, TierProbe,
+                               measure_transfer_probes)
+            self.calibrator = CostModelCalibrator(tiers, graph=graph)
+            # probe each movable tier's memory kind with real transfers,
+            # then re-key the bandwidth observations by tier name (the
+            # fit wants tier-space probes; kinds may be shared)
+            tier_kind = {t: TIER_TO_MEMORY_KIND.get(t, "device")
+                         for t in tiers if t != fast}
+            by_kind = {p.tier: p for p in measure_transfer_probes(
+                kinds=sorted(set(tier_kind.values()) - {"device"}),
+                n_mb=16, iters=2)}
+            self.calibrator.fit_probes(
+                TierProbe(t, by_kind[k].bw_GBps)
+                for t, k in sorted(tier_kind.items()) if k in by_kind)
         self.replanner = AdaptiveReplanner(
             self.trace, tiers, fast,
             cfg=ReplanConfig(replan_every=self.replan_every,
@@ -110,8 +131,15 @@ class _TrainTelemetry:
                                        topology=graph),
             default_tier=slow,
             topology=graph, ledger=self.ledger, tenant=tenant,
-            tracer=self.tracer)
+            tracer=self.tracer, audit=self.audit,
+            calibrator=self.calibrator)
         self.replanner.executor.tracer = self.tracer
+        self.replanner.executor.audit = self.audit
+        self.replanner.executor.calibrator = self.calibrator
+        # the store's move_fn performs physical jax.device_put block
+        # re-placements, so executor wall times share the model's unit
+        self.replanner.executor.physical_moves = True
+        self.replanner.executor.recalibrate()
         self.nbytes = {
             "params_bf16": self.param_bytes,
             "grads_bf16": self.param_bytes,
@@ -136,6 +164,10 @@ class _TrainTelemetry:
             # refresh the mirror so an applied replan migrates the
             # *current* optimizer bytes, not the init-time ones
             self.store.update(self.OPT_OBJ, self._opt_fp32(opt))
+        if self.calibrator is not None \
+                and epoch % self.replan_every == 0:
+            # fold online residual corrections into the planning tiers
+            self.replanner.recalibrate()
         d = None
         if self.predictive and self.phases.signature is not None:
             # key plans by recurrence signature; pre-stage the proven
@@ -164,8 +196,9 @@ class _TrainTelemetry:
         """Ledger view of the optimizer state's tier residency."""
         return self.ledger.object_bytes(self.tenant, self.OPT_OBJ, tier)
 
-    def write_artifacts(self, trace_out=None, metrics_out=None) -> None:
-        """--trace-out / --metrics-out exports for a training run."""
+    def write_artifacts(self, trace_out=None, metrics_out=None,
+                        audit_out=None) -> None:
+        """--trace-out / --metrics-out / --audit-out exports."""
         if trace_out:
             if trace_out.endswith(".jsonl"):
                 n = self.tracer.to_jsonl(trace_out)
@@ -184,10 +217,23 @@ class _TrainTelemetry:
                  "phase_shifts": float(len(self.phases.shifts))},
                 prefix="train.telemetry")
             self.ledger.publish(self.registry)
+            self.registry.set_gauges(self.audit.summary())
+            if self.calibrator is not None:
+                self.calibrator.publish(self.registry)
             with open(metrics_out, "w") as fh:
                 fh.write(self.registry.to_prometheus_text())
             print(f"metrics: wrote {len(self.registry.names())} series "
                   f"(prometheus text) -> {metrics_out}")
+        if audit_out:
+            import json
+
+            payload = {"audit": self.audit.report()}
+            if self.calibrator is not None:
+                payload["calibration"] = self.calibrator.summary()
+            with open(audit_out, "w") as fh:
+                json.dump(payload, fh, indent=2, sort_keys=True)
+            print(f"audit: wrote prediction residual report -> "
+                  f"{audit_out}")
 
     def report(self) -> None:
         place = self.ledger.placement(self.tenant, self.OPT_OBJ)
@@ -206,6 +252,13 @@ class _TrainTelemetry:
         print(f"ledger[{self.tenant}]: opt_state moved="
               f"{self.ledger.counters.migrated_bytes/1e6:.2f} MB "
               f"placement: {placed}")
+        if self.audit.matched:
+            accs = " ".join(
+                f"acc[{m}]={self.audit.accuracy(m):.2f}"
+                for m in self.audit.models())
+            print(f"audit: joins={self.audit.matched} {accs}"
+                  + (f" calib_obs={self.calibrator.observations}"
+                     if self.calibrator is not None else ""))
 
 
 def main(argv=None):
@@ -250,6 +303,17 @@ def main(argv=None):
     ap.add_argument("--metrics-out", default=None,
                     help="write the metrics registry as Prometheus "
                          "text exposition here (requires --adaptive)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="self-calibrating cost model: probe the "
+                         "movable tiers' memory kinds with real "
+                         "transfers at startup and keep correcting "
+                         "planning bandwidths online from audited "
+                         "move-time residuals (requires --adaptive)")
+    ap.add_argument("--audit-out", default=None,
+                    help="write the prediction-audit residual report "
+                         "(JSON: per-model accuracy, p95 relative "
+                         "error, drift state) here (requires "
+                         "--adaptive)")
     from ..topology import TOPOLOGY_CHOICES
     ap.add_argument("--topology", default=None,
                     choices=list(TOPOLOGY_CHOICES),
@@ -264,7 +328,8 @@ def main(argv=None):
                           ("--sample-rate", args.sample_rate),
                           ("--tenant", args.tenant),
                           ("--trace-out", args.trace_out),
-                          ("--metrics-out", args.metrics_out)):
+                          ("--metrics-out", args.metrics_out),
+                          ("--audit-out", args.audit_out)):
             if val is not None:
                 ap.error(f"{flag} only takes effect with --adaptive "
                          f"(the telemetry sidecar is what consumes it)")
@@ -272,6 +337,9 @@ def main(argv=None):
             ap.error("--predictive requires --adaptive (prediction "
                      "pre-stages the adaptive replanner's phase-cached "
                      "plans)")
+        if args.calibrate:
+            ap.error("--calibrate requires --adaptive (the corrections "
+                     "feed the adaptive replanner's cost model)")
     if args.replan_every is None:
         args.replan_every = 10
     if args.sample_rate is None:
@@ -319,7 +387,8 @@ def main(argv=None):
         telem = (_TrainTelemetry(params, opt, args.replan_every,
                                  args.sample_rate, args.topology,
                                  tenant=args.tenant,
-                                 predictive=args.predictive)
+                                 predictive=args.predictive,
+                                 calibrate=args.calibrate)
                  if args.adaptive else None)
         for i in range(start, args.steps):
             b = next(it)
@@ -344,7 +413,8 @@ def main(argv=None):
                        metadata={"step": args.steps})
         if telem is not None:
             telem.report()
-            telem.write_artifacts(args.trace_out, args.metrics_out)
+            telem.write_artifacts(args.trace_out, args.metrics_out,
+                                  args.audit_out)
     print("done")
     return telem
 

@@ -13,7 +13,16 @@ the same treatment:
 - slo:      live rolling-window SLO monitors (TTFT / decode latency
             p50/p95/p99 vs thresholds) and the online burst-entry /
             steady lag-ratio monitor
+- audit:    prediction ledger joining every planner forecast (move
+            times, step costs, demand grants, phase predictions) with
+            its realized outcome; residual histograms + drift detectors
+- calibrate: cost-model calibrator fitting per-link latency/bandwidth
+            corrections from probes and applying online EWMA scales
+            from audit residuals
 """
+from .audit import DriftDetector, PredictionLedger, PredictionRecord
+from .calibrate import (CostModelCalibrator, LinkCorrection, TierProbe,
+                        measure_transfer_probes, probe_testbed)
 from .registry import (Counter, Gauge, Histogram, MetricsRegistry,
                        PercentileSketch)
 from .slo import LagRatioMonitor, SLOMonitor, SLOTarget
@@ -23,4 +32,7 @@ __all__ = [
     "TraceEvent", "TraceRecorder", "replan_chains",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "PercentileSketch",
     "LagRatioMonitor", "SLOMonitor", "SLOTarget",
+    "DriftDetector", "PredictionLedger", "PredictionRecord",
+    "CostModelCalibrator", "LinkCorrection", "TierProbe",
+    "measure_transfer_probes", "probe_testbed",
 ]

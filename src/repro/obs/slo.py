@@ -14,6 +14,7 @@ Two monitors:
 """
 from __future__ import annotations
 
+import math
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
@@ -166,11 +167,13 @@ class LagRatioMonitor:
             self._run = _PhaseRun(label=phase, occurrence=occ, pos=0)
         else:
             self._run.pos += 1
-        if time_s <= 0.0:
+        if not (time_s > 0.0):   # also rejects NaN, not just <= 0
             return
         if self._run.occurrence <= self.warmup_occurrences:
             return
         rate = float(work) / float(time_s)
+        if not math.isfinite(rate):
+            return
         if self._run.pos == 0:
             self.entry_rates.setdefault(phase, []).append(rate)
         elif self._run.pos >= self.steady_from:
@@ -195,12 +198,15 @@ class LagRatioMonitor:
             return None
         entry = self.entry_rates.get(phase)
         steady = self.steady_rates.get(phase)
+        # an empty or all-zero steady window yields no ratio, not a
+        # ZeroDivisionError or inf
         if not entry or not steady:
             return None
         steady_mean = sum(steady) / len(steady)
-        if steady_mean <= 0.0:
+        if steady_mean <= 0.0 or not math.isfinite(steady_mean):
             return None
-        return (sum(entry) / len(entry)) / steady_mean
+        result = (sum(entry) / len(entry)) / steady_mean
+        return result if math.isfinite(result) else None
 
     def summary(self) -> Dict[str, Any]:
         out: Dict[str, Any] = {"epochs": self.epochs}

@@ -146,7 +146,7 @@ class TierBudgetArbiter:
                  hot_threshold: float = 0.05,
                  predictive: bool = False,
                  signature_ttl_epochs: int = 256,
-                 tracer=None):
+                 tracer=None, audit=None):
         if objective not in OBJECTIVES:
             raise ValueError(f"unknown objective {objective!r}; "
                              f"choose from {OBJECTIVES}")
@@ -177,6 +177,10 @@ class TierBudgetArbiter:
         self._tables: Dict[str, PhaseDemandTable] = {}
         self.predicted_grants = 0     # demands served from the table
         self.tracer = tracer          # optional repro.obs.TraceRecorder
+        self.audit = audit            # optional obs.PredictionLedger
+        # last next-phase signature filed with the audit, per tenant —
+        # joined (hit/miss) when the next rebalance sees the actual one
+        self._predicted_sigs: Dict[str, Hashable] = {}
 
     # ------------------------------------------------------------------ #
     # demand measurement                                                 #
@@ -255,12 +259,26 @@ class TierBudgetArbiter:
             return self.demand(tenant)
         det.update()
         sig = det.signature
+        # phase-prediction audit: the previous rebalance predicted the
+        # signature now live — join it as a hit (1.0) or miss (0.0)
+        if self.audit is not None:
+            prev_sig = self._predicted_sigs.pop(tenant, None)
+            if prev_sig is not None and self.audit.has_pending(
+                    "arbiter.phase", tenant):
+                self.audit.realize("arbiter.phase", tenant,
+                                   1.0 if sig == prev_sig else 0.0)
         # attribute the measurement to the signature's own run so a
         # long window cannot smear the previous phase into this one
         window = self.window_epochs
         if window is not None and det.epochs_in_signature > 0:
             window = min(window, det.epochs_in_signature)
         measured = self.demand(tenant, window=window)
+        # demand audit: the grant predicted last rebalance meets the
+        # demand the ledger/trace actually observed since
+        if self.audit is not None and self.audit.has_pending(
+                "arbiter.demand", tenant):
+            self.audit.realize("arbiter.demand", tenant,
+                               float(measured.hot_bytes))
         table = self.table(tenant)
         if sig is not None:
             table.observe(sig, measured.hot_bytes,
@@ -269,6 +287,13 @@ class TierBudgetArbiter:
         hits = []
         for ahead in (1, 2):
             nxt = det.expected_signature(ahead)
+            if ahead == 1 and self.audit is not None and nxt is not None:
+                # file the next-phase prediction (value 1.0 = "will
+                # match"); joined hit/miss above next rebalance, so the
+                # model's accuracy ratio is its live hit rate
+                self.audit.predict("arbiter.phase", tenant, 1.0,
+                                   epoch=epoch, signature=str(nxt))
+                self._predicted_sigs[tenant] = nxt
             if nxt is None:
                 continue
             hit = table.lookup(nxt, epoch)
@@ -281,8 +306,11 @@ class TierBudgetArbiter:
         if hot == measured.hot_bytes and rate == measured.bytes_per_step:
             return measured
         self.predicted_grants += 1
-        return TenantDemand(tenant, measured.resident_bytes,
-                            min(int(hot), measured.resident_bytes),
+        granted = min(int(hot), measured.resident_bytes)
+        if self.audit is not None:
+            self.audit.predict("arbiter.demand", tenant, float(granted),
+                               epoch=epoch)
+        return TenantDemand(tenant, measured.resident_bytes, granted,
                             rate, measured.weight, source="predicted")
 
     # ------------------------------------------------------------------ #

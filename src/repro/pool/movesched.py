@@ -39,6 +39,7 @@ scheduler collects all tenants' ``PlacementDelta``s for one round and:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 from ..core.migration import (BlockMove, MigrationExecutor, MigrationStats,
@@ -105,8 +106,11 @@ class MoveScheduler:
         self.executor = executor
         self.ledger = ledger
         self.tracer = tracer           # optional repro.obs.TraceRecorder
+        self.audit = None              # optional obs.PredictionLedger
+        self.calibrator = None         # optional obs.CostModelCalibrator
         self.rounds: List[MoveRound] = []
         self._pending: List[_Submission] = []
+        self._rounds_audited = 0
 
     # ------------------------------------------------------------------ #
     @property
@@ -216,6 +220,18 @@ class MoveScheduler:
             sm.finish_s = finish
             makespan = max(makespan, finish)
 
+        # audit the fluid schedule's promised makespan against the wall
+        # time the batch really took — only when the clients perform
+        # physical transfers whose wall time matches the model's unit
+        audited = (self.audit is not None and scheduled
+                   and getattr(ex, "physical_moves", False))
+        if audited:
+            self._rounds_audited += 1
+            audit_key = self._rounds_audited
+            self.audit.predict("movesched.makespan", audit_key, makespan,
+                               epoch=epoch, moves=len(scheduled))
+            wall_t0 = time.perf_counter()
+
         # execute in scheduled order through each tenant's client
         done_by_sub: Dict[int, List[Tuple[BlockMove, int]]] = {}
         sub_of = {id(sm): sub for sub, sms in per_sub for sm in sms}
@@ -234,6 +250,17 @@ class MoveScheduler:
                     stats.demoted += 1
                 elif rank.get(m.dst, 0) < rank.get(m.src, 0):
                     stats.promoted += 1
+        if audited:
+            realized = time.perf_counter() - wall_t0
+            touched = sorted({t for sm in scheduled
+                              for t in (sm.move.src, sm.move.dst)})
+            self.audit.realize("movesched.makespan", audit_key, realized,
+                               resources=touched)
+            if self.calibrator is not None and makespan > 0.0:
+                self.calibrator.observe_time_ratio(realized / makespan,
+                                                   tiers=touched)
+                ex.recalibrate()
+
         for sub, _ in per_sub:
             if sub.on_done is not None:
                 sub.on_done(done_by_sub.get(sub.order, []))

@@ -190,6 +190,11 @@ class ServingConfig:
     trace_max_events: int = 65536
     slo_p95_ttft_s: Optional[float] = None
     slo_p95_decode_s: Optional[float] = None
+    # self-calibrating cost model (requires adaptive): fit the pool's
+    # slow-tier bandwidth from a real transfer probe at startup and
+    # keep correcting the planning tiers online from audit residuals,
+    # so replan verdicts and migration pricing run on measured numbers
+    calibrate: bool = False
 
 
 @dataclasses.dataclass
@@ -281,11 +286,17 @@ class ServingEngine:
         self._t0 = 0.0
         self._virtual_skew = 0.0
         self._step = 0
-        from ..obs import (LagRatioMonitor, MetricsRegistry, SLOMonitor,
-                           SLOTarget, TraceRecorder)
+        from ..obs import (LagRatioMonitor, MetricsRegistry,
+                           PredictionLedger, SLOMonitor, SLOTarget,
+                           TraceRecorder)
         self.tracer = TraceRecorder(clock=self._now,
                                     max_events=sv.trace_max_events)
         self.registry = MetricsRegistry()
+        # prediction audit plane: every control-plane forecast (step
+        # costs, demand grants, phase predictions, move times) joins
+        # its realized outcome here — always on, near-zero cost
+        self.audit = PredictionLedger(registry=self.registry,
+                                      tracer=self.tracer)
         slo_targets = []
         if sv.slo_p95_ttft_s is not None:
             slo_targets.append(SLOTarget("ttft", 0.95, sv.slo_p95_ttft_s))
@@ -319,6 +330,11 @@ class ServingEngine:
             raise ValueError("predictive serving requires adaptive=True "
                              "(prediction pre-stages the replanner's "
                              "phase-cached plans)")
+        if sv.calibrate and not sv.adaptive:
+            raise ValueError("calibrate requires adaptive=True (the "
+                             "corrections feed the replanner's cost "
+                             "model)")
+        self.calibrator = None
         if sv.adaptive:
             if tb is not None:
                 tiers = kind_tiers(self.pool,
@@ -326,18 +342,33 @@ class ServingEngine:
                                    slow_base=tb.tiers[tb.capacity_tier])
             else:
                 tiers = kind_tiers(self.pool)
+            if sv.calibrate:
+                from ..obs import (CostModelCalibrator,
+                                   measure_transfer_probes)
+                self.calibrator = CostModelCalibrator(tiers, graph=topo)
+                # startup fit: one real device->host transfer probe for
+                # the pool's slow kind (the tier names ARE jax memory
+                # kinds, so probes map directly); the fast (device)
+                # tier keeps the builder numbers
+                self.calibrator.fit_probes(measure_transfer_probes(
+                    kinds=(self.pool.slow_kind,), n_mb=16, iters=2))
+            executor = MigrationExecutor(tiers,
+                                         move_fn=self._move_seq_blocks,
+                                         topology=topo)
             self.replanner = AdaptiveReplanner(
                 self.trace, tiers, FAST_KIND,
                 cfg=ReplanConfig(replan_every=max(sv.replan_every, 1),
                                  window_epochs=max(sv.replan_every, 1)),
-                executor=MigrationExecutor(tiers,
-                                           move_fn=self._move_seq_blocks,
-                                           topology=topo),
+                executor=executor,
                 default_tier=self.pool.slow_kind,
                 topology=topo,
                 ledger=self.ledger, tenant=sv.tenant,
-                tracer=self.tracer)
+                tracer=self.tracer, audit=self.audit,
+                calibrator=self.calibrator)
             self.replanner.executor.tracer = self.tracer
+            self.replanner.executor.audit = self.audit
+            self.replanner.executor.calibrator = self.calibrator
+            self.replanner.executor.recalibrate()
         # predictive engines run the full control plane in-engine: a
         # predictive TierBudgetArbiter rebalances this tenant's
         # fast-tier grant each replan epoch (capacity = the configured
@@ -352,9 +383,11 @@ class ServingEngine:
                 self.ledger, FAST_KIND,
                 capacity_bytes=fast_budget * self.pool.block_nbytes(),
                 objective="fair_share", predictive=True,
-                tracer=self.tracer)
+                tracer=self.tracer, audit=self.audit)
             self.movesched = MoveScheduler(
                 self.replanner.executor, self.ledger, tracer=self.tracer)
+            self.movesched.audit = self.audit
+            self.movesched.calibrator = self.calibrator
             self.replanner.move_scheduler = self.movesched
         self._prefill = jax.jit(steps_mod.make_prefill_step(cfg))
         self._decode = jax.jit(functools.partial(_paged_decode, cfg, bt))
@@ -542,6 +575,10 @@ class ServingEngine:
             return
         if self.arbiter is not None:
             self.arbiter.rebalance(epoch=self._step)
+        if self.calibrator is not None:
+            # refresh the replanner's planning view from whatever online
+            # scale corrections the audit loop accumulated this epoch
+            self.replanner.recalibrate()
         bn = self.pool.block_nbytes()
         nbytes = {f"seq{sid}": len(tbl) * bn
                   for sid, tbl in self.pool.table.items() if tbl}
@@ -595,6 +632,18 @@ class ServingEngine:
             out["live_burst_entry_ratio"] = float(lag)
         out["trace_recorded_events"] = float(len(self.tracer))
         out["trace_dropped_events"] = float(self.tracer.dropped)
+        out.update(self.audit.summary())
+        if self.calibrator is not None:
+            out.update(self.calibrator.summary())
+        return out
+
+    def audit_report(self) -> Dict[str, object]:
+        """Structured prediction-audit artifact (the ``--audit-out``
+        payload): per-model residual stats plus, when calibration is
+        on, the fitted/online correction state."""
+        out: Dict[str, object] = {"audit": self.audit.report()}
+        if self.calibrator is not None:
+            out["calibration"] = self.calibrator.summary()
         return out
 
     # ------------------------------------------------------------------ #
@@ -655,6 +704,9 @@ class ServingEngine:
         self.registry.set_gauges(summary, prefix="serving.summary")
         self.registry.set_gauges(telemetry, prefix="serving.telemetry")
         self.ledger.publish(self.registry)
+        self.registry.set_gauges(self.audit.summary())
+        if self.calibrator is not None:
+            self.calibrator.publish(self.registry)
         return ServingReport(
             summary=summary,
             per_request=self.metrics.per_request_rows(),

@@ -111,10 +111,15 @@ class AdaptiveReplanner:
                  topology=None, origin: Optional[str] = None,
                  ledger: Optional[ResidencyLedger] = None,
                  tenant: str = "replan",
-                 move_scheduler=None, tracer=None):
+                 move_scheduler=None, tracer=None, audit=None,
+                 calibrator=None):
         self.trace = trace
         self.tracer = tracer           # optional repro.obs.TraceRecorder
+        self.audit = audit             # optional obs.PredictionLedger
+        self.calibrator = calibrator   # optional obs.CostModelCalibrator
         self.topology = topology
+        self.origin = origin
+        self._base_tiers = dict(tiers)
         # distance-adjusted view: path latency/bandwidth folded into the
         # tier descriptors, so every ordering and costing below honors
         # the hop topology (ROADMAP: NUMA-distance-aware replan)
@@ -159,6 +164,23 @@ class AdaptiveReplanner:
         # ledger still shows the pre-move residency, and a second
         # replan would re-derive and double-submit the same delta
         self._deferred_pending = False
+        self.recalibrate()
+
+    def recalibrate(self) -> None:
+        """Refresh the planning tier view from the calibrator.
+
+        Called once at construction and again by the owner whenever the
+        calibrator's corrections move (probe fit, online EWMA update),
+        so costing, tier ordering, and the executor's pricing all track
+        measured numbers.  No-op without a calibrator."""
+        if self.calibrator is None:
+            return
+        corrected, g = self.calibrator.calibrated_view(
+            self._base_tiers, self.topology)
+        self.tiers = (dict(g.effective_tiers(corrected, self.origin))
+                      if g is not None else dict(corrected))
+        self.tier_order = _tier_order(self.tiers)
+        self.executor.recalibrate()
 
     # ------------------------------------------------------------------ #
     def _trace_decision(self, d: ReplanDecision) -> None:
@@ -330,6 +352,13 @@ class AdaptiveReplanner:
         new_cost = plan_step_cost(objs, new_plan, self.tiers,
                                   cfg.total_streams,
                                   cfg.compute_time_s).step_s
+        # audit join: the previous costing pass predicted the step cost
+        # of whatever placement it adopted; `old_cost` is that same
+        # placement priced on the traffic actually measured since — the
+        # realized outcome of the prediction
+        if self.audit is not None and self.audit.has_pending(
+                "replan.step_cost", self.tenant):
+            self.audit.realize("replan.step_cost", self.tenant, old_cost)
         delta = self.executor.delta(old_shares, new_plan.shares, nbytes)
         mig_s = self.executor.cost_s(delta)
         d = ReplanDecision(epoch, False, "no_win", old_cost, new_cost,
@@ -356,6 +385,13 @@ class AdaptiveReplanner:
             d.reason = "cached_win" if cached is not None else "win"
             self._apply(d, delta, nbytes, new_plan, phase,
                         cache_proven=True)
+        # file the forward prediction: the step cost of the placement
+        # this decision leaves live (keyed by tenant — one pending
+        # prediction per tenant, joined at the next costing pass)
+        if self.audit is not None:
+            self.audit.predict("replan.step_cost", self.tenant,
+                               new_cost if d.applied else old_cost,
+                               epoch=epoch, applied=d.applied)
         self.decisions.append(d)
         self._trace_decision(d)
         return d

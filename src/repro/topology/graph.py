@@ -159,6 +159,29 @@ class TopologyGraph:
     def node_of(self, tier: str) -> Optional[str]:
         return self.tier_nodes.get(tier)
 
+    def rebuilt(self, link_overrides: Optional[
+            Mapping[LinkKey, Tuple[float, float]]] = None
+            ) -> "TopologyGraph":
+        """Copy of this graph with per-link ``(latency_ns, bw_GBps)``
+        overrides applied.
+
+        The calibration hook: ``CostModelCalibrator`` turns fitted link
+        corrections into a corrected graph without mutating the one the
+        rest of the control plane shares.  Tier mappings (including
+        aliases) carry over verbatim."""
+        g = TopologyGraph(self.name, origin=self.origin)
+        for node in self.nodes.values():
+            # tiers are copied wholesale below so aliased tier names
+            # (two tiers on one node) survive the rebuild
+            g.add_node(node.name, node.kind)
+        for link in self.links.values():
+            lat, bw = link.latency_ns, link.bw_GBps
+            if link_overrides and link.key in link_overrides:
+                lat, bw = link_overrides[link.key]
+            g.add_link(link.a, link.b, lat, bw, link.kind)
+        g.tier_nodes = dict(self.tier_nodes)
+        return g
+
     # ------------------------------------------------------------------ #
     # shortest paths (Dijkstra on latency; hop count breaks ties)        #
     # ------------------------------------------------------------------ #

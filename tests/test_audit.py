@@ -1,0 +1,392 @@
+"""Prediction audit plane + self-calibrating cost model: ledger joins,
+drift detection, probe fits, online correction, and the wiring into the
+migration/replan/arbiter stack."""
+import dataclasses
+import math
+
+import pytest
+
+from repro.core import GiB, paper_system
+from repro.core.costmodel import plan_step_cost
+from repro.core.policies import PlacementPlan
+from repro.core.migration import MigrationExecutor
+from repro.core.objects import DataObject
+from repro.obs import (CostModelCalibrator, DriftDetector, LagRatioMonitor,
+                       MetricsRegistry, PredictionLedger, TierProbe,
+                       TraceRecorder, probe_testbed)
+from repro.pool import ResidencyLedger, TierBudgetArbiter
+from repro.telemetry import (AccessTrace, AdaptiveReplanner, ReplanConfig)
+from repro.topology import two_socket_system
+
+G = GiB
+
+
+def _tiers(ldram_gib=64):
+    t = {k: v for k, v in paper_system("A").items()
+         if k in ("LDRAM", "CXL")}
+    t["LDRAM"] = dataclasses.replace(t["LDRAM"], capacity_GiB=ldram_gib)
+    return t
+
+
+# ===================================================================== #
+# DriftDetector                                                          #
+# ===================================================================== #
+def test_drift_detector_fires_once_on_crossing_and_latches():
+    det = DriftDetector(bound=0.5, window=8, min_samples=4)
+    for _ in range(3):
+        assert not det.observe(0.9)        # below min_samples: no fire
+    assert det.observe(0.9)                # 4th sample crosses -> fires
+    assert det.drifting and det.fires == 1
+    assert not det.observe(0.9)            # latched: no re-fire
+    assert det.fires == 1
+    for _ in range(8):                     # window drains below bound
+        det.observe(0.01)
+    assert not det.drifting
+    for _ in range(8):
+        det.observe(0.9)
+    assert det.drifting
+    assert det.fires == 2                  # re-crossing fires exactly once
+
+
+def test_drift_detector_p95_interpolates():
+    det = DriftDetector(window=64, min_samples=1)
+    for v in (0.0, 1.0):
+        det.observe(v)
+    assert det.p95() == pytest.approx(0.95)
+
+
+# ===================================================================== #
+# PredictionLedger: join semantics and edge cases                        #
+# ===================================================================== #
+def test_ledger_joins_signed_relative_error():
+    led = PredictionLedger(tolerance=0.25)
+    led.predict("m", "k", 10.0)
+    rec = led.realize("m", "k", 12.0)
+    assert rec.rel_err == pytest.approx(0.2)
+    led.predict("m", "k2", 10.0)
+    rec2 = led.realize("m", "k2", 7.0)
+    assert rec2.rel_err == pytest.approx(-0.3)
+    assert led.accuracy("m") == pytest.approx(0.5)   # one of two in tol
+    assert not led.has_pending("m", "k")
+    s = led.summary()
+    assert s["audit.matched"] == 2.0
+    assert s["prediction.accuracy.m"] == pytest.approx(0.5)
+
+
+def test_ledger_realized_without_prediction_is_unmatched():
+    led = PredictionLedger()
+    assert led.realize("m", "never-predicted", 1.0) is None
+    assert led.unmatched == 1 and led.matched == 0
+    assert led.models() == []              # no record was created
+    assert led.p95_abs_rel_err("m") is None
+    assert led.accuracy("m") is None
+
+
+def test_ledger_duplicate_join_key_overwrites_and_counts():
+    led = PredictionLedger()
+    led.predict("m", "k", 10.0)
+    led.predict("m", "k", 20.0)            # stale forecast replaced
+    assert led.duplicates == 1
+    assert led.pending_count("m") == 1
+    rec = led.realize("m", "k", 20.0)
+    assert rec.predicted == 20.0           # latest prediction wins
+    assert rec.rel_err == pytest.approx(0.0)
+
+
+def test_ledger_zero_predicted_value_yields_no_residual():
+    led = PredictionLedger()
+    led.predict("m", "k", 0.0)
+    rec = led.realize("m", "k", 5.0)
+    assert rec is not None and rec.rel_err is None
+    assert led.zero_predicted == 1 and led.matched == 1
+    # the join is recorded but produces no residual statistics
+    assert led.rel_errors("m") == []
+    assert led.accuracy("m") is None
+
+
+def test_ledger_pending_bound_evicts_oldest():
+    led = PredictionLedger(max_pending=2)
+    led.predict("m", 1, 1.0)
+    led.predict("m", 2, 1.0)
+    led.predict("m", 3, 1.0)
+    assert led.expired == 1
+    assert not led.has_pending("m", 1)     # oldest evicted unjoined
+    assert led.has_pending("m", 2) and led.has_pending("m", 3)
+
+
+def test_ledger_resource_attribution_is_occupancy_weighted():
+    led = PredictionLedger()
+    led.predict("m", "k", 10.0)
+    led.realize("m", "k", 15.0, resources={"upi": 3.0, "cxl": 1.0})
+    bias = led.resource_bias()
+    assert bias["upi"] == pytest.approx(0.5)
+    assert bias["cxl"] == pytest.approx(0.5)
+    # a second join touching only one resource shifts that mean only
+    led.predict("m", "k2", 10.0)
+    led.realize("m", "k2", 10.0, resources=["upi"])
+    assert led.resource_bias()["upi"] < 0.5
+    assert led.resource_bias()["cxl"] == pytest.approx(0.5)
+
+
+def test_ledger_publishes_gauges_and_trace_events():
+    reg = MetricsRegistry()
+    tr = TraceRecorder()
+    led = PredictionLedger(registry=reg, tracer=tr)
+    led.predict("move", "a", 1.0)
+    led.realize("move", "a", 1.1)
+    led.realize("move", "ghost", 1.0)      # unmatched
+    assert "prediction.accuracy.move" in reg.names()
+    assert "prediction.residual.move" in reg.names()
+    audits = [e for e in tr.events if e.name == "prediction.audit"]
+    assert len(audits) == 2
+    assert audits[0].args["matched"] is True
+    assert audits[1].args["matched"] is False
+
+
+def test_ledger_drift_fires_into_counter_and_report():
+    led = PredictionLedger(drift_bound=0.3, drift_window=8,
+                           drift_min_samples=4)
+    for i in range(6):
+        led.predict("m", i, 10.0)
+        led.realize("m", i, 16.0)          # 60% error every time
+    rep = led.report()
+    assert rep["models"]["m"]["drifting"] is True
+    assert rep["models"]["m"]["drift_fires"] == 1
+    assert led.drifting() == ["m"]
+
+
+# ===================================================================== #
+# CostModelCalibrator: startup fit                                       #
+# ===================================================================== #
+def _perturbed_testbed():
+    """Builder-belief (model) vs drifted-truth (true) tier/graph pairs."""
+    tb = two_socket_system("A")
+    model_tiers = {k: v for k, v in tb.tiers.items() if k != "NVMe"}
+    overrides = {}
+    for key, ln in tb.graph.links.items():
+        if ln.kind == "cxl":
+            overrides[key] = (ln.latency_ns * 2.0, ln.bw_GBps * 0.5)
+        elif ln.kind == "upi":
+            overrides[key] = (ln.latency_ns * 2.0, ln.bw_GBps)
+    true_graph = tb.graph.rebuilt(overrides)
+    true_tiers = dict(model_tiers)
+    true_tiers["CXL"] = dataclasses.replace(
+        true_tiers["CXL"],
+        peak_bw_GBps=true_tiers["CXL"].peak_bw_GBps * 0.5)
+    return model_tiers, tb.graph, true_tiers, true_graph
+
+
+def test_fit_recovers_perturbed_testbed_exactly():
+    model_tiers, model_graph, true_tiers, true_graph = _perturbed_testbed()
+    calib = CostModelCalibrator(model_tiers, graph=model_graph)
+    n = calib.fit_probes(probe_testbed(true_graph, true_tiers,
+                                       origin="socket0"))
+    assert n == len(model_tiers) and calib.fitted
+    want = true_graph.effective_tiers(true_tiers, "socket0")
+    got = calib.calibrated_tiers(origin="socket0")
+    for name in want:
+        assert got[name].peak_bw_GBps == pytest.approx(
+            want[name].peak_bw_GBps, rel=1e-6), name
+        assert (got[name].unloaded_latency_ns + got[name].hop_latency_ns
+                ) == pytest.approx(
+            want[name].unloaded_latency_ns + want[name].hop_latency_ns,
+            rel=1e-6), name
+
+
+def test_fit_without_graph_corrects_descriptor():
+    tiers = _tiers()
+    calib = CostModelCalibrator(tiers)
+    calib.fit_probes([TierProbe("CXL", bw_GBps=19.2, latency_ns=371.0)])
+    got = calib.calibrated_tiers()
+    assert got["CXL"].peak_bw_GBps == pytest.approx(19.2)
+    assert got["CXL"].unloaded_latency_ns == pytest.approx(371.0)
+    assert got["LDRAM"] is tiers["LDRAM"]  # unprobed tier untouched
+
+
+def test_fit_ignores_unknown_tiers_and_bad_probes():
+    calib = CostModelCalibrator(_tiers())
+    assert calib.fit_probes([TierProbe("NOPE", 10.0),
+                             TierProbe("CXL", 0.0)]) == 0
+    assert not calib.fitted
+
+
+# ===================================================================== #
+# CostModelCalibrator: online loop                                       #
+# ===================================================================== #
+def test_online_ratio_converges_to_true_bandwidth():
+    tiers = _tiers()
+    calib = CostModelCalibrator(tiers, ewma_alpha=0.5)
+    # truth: CXL at half speed -> realized/predicted ratio starts at 2
+    for _ in range(40):
+        view = calib.calibrated_tiers()
+        predicted_bw = view["CXL"].peak_bw_GBps
+        true_bw = tiers["CXL"].peak_bw_GBps / 2.0
+        calib.observe_time_ratio(predicted_bw / true_bw, tiers=["CXL"])
+    view = calib.calibrated_tiers()
+    assert view["CXL"].peak_bw_GBps == pytest.approx(
+        tiers["CXL"].peak_bw_GBps / 2.0, rel=0.02)
+    assert view["LDRAM"].peak_bw_GBps == tiers["LDRAM"].peak_bw_GBps
+
+
+def test_online_ratio_rejects_degenerate_inputs_and_clamps():
+    calib = CostModelCalibrator(_tiers(), min_scale=0.1, max_scale=2.0)
+    for bad in (0.0, -1.0, float("nan"), float("inf")):
+        calib.observe_time_ratio(bad, tiers=["CXL"])
+    assert calib.observations == 0
+    # unknown tier attribution falls back to the global bucket
+    calib.observe_time_ratio(2.0, tiers=["NOPE"])
+    assert "*" in calib.online_scale and "NOPE" not in calib.online_scale
+    for _ in range(200):
+        calib.observe_time_ratio(1000.0, tiers=["CXL"])
+    assert calib.online_scale["CXL"] >= 0.1  # clamped, not collapsed
+
+
+# ===================================================================== #
+# Calibrated views threaded through the planners                         #
+# ===================================================================== #
+def test_plan_step_cost_with_calibrator_prices_measured_numbers():
+    model_tiers, model_graph, true_tiers, true_graph = _perturbed_testbed()
+    calib = CostModelCalibrator(model_tiers, graph=model_graph)
+    calib.fit_probes(probe_testbed(true_graph, true_tiers,
+                                   origin="socket0"))
+    objs = [DataObject("a", 32 * G, read_bytes_per_step=32 * G)]
+    # fixed plan touching the mis-modeled CXL card, so the true price
+    # genuinely differs from the builder-default one
+    plan = PlacementPlan(shares={"a": [("LDRAM", 0.6), ("CXL", 0.4)]},
+                         policy="fixed",
+                         tier_bytes={"LDRAM": int(0.6 * 32 * G),
+                                     "CXL": int(0.4 * 32 * G)})
+    truth = plan_step_cost(objs, plan, true_tiers, topology=true_graph,
+                           origin="socket0").phased_s
+    calibrated = plan_step_cost(objs, plan, model_tiers,
+                                topology=model_graph, origin="socket0",
+                                calibrator=calib).phased_s
+    uncal = plan_step_cost(objs, plan, model_tiers, topology=model_graph,
+                           origin="socket0").phased_s
+    assert calibrated == pytest.approx(truth, rel=1e-6)
+    assert uncal != pytest.approx(truth, rel=0.01)
+
+
+def test_executor_recalibrate_reprices_moves():
+    model_tiers, model_graph, true_tiers, true_graph = _perturbed_testbed()
+    calib = CostModelCalibrator(model_tiers, graph=model_graph)
+    calib.fit_probes(probe_testbed(true_graph, true_tiers,
+                                   origin="socket0"))
+    ex = MigrationExecutor(model_tiers, topology=model_graph)
+    old = {"a": [("LDRAM", 1.0)]}
+    new = {"a": [("CXL", 1.0)]}
+    nb = {"a": 8 * G}
+    before = ex.cost_s(ex.delta(old, new, nb))
+    ex.calibrator = calib
+    ex.recalibrate()
+    after = ex.cost_s(ex.delta(old, new, nb))
+    ex_true = MigrationExecutor(true_tiers, topology=true_graph)
+    truth = ex_true.cost_s(ex_true.delta(old, new, nb))
+    # the probe fit splits error between link and descriptor, so path
+    # pricing is close to truth rather than bit-exact — but it must be
+    # strictly better than the builder defaults and within a few percent
+    assert after == pytest.approx(truth, rel=0.05)
+    assert abs(after - truth) < abs(before - truth)
+    assert before < after                   # slow card now priced slower
+
+
+def test_executor_audits_only_physical_moves():
+    tiers = _tiers()
+    led = PredictionLedger()
+    ex = MigrationExecutor(tiers, move_fn=lambda o, s, d, n: n)
+    ex.audit = led
+    d = ex.delta({"a": [("LDRAM", 1.0)]}, {"a": [("CXL", 1.0)]},
+                 {"a": G})
+    ex.execute(d)
+    assert led.predictions == 0             # bookkeeping moves: no audit
+    ex.physical_moves = True
+    ex.execute(d)
+    assert led.predictions == 1 and led.matched == 1
+    rec = led.records("migration.move_time")[0]
+    assert rec.realized is not None and rec.realized >= 0.0
+
+
+def test_replanner_audits_step_cost_predictions():
+    tiers = _tiers()
+    tr = AccessTrace()
+    led = PredictionLedger()
+    for _ in range(3):
+        tr.record("u", read_bytes=80 * G, write_bytes=40 * G)
+        tr.advance_epoch()
+    rp = AdaptiveReplanner(tr, tiers, "LDRAM",
+                           cfg=ReplanConfig(replan_every=1),
+                           tenant="t0", audit=led)
+    nb = {"u": 40 * G}
+    rp.maybe_replan(1, nb)                  # initial adoption: no costs
+    rp.maybe_replan(2, nb)                  # files the first prediction
+    assert led.pending_count("replan.step_cost") == 1
+    tr.record("u", read_bytes=80 * G, write_bytes=40 * G)
+    tr.advance_epoch()
+    rp.maybe_replan(3, nb)                  # joins it against old_cost
+    assert led.matched == 1
+    errs = led.rel_errors("replan.step_cost")
+    assert len(errs) == 1 and abs(errs[0]) < 0.5
+
+
+def test_arbiter_audits_demand_and_phase_predictions():
+    tiers = _tiers()
+    led = ResidencyLedger(tiers, capacity_bytes={"LDRAM": 64 * G})
+    tr = AccessTrace()
+    led.register_tenant("serve", trace=tr)
+    led.register("serve", "kv", {"CXL": 48 * G})
+    audit = PredictionLedger()
+    arb = TierBudgetArbiter(led, "LDRAM", objective="fair_share",
+                            window_epochs=1, predictive=True,
+                            audit=audit)
+
+    def emit(burst):
+        if burst:
+            tr.record("kv", read_bytes=120 * G, write_bytes=2 * G)
+        else:
+            tr.record("kv", read_bytes=1 * G)
+        tr.advance_epoch()
+
+    epoch = 0
+    for _ in range(3):                      # learn the 2/6 cycle
+        for i in range(8):
+            epoch += 1
+            arb.rebalance(epoch)
+            emit(i < 2)
+    assert audit.matched > 0
+    models = set(audit.models())
+    assert "arbiter.demand" in models
+    assert "arbiter.phase" in models
+    acc = audit.accuracy("arbiter.phase", tolerance=0.0)
+    assert acc is not None and acc > 0.5    # learned cycle mostly hits
+
+
+# ===================================================================== #
+# LagRatioMonitor guards (satellite): empty / zero steady window         #
+# ===================================================================== #
+def test_lag_ratio_empty_and_zero_windows_return_none():
+    mon = LagRatioMonitor(warmup_occurrences=0, steady_from=1)
+    assert mon.ratio() is None              # nothing observed at all
+    # zero/neg/NaN epoch times are rejected, never divided by
+    mon.observe_epoch("p", 100.0, 0.0)
+    mon.observe_epoch("p", 100.0, -1.0)
+    mon.observe_epoch("p", 100.0, float("nan"))
+    assert mon.ratio() is None
+    # entry sample exists but the steady window stays empty
+    mon2 = LagRatioMonitor(warmup_occurrences=0, steady_from=5)
+    mon2.observe_epoch("p", 100.0, 1.0)
+    mon2.observe_epoch("p", 100.0, 1.0)
+    assert mon2.ratio("p") is None
+    # an all-zero steady window yields None, not inf
+    mon3 = LagRatioMonitor(warmup_occurrences=0, steady_from=1)
+    mon3.observe_epoch("p", 100.0, 1.0)    # entry
+    mon3.observe_epoch("p", 0.0, 1.0)      # steady rate 0
+    assert mon3.ratio("p") is None
+
+
+def test_lag_ratio_still_computes_on_good_data():
+    mon = LagRatioMonitor(warmup_occurrences=0, steady_from=1)
+    for _ in range(2):
+        mon.observe_epoch("burst", 50.0, 1.0)   # entry epochs
+        mon.observe_epoch("burst", 100.0, 1.0)  # steady epochs
+        mon.observe_epoch("lull", 1.0, 1.0)     # phase break
+    assert mon.ratio("burst") == pytest.approx(0.5)
