@@ -47,6 +47,10 @@ HEADLINE = {
         "audited move-time predictions land within tolerance",
     "prediction.accuracy.phase":
         "phase-signature predictions hit on recurring workloads",
+    "qos.victim_tail_ratio":
+        "predictive QoS preserves the victim tail the flat floor blows",
+    "prediction.accuracy.violation":
+        "audited tail-violation forecasts land within tolerance",
 }
 
 

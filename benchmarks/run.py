@@ -16,6 +16,8 @@ Prints ``name,value,derived`` CSV.  Modules:
                          arbitration vs static splits and free-for-all
   calibration_bench      prediction audit + self-calibrating cost model
                          on a perturbed testbed vs the builder defaults
+  noisy_neighbor_bench   interference-class QoS: blame attribution +
+                         violation-predictive admission vs the flat floor
   kernel_bench           Pallas kernel microbenches
   roofline               per-cell roofline from the dry-run artifacts
 
@@ -62,6 +64,7 @@ MODULES = [
     "topology_bench",
     "multi_tenant_bench",
     "calibration_bench",
+    "noisy_neighbor_bench",
     "kernel_bench",
     "roofline",
 ]

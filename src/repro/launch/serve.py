@@ -95,7 +95,9 @@ def run_continuous(args, cfg, params) -> None:
         predictive=args.predictive, calibrate=args.calibrate,
         topology=args.topology, tenant=args.tenant,
         slo_p95_ttft_s=args.slo_p95_ttft,
-        slo_p95_decode_s=args.slo_p95_decode)
+        slo_p95_decode_s=args.slo_p95_decode,
+        slo_p99_decode_s=args.slo_p99_decode,
+        qos=args.qos)
     eng = ServingEngine(cfg, params, sv)
     rs = np.random.RandomState(0)
     lens = [args.prompt_len, max(args.prompt_len // 2, 4)]
@@ -147,11 +149,21 @@ def run_continuous(args, cfg, params) -> None:
              if args.predictive else ""))
     if rep.slo.get("targets"):
         for tgt in rep.slo["targets"]:
+            rate = tgt.get("violation_rate")
             print(f"slo: {tgt['metric']} "
                   f"p{int(tgt['quantile']*100)} <= "
                   f"{tgt['threshold_s']*1e3:.1f} ms -> "
                   f"{tgt['violations']} violation(s) over "
-                  f"{rep.slo['checks']} check(s)")
+                  f"{rep.slo['checks']} check(s)"
+                  + (f" rate={rate:.2f}" if rate is not None else ""))
+    if args.qos:
+        blame = rep.slo.get("blame", {})
+        print(f"qos: deferrals={int(t['qos_deferrals'])} "
+              f"slo_preemptions={int(t['slo_preemptions'])} "
+              f"excursions={blame.get('total_excursions', 0)}"
+              + (f" antagonist={blame['top_antagonist']} "
+                 f"link={blame['top_link']}"
+                 if blame.get("top_antagonist") else ""))
     for rid, row in rep.per_request:
         # undefined latencies are omitted from the row, not -1.0
         ttft = row.get("ttft_s")
@@ -266,6 +278,17 @@ def main(argv=None):
                     help="live SLO target: p95 inter-token decode "
                          "latency threshold in seconds "
                          "(continuous only)")
+    ap.add_argument("--slo-p99-decode", type=float, default=None,
+                    help="live SLO target: p99 inter-token decode "
+                         "latency threshold in seconds "
+                         "(continuous only)")
+    ap.add_argument("--qos", action="store_true",
+                    help="interference-class QoS plane: class-tagged "
+                         "flow attribution (blame ledger naming the "
+                         "noisy neighbor per tail excursion) and "
+                         "violation-predictive admission in place of "
+                         "the flat link-efficiency floor (requires "
+                         "--topology and a decode SLO)")
     args = ap.parse_args(argv)
 
     if args.predictive and not args.adaptive:
@@ -290,11 +313,24 @@ def main(argv=None):
                           ("--metrics-out", args.metrics_out),
                           ("--audit-out", args.audit_out),
                           ("--slo-p95-ttft", args.slo_p95_ttft),
-                          ("--slo-p95-decode", args.slo_p95_decode)):
+                          ("--slo-p95-decode", args.slo_p95_decode),
+                          ("--slo-p99-decode", args.slo_p99_decode)):
             if val is not None:
                 ap.error(f"{flag} only takes effect with --scheduler "
                          "continuous (the observability plane "
                          "instruments the paged engine)")
+    if args.qos:
+        if args.scheduler != "continuous":
+            ap.error("--qos only takes effect with --scheduler "
+                     "continuous (the QoS plane instruments the paged "
+                     "engine's admission path)")
+        if not args.topology:
+            ap.error("--qos requires --topology (blame attribution "
+                     "joins violations to topology links)")
+        if args.slo_p99_decode is None and args.slo_p95_decode is None:
+            ap.error("--qos requires a decode SLO (--slo-p99-decode "
+                     "or --slo-p95-decode) to predict violations "
+                     "against")
 
     if args.topology:
         if args.scheduler != "continuous":

@@ -106,6 +106,18 @@ class _TrainTelemetry:
         # wall-clock outcomes (the store's move_fn does real device_put)
         self.audit = PredictionLedger(registry=self.registry,
                                       tracer=self.tracer)
+        # QoS flow attribution: with a topology, each step's optimizer
+        # sweep is published as a write-class flow (fp32 state streamed
+        # from its resident tier to the fast tier), so a co-located
+        # serving tenant's blame plane can name this trainer as the
+        # antagonist — and qos.offered.* gauges land in --metrics-out
+        self.blame = None
+        self.graph = graph
+        if graph is not None:
+            from ..obs import BlameLedger
+            self.blame = BlameLedger(
+                graph, registry=self.registry, tracer=self.tracer,
+                clock=lambda: float(self._epoch))
         self.calibrator = None
         if calibrate:
             from ..core.tiered_array import TIER_TO_MEMORY_KIND
@@ -160,6 +172,8 @@ class _TrainTelemetry:
         self.tracer.event("phase.update", cat="phase", epoch=epoch,
                           label=str(self.phases.label),
                           shifts=len(self.phases.shifts))
+        if self.blame is not None:
+            self._publish_qos_flows(epoch)
         if opt is not None and epoch % self.replan_every == 0:
             # refresh the mirror so an applied replan migrates the
             # *current* optimizer bytes, not the init-time ones
@@ -191,6 +205,25 @@ class _TrainTelemetry:
                   f"new={d.new_step_s*1e3:.1f} ms "
                   f"migration={d.migration_s*1e3:.1f} ms "
                   f"moved={d.moved_bytes/1e6:.2f} MB")
+
+    def _publish_qos_flows(self, epoch: int) -> None:
+        """Publish this step's optimizer-sweep traffic into the blame
+        book: the fp32 state resident off the fast tier streams across
+        the topology every step (normalized to a 1 s step period, so
+        offered GB/s == GB moved per step)."""
+        from ..topology import Flow
+        dst = self.graph.node_of(self.fast)
+        if dst is None:
+            return
+        flows = []
+        place = self.ledger.placement(self.tenant, self.OPT_OBJ)
+        for tier, nbytes in sorted(place.items()):
+            src = self.graph.node_of(tier)
+            if src is None or src == dst or nbytes <= 0:
+                continue
+            flows.append(Flow(src, dst, nbytes / 1e9, cls="write",
+                              tenant=self.tenant))
+        self.blame.publish_flows(self.tenant, flows, now=float(epoch))
 
     def opt_bytes_on(self, tier: str) -> int:
         """Ledger view of the optimizer state's tier residency."""

@@ -19,20 +19,29 @@ the same treatment:
 - calibrate: cost-model calibrator fitting per-link latency/bandwidth
             corrections from probes and applying online EWMA scales
             from audit residuals
+- qos:      interference-class QoS plane: per-tenant flow attribution
+            (BlameLedger joining SLO violations to bottleneck links and
+            noisy neighbors) and violation-predictive admission
+            (ViolationPredictor priced on the class-aware contention
+            model, audited as the ``qos.violation`` model)
 """
 from .audit import DriftDetector, PredictionLedger, PredictionRecord
 from .calibrate import (CostModelCalibrator, LinkCorrection, TierProbe,
                         measure_transfer_probes, probe_testbed)
+from .qos import (BlameLedger, Excursion, QOS_VIOLATION_MODEL,
+                  QOS_VIOLATION_TOLERANCE, ViolationPredictor)
 from .registry import (Counter, Gauge, Histogram, MetricsRegistry,
                        PercentileSketch)
 from .slo import LagRatioMonitor, SLOMonitor, SLOTarget
-from .trace import replan_chains, TraceEvent, TraceRecorder
+from .trace import qos_chains, replan_chains, TraceEvent, TraceRecorder
 
 __all__ = [
-    "TraceEvent", "TraceRecorder", "replan_chains",
+    "TraceEvent", "TraceRecorder", "qos_chains", "replan_chains",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "PercentileSketch",
     "LagRatioMonitor", "SLOMonitor", "SLOTarget",
     "DriftDetector", "PredictionLedger", "PredictionRecord",
     "CostModelCalibrator", "LinkCorrection", "TierProbe",
     "measure_transfer_probes", "probe_testbed",
+    "BlameLedger", "Excursion", "QOS_VIOLATION_MODEL",
+    "QOS_VIOLATION_TOLERANCE", "ViolationPredictor",
 ]

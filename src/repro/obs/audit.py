@@ -123,6 +123,7 @@ class PredictionLedger:
 
     def __init__(self, registry=None, tracer=None,
                  tolerance: float = 0.25,
+                 model_tolerance: Optional[Mapping[str, float]] = None,
                  drift_bound: float = 0.5, drift_window: int = 64,
                  drift_min_samples: int = 8,
                  max_pending: int = 4096, max_records: int = 4096):
@@ -131,6 +132,13 @@ class PredictionLedger:
         self.registry = registry
         self.tracer = tracer
         self.tolerance = float(tolerance)
+        # per-model accuracy tolerances: a tail-latency predictor is
+        # judged looser than a byte-counting move-time model
+        self.model_tolerance: Dict[str, float] = {
+            str(m): float(t) for m, t in (model_tolerance or {}).items()}
+        for t in self.model_tolerance.values():
+            if not t > 0.0:
+                raise ValueError("model tolerance must be positive")
         self._drift_bound = float(drift_bound)
         self._drift_window = int(drift_window)
         self._drift_min = int(drift_min_samples)
@@ -219,10 +227,11 @@ class PredictionLedger:
                          "predictions").observe(abs(rec.rel_err))
                 acc = self.accuracy(model)
                 if acc is not None:
+                    tol = self.model_tolerance.get(model, self.tolerance)
                     self.registry.gauge(
                         f"prediction.accuracy.{model}",
                         help=f"fraction of joins within "
-                             f"{self.tolerance:.0%} relative error"
+                             f"{tol:.0%} relative error"
                     ).set(acc)
             det = self._drift.get(model)
             if det is None:
@@ -301,11 +310,20 @@ class PredictionLedger:
         frac = rank - lo
         return errs[lo] * (1.0 - frac) + errs[hi] * frac
 
+    def set_model_tolerance(self, model: str, tolerance: float) -> None:
+        if not tolerance > 0.0:
+            raise ValueError("model tolerance must be positive")
+        self.model_tolerance[str(model)] = float(tolerance)
+
     def accuracy(self, model: str,
                  tolerance: Optional[float] = None) -> Optional[float]:
         """Fraction of joined predictions within ``tolerance`` relative
-        error (None before the first joinable residual)."""
-        tol = self.tolerance if tolerance is None else float(tolerance)
+        error (None before the first joinable residual).  The tolerance
+        defaults to the model's registered override, then the global."""
+        if tolerance is None:
+            tol = self.model_tolerance.get(str(model), self.tolerance)
+        else:
+            tol = float(tolerance)
         errs = self.rel_errors(model)
         if not errs:
             return None
@@ -364,6 +382,7 @@ class PredictionLedger:
             }
         return {
             "tolerance": self.tolerance,
+            "model_tolerance": dict(self.model_tolerance),
             "drift_bound": self._drift_bound,
             "totals": {
                 "predictions": self.predictions,

@@ -148,6 +148,9 @@ class CostModelCalibrator:
         self._link_owner: Dict[Tuple[str, str], str] = {}
         # online EWMA bandwidth scales; "*" is the unattributed bucket
         self.online_scale: Dict[Hashable, float] = {}
+        # online interference-pair scales keyed
+        # (link_kind, victim_cls, aggressor_cls)
+        self.interference_scale: Dict[Tuple[str, str, str], float] = {}
         self.fitted = False
         self.probes_fit = 0
         self.observations = 0
@@ -274,6 +277,39 @@ class CostModelCalibrator:
         return self._clamp(self.online_scale.get(tier, 1.0)
                            * self.online_scale.get("*", 1.0))
 
+    def observe_interference(self, link_kind: str, victim_cls: str,
+                             aggressor_cls: str, ratio: float,
+                             alpha: Optional[float] = None) -> None:
+        """Feed one realized/predicted slowdown ratio for a victim/
+        aggressor class pair on a link kind.
+
+        ``ratio > 1`` means contention hit harder than the interference
+        matrix modeled: the pair's scale grows toward ``s * ratio`` so
+        the class-aware ``contended_flows`` prices the pair hotter next
+        time.  Scales are clamped like bandwidth scales."""
+        r = float(ratio)
+        if not (r > 0.0) or r != r or r == float("inf"):
+            return
+        a = self.alpha if alpha is None else float(alpha)
+        key = (str(link_kind), str(victim_cls), str(aggressor_cls))
+        s = self.interference_scale.get(key, 1.0)
+        self.interference_scale[key] = self._clamp(
+            (1.0 - a) * s + a * (s * r))
+        self.observations += 1
+
+    def calibrated_interference(self, base=None):
+        """Interference matrix with the online pair scales applied on
+        top of ``base`` (default: the graph's matrix, or the stock
+        defaults)."""
+        from ..topology.graph import InterferenceMatrix
+
+        if base is None:
+            base = (self.graph.interference if self.graph is not None
+                    else InterferenceMatrix())
+        if not self.interference_scale:
+            return base
+        return base.with_pair_scales(dict(self.interference_scale))
+
     # ------------------------------------------------------------------ #
     # calibrated views                                                   #
     # ------------------------------------------------------------------ #
@@ -301,7 +337,10 @@ class CostModelCalibrator:
             overrides[key] = (
                 max(link.latency_ns + lat_add, 0.0),
                 max(link.bw_GBps * scale, 1e-9))
-        return self.graph.rebuilt(overrides)
+        g = self.graph.rebuilt(overrides)
+        if self.interference_scale:
+            g.interference = self.calibrated_interference()
+        return g
 
     def _corrected_descriptor(self, name: str,
                               tier: MemoryTier) -> MemoryTier:
@@ -364,6 +403,8 @@ class CostModelCalibrator:
         for key, s in sorted(self.online_scale.items(),
                              key=lambda kv: str(kv[0])):
             out[f"calibration.online.{key}.bw_scale"] = s
+        for (kind, vc, ac), s in sorted(self.interference_scale.items()):
+            out[f"calibration.interference.{kind}.{vc}-{ac}.scale"] = s
         return out
 
     def publish(self, registry) -> None:

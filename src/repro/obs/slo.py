@@ -51,16 +51,39 @@ class SLOMonitor:
     def __init__(self, targets: Optional[List[SLOTarget]] = None,
                  window: int = 256,
                  clock: Optional[Callable[[], float]] = None,
-                 registry=None, tracer=None) -> None:
+                 registry=None, tracer=None,
+                 min_samples: int = 4) -> None:
         self.targets = list(targets or [])
         self.window = int(window)
         self.clock = clock if clock is not None else (lambda: 0.0)
         self.registry = registry
         self.tracer = tracer
+        # warmup: a target's window must hold at least this many samples
+        # before it can violate — a 2-sample "p99" is an arrival
+        # artifact, not a tail
+        self.min_samples = max(int(min_samples), 1)
         self._streams: Dict[str, Deque[float]] = {}
         self.violations: Dict[str, int] = {t.key: 0 for t in self.targets}
+        # checks where the target's window was past warmup — the
+        # denominator of its violation rate
+        self.eligible_checks: Dict[str, int] = {t.key: 0
+                                                for t in self.targets}
         self.checks = 0
         self.last_quantiles: Dict[str, float] = {}
+        # violation hooks: fn(target, observed_value, now) — the QoS
+        # blame plane joins each firing to its bottleneck link here
+        self._hooks: List[Callable[[SLOTarget, float, float], None]] = []
+
+    def add_violation_hook(
+            self, fn: Callable[[SLOTarget, float, float], None]) -> None:
+        self._hooks.append(fn)
+
+    def violation_rate(self, key: str) -> Optional[float]:
+        """Violations per eligible (post-warmup) check for one target."""
+        eligible = self.eligible_checks.get(key, 0)
+        if eligible <= 0:
+            return None
+        return self.violations.get(key, 0) / eligible
 
     def observe(self, metric: str, value: float,
                 now: Optional[float] = None) -> None:
@@ -94,6 +117,10 @@ class SLOMonitor:
             value = self.last_quantiles.get(t.key)
             if value is None:
                 continue
+            stream = self._streams.get(t.metric)
+            if stream is None or len(stream) < self.min_samples:
+                continue               # warmup: too few samples to judge
+            self.eligible_checks[t.key] += 1
             if value > t.threshold_s:
                 self.violations[t.key] += 1
                 violated.append((t, value))
@@ -106,6 +133,14 @@ class SLOMonitor:
                     self.registry.counter(
                         f"slo.violations.{t.key}",
                         help="rolling-window SLO threshold breaches").inc()
+                for hook in self._hooks:
+                    hook(t, value, now)
+            if self.registry is not None:
+                self.registry.gauge(
+                    f"slo.violation_rate.{t.key}",
+                    help="violations per post-warmup check").set(
+                        self.violations[t.key]
+                        / self.eligible_checks[t.key])
         return violated
 
     def summary(self) -> Dict[str, Any]:
@@ -114,7 +149,9 @@ class SLOMonitor:
             "targets": [
                 {"metric": t.metric, "quantile": t.quantile,
                  "threshold_s": t.threshold_s,
-                 "violations": self.violations[t.key]}
+                 "violations": self.violations[t.key],
+                 "eligible_checks": self.eligible_checks[t.key],
+                 "violation_rate": self.violation_rate(t.key)}
                 for t in self.targets
             ],
         }

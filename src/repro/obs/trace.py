@@ -24,7 +24,7 @@ from contextlib import contextmanager
 from dataclasses import dataclass, field
 from typing import Any, Callable, Deque, Dict, Iterable, Iterator, List, Optional
 
-__all__ = ["TraceEvent", "TraceRecorder", "replan_chains"]
+__all__ = ["TraceEvent", "TraceRecorder", "qos_chains", "replan_chains"]
 
 
 def _json_safe(value: Any) -> Any:
@@ -253,3 +253,28 @@ def replan_chains(events: Iterable[TraceEvent]) -> Dict[int, Dict[str, List[Trac
         })
         chain[slot].append(ev)
     return chains
+
+
+def qos_chains(events: Iterable[TraceEvent]
+               ) -> List[Dict[str, Optional[TraceEvent]]]:
+    """Pair each ``slo.violation`` with its ``qos.blame`` attribution.
+
+    The BlameLedger fires synchronously from the SLO monitor's
+    violation hook, so a blame event directly follows its violation on
+    the timeline. Returns one ``{"violation": ev, "blame": ev-or-None,
+    "saturations": [...]}`` entry per violation, where ``saturations``
+    are the ``link.saturated`` events observed since the previous
+    violation — the clamped-rho breadcrumbs leading into the excursion.
+    """
+    out: List[Dict[str, Any]] = []
+    pending_sat: List[TraceEvent] = []
+    for ev in events:
+        if ev.name == "link.saturated":
+            pending_sat.append(ev)
+        elif ev.name == "slo.violation":
+            out.append({"violation": ev, "blame": None,
+                        "saturations": pending_sat})
+            pending_sat = []
+        elif ev.name == "qos.blame" and out and out[-1]["blame"] is None:
+            out[-1]["blame"] = ev
+    return out

@@ -146,7 +146,8 @@ class TierBudgetArbiter:
                  hot_threshold: float = 0.05,
                  predictive: bool = False,
                  signature_ttl_epochs: int = 256,
-                 tracer=None, audit=None):
+                 tracer=None, audit=None,
+                 blame=None, blame_debit: float = 0.5):
         if objective not in OBJECTIVES:
             raise ValueError(f"unknown objective {objective!r}; "
                              f"choose from {OBJECTIVES}")
@@ -178,6 +179,14 @@ class TierBudgetArbiter:
         self.predicted_grants = 0     # demands served from the table
         self.tracer = tracer          # optional repro.obs.TraceRecorder
         self.audit = audit            # optional obs.PredictionLedger
+        # QoS blame coupling (optional obs.BlameLedger): a tenant the
+        # blame plane names as a noisy neighbor gets up to
+        # ``blame_debit`` of its above-floor grant debited, re-water-
+        # filled to the unblamed still-hungry tenants — tail excursions
+        # it caused cost it fast capacity, not just reputation
+        self.blame = blame
+        self.blame_debit = float(blame_debit)
+        self.blame_debited_bytes = 0
         # last next-phase signature filed with the audit, per tenant —
         # joined (hit/miss) when the next rebalance sees the actual one
         self._predicted_sigs: Dict[str, Hashable] = {}
@@ -368,7 +377,33 @@ class TierBudgetArbiter:
         # capacity beyond measured demand stays free: handing it out by
         # footprint would just re-enable hoarding by idle tenants — the
         # next rebalance grants it the moment demand shows up
+        if self.blame is not None and self.blame_debit > 0.0:
+            grant = self._apply_blame_debit(grant, asks)
         return {t: floors[t] + g for t, g in grant.items()}
+
+    def _apply_blame_debit(self, grant: Dict[str, int],
+                           asks: Mapping[str, int]) -> Dict[str, int]:
+        """Debit high-blame tenants' above-floor grants by their noisy-
+        neighbor score, re-water-filling the freed capacity to unblamed
+        tenants whose asks were not yet satisfied."""
+        grant = dict(grant)
+        freed = 0
+        scores = {t: self.blame.noisy_neighbor_score(t) for t in grant}
+        for t, g in grant.items():
+            cut = int(g * min(self.blame_debit * scores[t], 1.0))
+            if cut > 0:
+                grant[t] = g - cut
+                freed += cut
+        if freed > 0:
+            self.blame_debited_bytes += freed
+            residual = {t: max(asks.get(t, 0) - grant[t], 0)
+                        for t in grant if scores[t] <= 0.0}
+            if residual:
+                refill = self._water_fill(
+                    residual, {t: 1.0 for t in residual}, freed)
+                for t, extra in refill.items():
+                    grant[t] += extra
+        return grant
 
     # ------------------------------------------------------------------ #
     def rebalance(self, epoch: int = 0) -> ArbiterDecision:
@@ -391,5 +426,7 @@ class TierBudgetArbiter:
                     hot_bytes=dm.hot_bytes if dm else 0,
                     resident_bytes=dm.resident_bytes if dm else 0,
                     bytes_per_step=dm.bytes_per_step if dm else 0.0,
-                    source=dm.source if dm else "measured")
+                    source=dm.source if dm else "measured",
+                    blame_score=(self.blame.noisy_neighbor_score(tenant)
+                                 if self.blame is not None else 0.0))
         return d

@@ -190,6 +190,18 @@ class ServingConfig:
     trace_max_events: int = 65536
     slo_p95_ttft_s: Optional[float] = None
     slo_p95_decode_s: Optional[float] = None
+    slo_p99_decode_s: Optional[float] = None
+    # interference-class QoS plane (requires topology + a decode SLO):
+    # this tenant's gather flows are published tagged with their
+    # interference class into a BlameLedger (tail excursions get joined
+    # to their bottleneck link + noisy neighbor), and admission +
+    # preemption switch from the flat link_efficiency_floor to a
+    # ViolationPredictor pricing each candidate against every
+    # registered tenant's predicted p99 (audited as ``qos.violation``)
+    qos: bool = False
+    # interference class this engine's KV gathers present (read for
+    # decode-dominant serving; a prefill-heavy tenant may be write)
+    qos_class: str = "read"
     # self-calibrating cost model (requires adaptive): fit the pool's
     # slow-tier bandwidth from a real transfer probe at startup and
     # keep correcting the planning tiers online from audit residuals,
@@ -303,16 +315,47 @@ class ServingEngine:
         if sv.slo_p95_decode_s is not None:
             slo_targets.append(
                 SLOTarget("decode_latency", 0.95, sv.slo_p95_decode_s))
+        if sv.slo_p99_decode_s is not None:
+            slo_targets.append(
+                SLOTarget("decode_latency", 0.99, sv.slo_p99_decode_s))
         self.slo = SLOMonitor(slo_targets, clock=self._now,
                               registry=self.registry, tracer=self.tracer)
         self.lag = LagRatioMonitor()
         self._lag_tokens = 0          # decode tokens at last epoch close
         self._lag_time = 0.0          # _now() at last epoch close
+        # interference-class QoS plane: blame attribution + predictive
+        # admission, both priced on the topology's class-aware
+        # contention model
+        self.blame = None
+        self.predictor = None
+        self._qos_last_key: Optional[int] = None
+        if sv.qos:
+            if topo is None:
+                raise ValueError("qos requires a topology (the blame "
+                                 "plane attributes violations to links)")
+            decode_slo = sv.slo_p99_decode_s or sv.slo_p95_decode_s
+            if decode_slo is None:
+                raise ValueError("qos requires a decode SLO "
+                                 "(slo_p99_decode_s or slo_p95_decode_s)")
+            from ..obs import BlameLedger, ViolationPredictor
+            self.blame = BlameLedger(topo, registry=self.registry,
+                                     tracer=self.tracer, clock=self._now)
+            self.predictor = ViolationPredictor(topo, blame=self.blame,
+                                                audit=self.audit)
+            self.predictor.set_target(sv.tenant, decode_slo)
+            # every decode-latency excursion gets joined to its
+            # bottleneck link + antagonist at firing time
+            self.slo.add_violation_hook(
+                lambda t, v, now: self.blame.on_violation(
+                    sv.tenant, t.key, v, t.threshold_s, now=now)
+                if t.metric == "decode_latency" else None)
         self.sched = ContinuousBatchingScheduler(
             self.pool, SchedulerConfig(
                 max_batch=max_batch,
-                max_prefill_per_iter=sv.max_prefill_per_iter),
-            topology=topo, tracer=self.tracer)
+                max_prefill_per_iter=sv.max_prefill_per_iter,
+                flow_class=sv.qos_class),
+            topology=topo, tracer=self.tracer,
+            predictor=self.predictor)
         self.metrics = ServingMetrics(registry=self.registry,
                                       slo=self.slo)
         # telemetry: the pool emits access events through a sampling
@@ -567,8 +610,17 @@ class ServingEngine:
         self.tracer.event("phase.update", cat="phase",
                           epoch=self._step, label=str(self.phases.label),
                           shifts=len(self.phases.shifts))
+        if self.blame is not None:
+            # keep this tenant's class-tagged offered flows current in
+            # the shared blame book *before* the SLO check, so a firing
+            # violation attributes against fresh loads
+            self.blame.publish_flows(self.sv.tenant,
+                                     self.sched._running_flows(),
+                                     now=now)
         if self.slo.targets and self._step % 16 == 0:
             self.slo.check()
+            if self.predictor is not None:
+                self._qos_audit_step()
         if (self.replanner is None or self.sv.replan_every <= 0
                 or self._step == 0
                 or self._step % self.sv.replan_every != 0):
@@ -607,6 +659,28 @@ class ServingEngine:
             if self.movesched is not None and self.movesched.has_pending:
                 self.movesched.flush(epoch=self._step)
 
+    def _qos_audit_step(self) -> None:
+        """One predict/realize audit cycle for the ``qos.violation``
+        model: join the previous check's tail forecast with the window
+        p99 measured now, refresh the online baseline, and file the
+        forecast for the next check from the live flow set."""
+        sv = self.sv
+        q = 0.99 if sv.slo_p99_decode_s is not None else 0.95
+        observed = self.slo.quantile("decode_latency", q)
+        if observed is None:
+            return
+        if self._qos_last_key is not None:
+            self.predictor.realize(self._qos_last_key, sv.tenant,
+                                   observed)
+            self._qos_last_key = None
+        self.predictor.observe_p99(sv.tenant, observed)
+        pred = self.predictor.file_prediction(
+            self._step, sv.tenant,
+            extra_flows=self.sched._running_flows(),
+            exclude=sv.tenant, epoch=self._step)
+        if pred is not None:
+            self._qos_last_key = self._step
+
     def telemetry_summary(self) -> Dict[str, float]:
         out: Dict[str, float] = {
             "trace_events": float(self.trace.total_events),
@@ -615,6 +689,8 @@ class ServingEngine:
             "phase_shifts": float(len(self.phases.shifts)),
             "link_deferrals": float(self.sched.link_deferrals),
             "budget_preemptions": float(self.sched.budget_preemptions),
+            "qos_deferrals": float(self.sched.qos_deferrals),
+            "slo_preemptions": float(self.sched.slo_preemptions),
             "ledger_migrated_bytes": float(
                 self.ledger.counters.migrated_bytes),
         }
@@ -632,6 +708,8 @@ class ServingEngine:
             out["live_burst_entry_ratio"] = float(lag)
         out["trace_recorded_events"] = float(len(self.tracer))
         out["trace_dropped_events"] = float(self.tracer.dropped)
+        if self.blame is not None:
+            out.update(self.blame.summary())
         out.update(self.audit.summary())
         if self.calibrator is not None:
             out.update(self.calibrator.summary())
@@ -664,6 +742,10 @@ class ServingEngine:
             # the shared ledger since the last iteration: enforce it
             # before admitting new work (freed blocks re-admit victims)
             for v in self.sched.preempt_over_budget():
+                self.metrics.on_preempt(v.rid, now)
+            # predictive QoS: back off while any registered tenant's
+            # predicted tail exceeds its target under our live flows
+            for v in self.sched.preempt_predicted_violation():
                 self.metrics.on_preempt(v.rid, now)
             admitted = self.sched.admit(now_s=now)
             if not admitted and not self.sched.running:
@@ -707,8 +789,11 @@ class ServingEngine:
         self.registry.set_gauges(self.audit.summary())
         if self.calibrator is not None:
             self.calibrator.publish(self.registry)
+        slo = self.slo.summary()
+        if self.blame is not None:
+            slo["blame"] = self.blame.blame_report()
         return ServingReport(
             summary=summary,
             per_request=self.metrics.per_request_rows(),
             tiering=tstats, policy=self.tierer.policy_name,
-            telemetry=telemetry, slo=self.slo.summary())
+            telemetry=telemetry, slo=slo)

@@ -7,7 +7,8 @@ serves both and stays deterministic under test.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -74,9 +75,14 @@ class ServingMetrics:
     windows, without changing any of the aggregate math here.
     """
 
-    def __init__(self, registry=None, slo=None):
+    def __init__(self, registry=None, slo=None,
+                 max_decode_gaps: int = 65536):
         self.requests: Dict[int, RequestMetrics] = {}
         self.samples: List[PoolSample] = []
+        # retained inter-token gaps: exact tail quantiles (p95/p99)
+        # over a bounded window — the QoS plane's victim-tail metric
+        self.decode_gaps: Deque[float] = deque(
+            maxlen=int(max_decode_gaps))
         self.iterations = 0
         self.prefills = 0
         self.decode_steps = 0
@@ -112,6 +118,7 @@ class ServingMetrics:
                 self.slo.observe("ttft", ttft, now=now_s)
         elif r.last_token_s is not None:
             gap = now_s - r.last_token_s
+            self.decode_gaps.append(gap)
             if self.registry is not None:
                 self.registry.histogram(
                     "serving.decode_gap_s",
@@ -185,8 +192,12 @@ class ServingMetrics:
             "mean_ttft_s": (sum(ttfts) / len(ttfts)) if ttfts else 0.0,
             "p50_ttft_s": percentile(ttfts, 50),
             "p95_ttft_s": percentile(ttfts, 95),
+            "p99_ttft_s": percentile(ttfts, 99),
             "p50_latency_s": percentile(lats, 50),
             "p95_latency_s": percentile(lats, 95),
+            "p99_latency_s": percentile(lats, 99),
+            "p95_decode_gap_s": percentile(list(self.decode_gaps), 95),
+            "p99_decode_gap_s": percentile(list(self.decode_gaps), 99),
             "mean_decode_tok_s": (sum(toks) / len(toks)) if toks else 0.0,
             "p50_decode_tok_s": percentile(toks, 50),
             "p95_decode_tok_s": percentile(toks, 95),

@@ -141,6 +141,9 @@ class SchedulerConfig:
     # assumed iteration period for converting a request's KV gather
     # bytes into an offered bandwidth (GB/s = bytes / period / 1e9)
     gather_period_s: float = 0.05
+    # interference class this tenant's KV gather traffic presents to
+    # the class-aware contention model (read | write | prefetch)
+    flow_class: str = "read"
 
 
 class ContinuousBatchingScheduler:
@@ -153,11 +156,15 @@ class ContinuousBatchingScheduler:
 
     def __init__(self, pool: PagedKVPool,
                  cfg: Optional[SchedulerConfig] = None,
-                 topology=None, tracer=None):
+                 topology=None, tracer=None, predictor=None):
         self.pool = pool
         self.cfg = cfg or SchedulerConfig()
         self.topology = topology
         self.tracer = tracer          # optional repro.obs.TraceRecorder
+        # optional repro.obs.ViolationPredictor: admission + preemption
+        # gate on predicted SLO violation instead of the flat
+        # link_efficiency_floor
+        self.predictor = predictor
         self.waiting: Deque[Request] = deque()
         self.running: List[Request] = []
         self.finished: List[Request] = []
@@ -165,6 +172,8 @@ class ContinuousBatchingScheduler:
         self.preemption_events = 0
         self.link_deferrals = 0       # admissions blocked by link budget
         self.budget_preemptions = 0   # evictions forced by ledger budget
+        self.qos_deferrals = 0        # blocked by predicted violation
+        self.slo_preemptions = 0      # evictions forced by predicted SLO
 
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
@@ -196,7 +205,10 @@ class ContinuousBatchingScheduler:
             return None
         offered = (n_blocks * self.pool.block_nbytes()
                    / self.cfg.gather_period_s / 1e9)
-        return Flow(src, dst, offered) if offered > 0 else None
+        if offered <= 0:
+            return None
+        return Flow(src, dst, offered, cls=self.cfg.flow_class,
+                    tenant=self.pool.tenant)
 
     def _running_flows(self) -> List:
         """Per-request gather flows for the running set, grouped by the
@@ -235,13 +247,47 @@ class ContinuousBatchingScheduler:
                    for f, r in zip(base,
                                    self.topology.contended_flows(base))]
         flows = base + [cand]
-        results = self.topology.contended_flows(flows)
+        results = self.topology.contended_flows(flows,
+                                                tracer=self.tracer)
         ok = results[-1].achieved_GBps >= floor * cand.offered_GBps \
             and all(r.achieved_GBps >= floor * f.offered_GBps
                     for (f, r), was in zip(zip(base, results), healthy)
                     if was)
         if ok:
             pending.append(cand)
+        return ok
+
+    def _qos_allows(self, req: Request, running: List,
+                    pending: List) -> bool:
+        """Violation-predictive admission: would admitting ``req`` keep
+        every tenant with a registered SLO target (this one and the
+        neighbors in the blame book) under its predicted-p99 threshold?
+        Replaces the flat efficiency floor when a ``ViolationPredictor``
+        is attached — the floor is blind to *who* the lost bandwidth
+        hurts; the predictor prices the candidate against the victim's
+        actual tail budget."""
+        cand = self._gather_flow(self.pool.default_kind,
+                                 self.blocks_needed(req))
+        if cand is None:
+            return True
+        if not running and not pending:
+            # empty-pool bootstrap: with nothing running, deferring the
+            # sole workload protects no one — an unachievable own target
+            # must not starve the engine (liveness over forecast)
+            pending.append(cand)
+            return True
+        own = running + pending + [cand]
+        ok = self.predictor.admission_ok(own, exclude=self.pool.tenant)
+        if ok:
+            pending.append(cand)
+        elif self.tracer is not None:
+            viol = self.predictor.violations(own,
+                                             exclude=self.pool.tenant)
+            self.tracer.event(
+                "sched.qos_defer", cat="sched", rid=req.rid,
+                offered_GBps=cand.offered_GBps,
+                violations={t: {"predicted_s": p, "threshold_s": thr}
+                            for t, (p, thr) in viol.items()})
         return ok
 
     def admit(self, now_s: float = 0.0) -> List[Request]:
@@ -265,7 +311,12 @@ class ContinuousBatchingScheduler:
             need = self.blocks_needed(head)
             if not self.pool.can_alloc(need + margin):
                 break
-            if self.topology is not None and \
+            if self.topology is not None and self.predictor is not None:
+                if not self._qos_allows(head, running_flows,
+                                        pending_flows):
+                    self.qos_deferrals += 1
+                    break
+            elif self.topology is not None and \
                     not self._link_budget_allows(head, running_flows,
                                                  pending_flows):
                 self.link_deferrals += 1
@@ -341,6 +392,43 @@ class ContinuousBatchingScheduler:
                          key=lambda r: (r.priority, -r.admit_order))
             self._evict(victim, reason="budget")
             self.budget_preemptions += 1
+            victims.append(victim)
+        return victims
+
+    def preempt_predicted_violation(self) -> List[Request]:
+        """Predictive QoS preemption: while this tenant's live gather
+        flows push any tenant with a registered SLO target past its
+        predicted-p99 threshold, evict the lowest-priority running
+        sequence still holding slow-tier blocks (the ones generating
+        cross-link traffic).  The flat-floor baseline only reacts after
+        the victim's tail has already blown; this backs off while the
+        violation is still a forecast."""
+        if self.predictor is None:
+            return []
+        victims: List[Request] = []
+        while self.running:
+            own = self._running_flows()
+            if not own:
+                break
+            viol = self.predictor.violations(own,
+                                             exclude=self.pool.tenant)
+            if not viol:
+                break
+            if set(viol) == {self.pool.tenant} and len(self.running) <= 1:
+                # self-inflicted forecast with nothing left to shed
+                # against: evicting the last sequence cannot improve its
+                # own tail (the work still has to run) — it only
+                # livelocks the engine through evict/readmit cycles
+                break
+            holders = [r for r in self.running
+                       if any(b.kind != FAST_KIND
+                              for b in self.pool.seq_blocks(r.rid))]
+            if not holders:
+                break
+            victim = min(holders,
+                         key=lambda r: (r.priority, -r.admit_order))
+            self._evict(victim, reason="slo")
+            self.slo_preemptions += 1
             victims.append(victim)
         return victims
 

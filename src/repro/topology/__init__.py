@@ -10,12 +10,13 @@ model, migration executor, and adaptive replanner price against.
 """
 from .builders import (build_topology, Testbed, TOPOLOGY_CHOICES,
                        tpu_pod, two_socket_system)
-from .graph import (Flow, FlowResult, LinkKey, TopoLink, TopologyGraph,
+from .graph import (Flow, FlowResult, INTERFERENCE_CLASSES,
+                    InterferenceMatrix, LinkKey, TopoLink, TopologyGraph,
                     TopoNode)
 
 __all__ = [
-    "Flow", "FlowResult", "LinkKey", "TopologyGraph", "TopoLink",
-    "TopoNode",
+    "Flow", "FlowResult", "INTERFERENCE_CLASSES", "InterferenceMatrix",
+    "LinkKey", "TopologyGraph", "TopoLink", "TopoNode",
     "TOPOLOGY_CHOICES", "Testbed", "build_topology", "tpu_pod",
     "two_socket_system",
 ]

@@ -76,35 +76,122 @@ class TopoLink:
         return self.b if node == self.a else self.a
 
 
+# interference classes per CXL-Interference (arxiv 2411.18308): the
+# slowdown co-located traffic inflicts depends on *what kind* of
+# traffic it is, not just how much — writers hurt readers far more
+# than readers hurt writers, and prefetch streams are the worst
+# antagonists of all
+INTERFERENCE_CLASSES = ("read", "write", "prefetch")
+
+# (victim class, aggressor class) -> relative pressure one offered
+# byte of the aggressor puts on the victim's queue, versus a byte of
+# the victim's own class (diagonal == 1).  Values follow the ordering
+# 2411.18308 measures on CXL/UPI hops: writer-on-reader ~1.6x,
+# prefetcher-on-writer worst, reader-on-writer mildest.
+DEFAULT_CLASS_WEIGHTS = {
+    ("read", "write"): 1.6,
+    ("read", "prefetch"): 1.25,
+    ("write", "read"): 0.85,
+    ("write", "prefetch"): 1.9,
+    ("prefetch", "read"): 1.2,
+    ("prefetch", "write"): 1.45,
+}
+
+# how strongly a link kind expresses the class asymmetry: CXL
+# controllers amplify it (single shared buffer), socket interconnects
+# show it as measured, on-package local links barely notice
+DEFAULT_KIND_SCALE = {
+    "cxl": 1.25, "upi": 1.0, "pcie": 0.9, "ici": 0.5,
+    "local": 0.25, "link": 1.0,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class InterferenceMatrix:
+    """Per-link-kind asymmetric class-interference weights.
+
+    ``weight(kind, victim, aggressor)`` is the pressure multiplier an
+    aggressor-class byte applies to a victim-class flow's utilization
+    on a link of ``kind``.  Same-class pairs are always 1.0, so a flow
+    set of one class reproduces the symmetric fair-share model
+    exactly.  ``pair_scale`` carries calibration: per
+    ``(kind, victim, aggressor)`` multiplicative corrections fitted by
+    the ``CostModelCalibrator`` from measured slowdown ratios.
+    """
+
+    class_weights: Mapping[Tuple[str, str], float] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_CLASS_WEIGHTS))
+    kind_scale: Mapping[str, float] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_KIND_SCALE))
+    pair_scale: Mapping[Tuple[str, str, str], float] = dataclasses.field(
+        default_factory=dict)
+
+    def weight(self, link_kind: str, victim: str, aggressor: str) -> float:
+        if victim == aggressor:
+            w = 1.0
+        else:
+            base = self.class_weights.get((victim, aggressor), 1.0)
+            scale = self.kind_scale.get(link_kind, 1.0)
+            w = 1.0 + (base - 1.0) * scale
+        w *= self.pair_scale.get((link_kind, victim, aggressor), 1.0)
+        return max(w, 0.05)
+
+    def with_pair_scales(self, scales: Mapping[Tuple[str, str, str], float]
+                         ) -> "InterferenceMatrix":
+        merged = dict(self.pair_scale)
+        merged.update(scales)
+        return dataclasses.replace(self, pair_scale=merged)
+
+
 @dataclasses.dataclass(frozen=True)
 class Flow:
-    """One offered traffic stream between two nodes (for contention)."""
+    """One offered traffic stream between two nodes (for contention).
+
+    ``cls`` is the interference class (read | write | prefetch) and
+    ``tenant`` the namespace that owns the traffic — both default so
+    legacy call sites price as symmetric anonymous readers."""
 
     src: str
     dst: str
     offered_GBps: float
+    cls: str = "read"
+    tenant: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
 class FlowResult:
-    """Realized performance of one flow under shared-link contention."""
+    """Realized performance of one flow under shared-link contention.
+
+    ``raw_rho`` is the flow's worst *pre-clamp* class-weighted
+    utilization along its path — values above ``max_rho`` mean the
+    loaded-latency clamp engaged and the link is saturated."""
 
     achieved_GBps: float
     latency_ns: float
     bottleneck: Optional[LinkKey]
+    raw_rho: float = 0.0
+    clamped: bool = False
 
 
 class TopologyGraph:
     """Nodes + links with shortest-path and contention queries."""
 
     def __init__(self, name: str = "topology",
-                 origin: Optional[str] = None):
+                 origin: Optional[str] = None,
+                 interference: Optional[InterferenceMatrix] = None):
         self.name = name
         self.nodes: Dict[str, TopoNode] = {}
         self.links: Dict[LinkKey, TopoLink] = {}
         self._adj: Dict[str, List[TopoLink]] = {}
         self.tier_nodes: Dict[str, str] = {}
         self.origin = origin          # default compute location
+        # class-interference pricing for contended_flows; the default
+        # matrix is identity on same-class pairs, so single-class flow
+        # sets keep the symmetric fair-share behavior
+        self.interference = interference or InterferenceMatrix()
+        # per-link count of contended_flows calls whose loaded-latency
+        # clamp engaged — overload that used to be silent
+        self.link_saturations: Dict[LinkKey, int] = {}
         # memoized shortest paths — the cost model queries the same
         # (src, dst) pairs once per candidate plan (policy_search runs
         # thousands); invalidated whenever the graph grows
@@ -168,8 +255,9 @@ class TopologyGraph:
         The calibration hook: ``CostModelCalibrator`` turns fitted link
         corrections into a corrected graph without mutating the one the
         rest of the control plane shares.  Tier mappings (including
-        aliases) carry over verbatim."""
-        g = TopologyGraph(self.name, origin=self.origin)
+        aliases) and the interference matrix carry over verbatim."""
+        g = TopologyGraph(self.name, origin=self.origin,
+                          interference=self.interference)
         for node in self.nodes.values():
             # tiers are copied wholesale below so aliased tier names
             # (two tiers on one node) survive the rebuild
@@ -321,36 +409,84 @@ class TopologyGraph:
     # ------------------------------------------------------------------ #
     # contention (M/M/1-style queueing on shared links)                  #
     # ------------------------------------------------------------------ #
+    def link_loads(self, flows: Sequence[Flow]
+                   ) -> Dict[LinkKey, Dict[Tuple[str, str], float]]:
+        """Offered GB/s per link, keyed by ``(tenant, class)`` — the
+        attribution view the QoS blame plane joins violations against."""
+        out: Dict[LinkKey, Dict[Tuple[str, str], float]] = {}
+        for f in flows:
+            for l in self.path(f.src, f.dst):
+                d = out.setdefault(l.key, {})
+                k = (f.tenant, f.cls)
+                d[k] = d.get(k, 0.0) + f.offered_GBps
+        return out
+
     def contended_flows(self, flows: Sequence[Flow],
-                        max_rho: float = 0.95) -> List[FlowResult]:
+                        max_rho: float = 0.95,
+                        tracer=None) -> List[FlowResult]:
         """Realized bandwidth/latency per flow when run *concurrently*.
 
-        Each link fair-shares its bandwidth over the offered loads
-        crossing it (proportional to demand), and charges an M/M/1
-        loaded-latency factor ``1 / (1 - rho)`` with the utilization
-        clamped at ``max_rho`` — the same queueing shape as
-        ``MemoryTier.loaded_latency`` (Fig. 4), applied per link.
+        Each link shares its bandwidth over the offered loads crossing
+        it and charges an M/M/1 loaded-latency factor ``1 / (1 - rho)``
+        — the same queueing shape as ``MemoryTier.loaded_latency``
+        (Fig. 4), applied per link.  Utilization is *class-weighted*
+        per victim flow: a byte of co-located traffic counts as
+        ``interference.weight(link.kind, victim.cls, aggressor.cls)``
+        bytes of pressure, so a writer degrades a reader's queue more
+        than another reader would (CXL-Interference, arxiv 2411.18308).
+        All-same-class flow sets reduce to the symmetric fair share.
+
+        When a flow's weighted utilization exceeds ``max_rho`` the
+        latency clamp engages: the link is *saturated*, which is
+        recorded in ``self.link_saturations``, emitted as a
+        ``link.saturated`` trace event (once per link per call, when a
+        ``tracer`` is given), and surfaced as the flow's pre-clamp
+        ``raw_rho``/``clamped`` in its :class:`FlowResult`.
         """
         paths = [self.path(f.src, f.dst) for f in flows]
-        offered: Dict[LinkKey, float] = {}
+        offered: Dict[LinkKey, Dict[str, float]] = {}
         for f, links in zip(flows, paths):
             for l in links:
-                offered[l.key] = offered.get(l.key, 0.0) + f.offered_GBps
+                d = offered.setdefault(l.key, {})
+                d[f.cls] = d.get(f.cls, 0.0) + f.offered_GBps
+        m = self.interference
+        saturated: set = set()
         out: List[FlowResult] = []
         for f, links in zip(flows, paths):
             bw = f.offered_GBps
             lat = 0.0
             bneck: Optional[LinkKey] = None
+            worst_rho = 0.0
+            clamped = False
             for l in links:
-                total = offered[l.key]
-                share = (l.bw_GBps * f.offered_GBps / total
-                         if total > l.bw_GBps else f.offered_GBps)
+                loads = offered[l.key]
+                wtotal = sum(m.weight(l.kind, f.cls, c) * v
+                             for c, v in loads.items())
+                share = (l.bw_GBps * f.offered_GBps / wtotal
+                         if wtotal > l.bw_GBps else f.offered_GBps)
                 if share < bw:
                     bw = share
                     bneck = l.key
-                rho = min(total / l.bw_GBps, max_rho)
+                raw_rho = wtotal / l.bw_GBps
+                if raw_rho > worst_rho:
+                    worst_rho = raw_rho
+                rho = min(raw_rho, max_rho)
+                if raw_rho > max_rho:
+                    clamped = True
+                    if l.key not in saturated:
+                        saturated.add(l.key)
+                        self.link_saturations[l.key] = \
+                            self.link_saturations.get(l.key, 0) + 1
+                        if tracer is not None:
+                            tracer.event(
+                                "link.saturated", cat="topology",
+                                link=f"{l.key[0]}-{l.key[1]}",
+                                kind=l.kind, raw_rho=raw_rho,
+                                offered_GBps=sum(loads.values()),
+                                bw_GBps=l.bw_GBps, victim_cls=f.cls)
                 lat += l.latency_ns / (1.0 - rho)
-            out.append(FlowResult(bw, lat, bneck))
+            out.append(FlowResult(bw, lat, bneck, raw_rho=worst_rho,
+                                  clamped=clamped))
         return out
 
     def describe(self, tiers: Optional[Mapping[str, MemoryTier]] = None,

@@ -11,7 +11,7 @@ from repro.configs import get_smoke_config
 from repro.models import lm
 from repro.obs import (Counter, LagRatioMonitor, MetricsRegistry,
                        PercentileSketch, SLOMonitor, SLOTarget,
-                       TraceRecorder, replan_chains)
+                       TraceRecorder, qos_chains, replan_chains)
 from repro.serving import ServingConfig, ServingEngine
 from repro.serving.metrics import ServingMetrics
 
@@ -224,6 +224,72 @@ def test_slo_window_is_rolling():
     assert mon.check() == []        # the slow samples rolled out
 
 
+def test_slo_min_sample_warmup_gates_violations():
+    """A 2-sample 'p99' is an arrival artifact, not a tail: targets
+    stay ineligible (and silent) until the window passes warmup."""
+    mon = SLOMonitor([SLOTarget("decode_latency", 0.99,
+                                threshold_s=0.01)], min_samples=4)
+    key = "decode_latency.p99"
+    for _ in range(3):
+        mon.observe("decode_latency", 0.5)   # way over threshold
+        assert mon.check() == []             # but under warmup
+    assert mon.violations[key] == 0
+    assert mon.eligible_checks[key] == 0
+    assert mon.violation_rate(key) is None   # no denominator yet
+    mon.observe("decode_latency", 0.5)       # 4th sample: eligible
+    violated = mon.check()
+    assert len(violated) == 1 and violated[0][0].key == key
+    assert mon.eligible_checks[key] == 1
+    assert mon.violation_rate(key) == pytest.approx(1.0)
+    # checks counted regardless of eligibility; summary carries both
+    s = mon.summary()
+    assert s["checks"] == 4
+    assert s["targets"][0]["eligible_checks"] == 1
+    assert s["targets"][0]["violation_rate"] == pytest.approx(1.0)
+
+
+def test_slo_violation_rate_gauge_tracks_eligible_fraction():
+    reg = MetricsRegistry()
+    mon = SLOMonitor([SLOTarget("ttft", 0.95, threshold_s=0.2)],
+                     registry=reg, min_samples=4)
+    for _ in range(8):
+        mon.observe("ttft", 0.05)
+    assert mon.check() == []                 # eligible, healthy
+    assert reg.gauge("slo.violation_rate.ttft.p95").value == 0.0
+    for _ in range(8):
+        mon.observe("ttft", 0.5)
+    assert len(mon.check()) == 1             # second check violates
+    assert mon.violation_rate("ttft.p95") == pytest.approx(0.5)
+    assert reg.gauge("slo.violation_rate.ttft.p95").value == \
+        pytest.approx(0.5)
+    # an unknown target key has no rate
+    assert mon.violation_rate("nope.p99") is None
+
+
+def test_slo_violation_hooks_fire_with_target_value_and_clock():
+    fired = []
+    mon = SLOMonitor([SLOTarget("decode_latency", 0.99,
+                                threshold_s=0.01)], min_samples=2)
+    mon.add_violation_hook(
+        lambda t, v, now: fired.append((t.key, v, now)))
+    mon.add_violation_hook(
+        lambda t, v, now: fired.append(("second", v, now)))
+    for _ in range(4):
+        mon.observe("decode_latency", 0.08)
+    assert mon.check(now=7.5)                # explicit clock wins
+    assert [f[0] for f in fired] == ["decode_latency.p99", "second"]
+    key, value, now = fired[0]
+    assert value > 0.01 and now == 7.5
+    # a healthy check fires nothing further
+    fired.clear()
+    mon2 = SLOMonitor([SLOTarget("ttft", 0.95, threshold_s=10.0)],
+                      min_samples=2)
+    mon2.add_violation_hook(lambda t, v, now: fired.append(t))
+    for _ in range(4):
+        mon2.observe("ttft", 0.1)
+    assert mon2.check() == [] and not fired
+
+
 # ===================================================================== #
 # LagRatioMonitor: online burst-entry / steady ratio                    #
 # ===================================================================== #
@@ -303,7 +369,7 @@ def test_per_request_rows_omit_undefined_latencies():
 def test_serving_metrics_publish_to_registry_and_slo():
     reg = MetricsRegistry()
     slo = SLOMonitor([SLOTarget("ttft", 0.95, threshold_s=0.1)],
-                     registry=reg)
+                     registry=reg, min_samples=1)
     m = ServingMetrics(registry=reg, slo=slo)
     m.on_submit(1, 0.0, 8)
     m.on_token(1, 0.4)                      # ttft 0.4 > threshold
@@ -365,6 +431,41 @@ def test_engine_trace_reconstructs_decision_chain(tiny, tmp_path):
     assert snap["serving.summary.finished"] == 4.0
     assert snap["serving.ttft_s.count"] == 4
     assert any(k.startswith("ledger.") for k in snap)
+
+
+def test_engine_qos_plane_blames_excursions_live(tiny):
+    """qos=True end to end inside the engine: an impossible decode SLO
+    fires live violations, each joined by the blame hook to a topology
+    link while the engine's own class-tagged flows are the book."""
+    cfg, params = tiny
+    eng = ServingEngine(cfg, params, ServingConfig(
+        block_tokens=8, max_batch=2, max_context=32, policy="static",
+        topology="far-socket", qos=True, fast_block_budget=1,
+        slo_p99_decode_s=1e-9))             # violates: everything is slower
+    assert eng.blame is not None and eng.predictor is not None
+    rs = np.random.RandomState(1)
+    for i in range(4):
+        eng.submit(rs.randint(0, cfg.vocab, (8,)).astype(np.int32),
+                   max_new_tokens=8, arrival_s=0.002 * i)
+    rep = eng.run()
+    assert rep.summary["finished"] == 4.0
+    assert rep.slo["targets"][0]["violations"] > 0
+    blame = rep.slo["blame"]
+    assert blame["total_excursions"] > 0
+    assert "serving" in blame["victims"]
+    # solo tenant: each excursion still pins a real bottleneck link,
+    # but there is no neighbor to rank as top antagonist
+    assert all(ex["link"] is not None for ex in blame["excursions"])
+    assert blame["top_antagonist"] is None
+    # the trace joins each violation to its qos.blame event
+    chains = qos_chains(eng.tracer.events)
+    assert chains and any(c["blame"] is not None for c in chains)
+    joined = next(c for c in chains if c["blame"] is not None)
+    assert joined["blame"].args["victim"] == "serving"
+    # predictive admission replaced the flat floor: its counters exist
+    assert rep.telemetry["qos_deferrals"] >= 0.0
+    assert rep.telemetry["slo_preemptions"] >= 0.0
+    assert eng.registry.counter("qos.excursions").value > 0
 
 
 def test_serve_cli_writes_obs_artifacts(tmp_path):

@@ -1,0 +1,264 @@
+"""Interference-class QoS plane: blame attribution, violation
+prediction, audit joins, calibration hooks, and the arbiter debit."""
+import pytest
+
+from repro.core import paper_system
+from repro.obs import (BlameLedger, CostModelCalibrator, MetricsRegistry,
+                       PredictionLedger, QOS_VIOLATION_MODEL,
+                       QOS_VIOLATION_TOLERANCE, SLOMonitor, SLOTarget,
+                       TraceRecorder, ViolationPredictor, qos_chains)
+from repro.pool import TenantDemand, TierBudgetArbiter
+from repro.topology import Flow, TopologyGraph
+
+
+def _shared_link_graph(bw=10.0, kind="upi"):
+    """Two nodes, one contended link: FAST at a, SLOW at b."""
+    g = TopologyGraph("t", origin="a")
+    g.add_node("a", "socket", tier="FAST")
+    g.add_node("b", "socket", tier="SLOW")
+    g.add_link("a", "b", 100.0, bw, kind)
+    return g
+
+
+def _victim(offered=4.0):
+    return Flow("b", "a", offered, cls="read", tenant="victim")
+
+
+def _neighbor(offered=5.0, cls="write", tenant="noisy"):
+    return Flow("b", "a", offered, cls=cls, tenant=tenant)
+
+
+# ===================================================================== #
+# BlameLedger: violation -> bottleneck link -> antagonist                #
+# ===================================================================== #
+def test_blame_names_antagonist_link_and_pressure():
+    g = _shared_link_graph(bw=10.0)
+    reg = MetricsRegistry()
+    blame = BlameLedger(g, registry=reg)
+    blame.publish_flows("victim", [_victim(4.0)], now=1.0)
+    blame.publish_flows("noisy", [_neighbor(5.0)], now=1.0)
+    blame.publish_flows("quiet", [_neighbor(1.0, cls="read",
+                                            tenant="quiet")], now=1.0)
+    ex = blame.on_violation("victim", "decode_latency.p99",
+                            observed_s=0.05, threshold_s=0.01, now=2.0)
+    assert ex.link == ("a", "b") and ex.link_kind == "upi"
+    # victim-weighted utilization: (4 + 1.6*5 + 1*1) / 10
+    assert ex.rho == pytest.approx((4 + 1.6 * 5 + 1.0) / 10.0)
+    # writer pressure 1.6*5 beats the quiet reader's 1*1
+    assert ex.antagonist == "noisy"
+    assert ex.pressure["noisy"] == pytest.approx(8.0)
+    assert ex.pressure["quiet"] == pytest.approx(1.0)
+    assert ex.loads[("noisy", "write")] == pytest.approx(5.0)
+    # blame mass is the pressure share, accumulated per excursion
+    assert blame.noisy_neighbor_score("noisy") == pytest.approx(8 / 9)
+    assert blame.noisy_neighbor_score("victim") == 0.0
+    rep = blame.blame_report()
+    assert rep["top_antagonist"] == "noisy"
+    assert rep["top_link"] == "a-b"
+    assert rep["victims"] == {"victim": 1}
+    assert reg.counter("qos.excursions").value == 1
+    assert blame.summary()["qos.noisy_neighbor.noisy"] > 0.8
+
+
+def test_blame_retags_spoofed_flows_and_handles_missing_victim():
+    g = _shared_link_graph()
+    blame = BlameLedger(g)
+    # a tenant cannot shed blame by tagging its flows as someone else
+    blame.publish_flows("noisy", [Flow("b", "a", 5.0, cls="write",
+                                       tenant="innocent")])
+    blame.publish_flows("victim", [_victim()])
+    ex = blame.on_violation("victim", "m", 1.0, 0.5)
+    assert ex.antagonist == "noisy"
+    # a victim with no published flows cannot be attributed
+    assert blame.on_violation("ghost", "m", 1.0, 0.5) is None
+    assert blame.total_excursions == 1
+
+
+def test_blame_excursions_are_ring_bounded():
+    g = _shared_link_graph()
+    blame = BlameLedger(g, max_excursions=4)
+    blame.publish_flows("victim", [_victim()])
+    for i in range(9):
+        blame.on_violation("victim", "m", 1.0, 0.5, now=float(i))
+    assert len(blame.excursions) == 4
+    assert blame.total_excursions == 9
+
+
+# ===================================================================== #
+# ViolationPredictor: forecast + admission gate + audit joins            #
+# ===================================================================== #
+def test_predictor_scales_baseline_by_slowdown():
+    g = _shared_link_graph(bw=10.0)
+    pred = ViolationPredictor(g)
+    pred.set_target("victim", 0.02)
+    pred.set_baseline("victim", 0.01)
+    # lone victim: rho 0.4 -> latency stretch 1/(1-0.4)
+    lone = pred.predict_p99("victim", [_victim(4.0)])
+    assert lone == pytest.approx(0.01 / 0.6)
+    assert pred.admission_ok([_victim(4.0)])
+    # writer neighbor pushes the victim's weighted rho to 1.2 (clamped
+    # at 0.95): predicted latency blows the 2x target
+    flows = [_victim(4.0), _neighbor(5.0)]
+    viol = pred.violations(flows)
+    assert "victim" in viol
+    p, thr = viol["victim"]
+    assert thr == 0.02 and p > thr
+    assert not pred.admission_ok(flows)
+    # a tenant with no live flows keeps its baseline (no violation)
+    assert pred.predict_p99("victim", []) is None
+
+
+def test_predictor_merges_blame_book_with_exclusion():
+    g = _shared_link_graph(bw=10.0)
+    blame = BlameLedger(g)
+    pred = ViolationPredictor(g, blame=blame)
+    pred.set_target("victim", 0.02)
+    pred.set_baseline("victim", 0.01)
+    blame.publish_flows("victim", [_victim(4.0)])
+    blame.publish_flows("noisy", [_neighbor(5.0)])
+    # the book alone already predicts a violation
+    assert not pred.admission_ok([])
+    # excluding the noisy tenant's snapshot (its own live view) leaves
+    # just the victim: healthy
+    assert pred.admission_ok([], exclude="noisy")
+    # candidate flows stack on top of the remaining book
+    assert not pred.admission_ok([_neighbor(5.0)], exclude="noisy")
+
+
+def test_predictor_observe_p99_keeps_best_baseline():
+    g = _shared_link_graph()
+    pred = ViolationPredictor(g)
+    pred.observe_p99("victim", 0.02)
+    pred.observe_p99("victim", 0.013)
+    pred.observe_p99("victim", 0.05)       # worse: ignored
+    pred.observe_p99("victim", 0.0)        # non-positive: ignored
+    assert pred.baselines["victim"] == pytest.approx(0.013)
+
+
+def test_predictor_audit_joins_under_model_tolerance():
+    g = _shared_link_graph(bw=10.0)
+    audit = PredictionLedger()
+    pred = ViolationPredictor(g, audit=audit)
+    # attaching the predictor registers the per-model tolerance
+    assert audit.model_tolerance[QOS_VIOLATION_MODEL] == \
+        QOS_VIOLATION_TOLERANCE
+    pred.set_baseline("victim", 0.01)
+    p = pred.file_prediction("e0", "victim",
+                             extra_flows=[_victim(4.0)], epoch=0)
+    assert p == pytest.approx(0.01 / 0.6)
+    rec = pred.realize("e0", "victim", p * 1.2)   # within 35% tolerance
+    assert rec is not None
+    assert audit.accuracy(QOS_VIOLATION_MODEL) == pytest.approx(1.0)
+    # a forecast off by more than the tolerance counts against accuracy
+    pred.file_prediction("e1", "victim", extra_flows=[_victim(4.0)],
+                         epoch=1)
+    pred.realize("e1", "victim", p * 2.0)
+    assert audit.accuracy(QOS_VIOLATION_MODEL) == pytest.approx(0.5)
+
+
+# ===================================================================== #
+# end-to-end: SLO hook -> blame -> trace chain                           #
+# ===================================================================== #
+def test_slo_violation_hook_drives_blame_and_trace_chain():
+    g = _shared_link_graph(bw=10.0)
+    tracer = TraceRecorder(clock=lambda: 0.0)
+    blame = BlameLedger(g, tracer=tracer)
+    slo = SLOMonitor([SLOTarget("decode_latency", 0.99, 0.01)],
+                     tracer=tracer, min_samples=4)
+    slo.add_violation_hook(
+        lambda t, v, now: blame.on_violation("victim", t.key, v,
+                                             t.threshold_s, now=now))
+    blame.publish_flows("victim", [_victim(4.0)])
+    blame.publish_flows("noisy", [_neighbor(5.0)])
+    # saturation breadcrumb on the shared link before the excursion
+    g.contended_flows([_victim(4.0), _neighbor(5.0)], tracer=tracer)
+    for i in range(8):
+        slo.observe("decode_latency", 0.05, now=float(i))
+        slo.check(now=float(i))
+    assert blame.total_excursions > 0
+    chains = qos_chains(tracer.events)
+    assert chains and chains[0]["blame"] is not None
+    assert chains[0]["blame"].args["antagonist"] == "noisy"
+    assert chains[0]["blame"].args["link"] == "a-b"
+    assert chains[0]["saturations"], "clamped-rho breadcrumb missing"
+    assert chains[0]["saturations"][0].args["kind"] == "upi"
+
+
+# ===================================================================== #
+# calibration: measured slowdown reprices the interference matrix        #
+# ===================================================================== #
+def test_calibrator_interference_scales_reprice_contention():
+    g = _shared_link_graph(bw=10.0)
+    cal = CostModelCalibrator(paper_system("A"), graph=g)
+    base_w = g.interference.weight("upi", "read", "write")
+    # contention repeatedly hits 1.5x harder than modeled
+    for _ in range(8):
+        cal.observe_interference("upi", "read", "write", 1.5)
+    m = cal.calibrated_interference()
+    assert m.weight("upi", "read", "write") > base_w
+    # same-class and reverse-direction pairs are untouched
+    assert m.weight("upi", "read", "read") == pytest.approx(1.0)
+    assert m.weight("upi", "write", "read") == pytest.approx(
+        g.interference.weight("upi", "write", "read"))
+    # the calibrated graph carries the matrix: the victim's achieved
+    # bandwidth under the writer drops further than the builder model
+    cg = cal.calibrated_graph()
+    flows = [_victim(4.0), _neighbor(5.0)]
+    before = g.contended_flows(flows)[0]
+    after = cg.contended_flows(flows)[0]
+    assert after.achieved_GBps < before.achieved_GBps
+    assert after.raw_rho > before.raw_rho
+    # summary exposes the fitted pair scale
+    key = "calibration.interference.upi.read-write.scale"
+    assert cal.summary()[key] > 1.0
+    # bad ratios are ignored
+    cal.observe_interference("upi", "read", "write", 0.0)
+    cal.observe_interference("upi", "read", "write", float("inf"))
+
+
+def test_calibrator_without_interference_obs_keeps_base_matrix():
+    g = _shared_link_graph()
+    cal = CostModelCalibrator(paper_system("A"), graph=g)
+    assert cal.calibrated_interference() is g.interference
+    assert cal.calibrated_graph().interference is g.interference
+
+
+# ===================================================================== #
+# arbiter: blame debits fast-tier grants                                 #
+# ===================================================================== #
+class _StubBlame:
+    def __init__(self, scores):
+        self.scores = scores
+
+    def noisy_neighbor_score(self, tenant):
+        return self.scores.get(tenant, 0.0)
+
+
+def _arbiter_with_blame(blame, capacity=100, **kw):
+    from repro.pool import ResidencyLedger
+    led = ResidencyLedger()
+    for t in ("noisy", "quiet"):
+        led.register_tenant(t)
+    return TierBudgetArbiter(led, "LDRAM", capacity_bytes=capacity,
+                             blame=blame, **kw)
+
+
+def test_arbiter_debits_blamed_tenant_and_refills_victim():
+    arb = _arbiter_with_blame(_StubBlame({"noisy": 1.0}),
+                              blame_debit=0.5)
+    demands = [TenantDemand("noisy", 100, 80, 1.0),
+               TenantDemand("quiet", 100, 80, 1.0)]
+    budgets = arb.split(demands)
+    # fair share would be 50/50; the fully-blamed tenant loses half its
+    # grant and the clean still-hungry tenant absorbs it
+    assert budgets["noisy"] == 25
+    assert budgets["quiet"] == 75
+    assert arb.blame_debited_bytes == 25
+
+
+def test_arbiter_blame_debit_noop_for_clean_tenants():
+    arb = _arbiter_with_blame(_StubBlame({}), blame_debit=0.5)
+    demands = [TenantDemand("noisy", 100, 80, 1.0),
+               TenantDemand("quiet", 100, 80, 1.0)]
+    assert arb.split(demands) == {"noisy": 50, "quiet": 50}
+    assert arb.blame_debited_bytes == 0

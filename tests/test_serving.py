@@ -408,3 +408,126 @@ def test_admission_ignores_preexisting_violations_on_disjoint_links():
     sched.submit(_req(0, plen=6))      # gathers over the wide link
     assert [r.rid for r in sched.admit()] == [0]
     assert sched.link_deferrals == 0
+
+
+def test_admission_candidate_exactly_at_floor_is_admitted():
+    """The floor is inclusive: a candidate whose fair share lands
+    exactly on ``floor * offered`` is admitted, not deferred."""
+    from repro.serving.kv_pool import KVBlockSpec
+    spec = KVBlockSpec(n_units=2, n_attn=2, block_tokens=4, n_kv=2,
+                       head_dim=8)                 # 1 KiB per block
+    pool = PagedKVPool(64, 4, spec=spec)
+    # one request = 2 blocks = 2.048 GB/s of gather; the link carries
+    # exactly one request, so two equal flows each achieve *exactly*
+    # half their offered rate (floats halve exactly) — the boundary
+    bw = 2 * spec.nbytes / 1e-6 / 1e9
+    sched = ContinuousBatchingScheduler(
+        pool, SchedulerConfig(max_batch=8, max_prefill_per_iter=8,
+                              link_efficiency_floor=0.5,
+                              gather_period_s=1e-6),
+        topology=_narrow_link_topology(bw))
+    for i in range(3):
+        sched.submit(_req(i, plen=6))
+    admitted = sched.admit()
+    # 1st flows free; 2nd lands exactly at the 50% floor (admitted);
+    # 3rd would drop everyone to 1/3 < floor (deferred)
+    assert [r.rid for r in admitted] == [0, 1]
+    assert sched.link_deferrals == 1
+
+
+def test_admission_skips_link_budget_for_fast_resident_default():
+    """A pool whose default kind IS the fast kind gathers nothing over
+    the topology: admission must not synthesize a zero flow."""
+    pool = _meta_pool(32, fast_budget=32, default_kind=FAST_KIND)
+    sched = ContinuousBatchingScheduler(
+        pool, SchedulerConfig(max_batch=8, max_prefill_per_iter=8,
+                              link_efficiency_floor=0.9,
+                              gather_period_s=1e-6),
+        topology=_narrow_link_topology(0.001))     # starved link
+    for i in range(4):
+        sched.submit(_req(i))
+    assert len(sched.admit()) == 4
+    assert sched.link_deferrals == 0
+
+
+# ===================================================================== #
+# Violation-predictive admission + preemption (repro.obs.qos)           #
+# ===================================================================== #
+class _StubPredictor:
+    """Predictor double: violation iff total offered exceeds a limit."""
+
+    def __init__(self, limit_GBps):
+        self.limit = limit_GBps
+        self.excludes = []
+
+    def violations(self, flows, exclude=None):
+        self.excludes.append(exclude)
+        total = sum(f.offered_GBps for f in flows)
+        return {"victim": (total, self.limit)} if total > self.limit \
+            else {}
+
+    def admission_ok(self, flows, exclude=None):
+        return not self.violations(flows, exclude)
+
+
+def _qos_sched(limit_GBps, **cfg_kw):
+    from repro.serving.kv_pool import KVBlockSpec
+    spec = KVBlockSpec(n_units=2, n_attn=2, block_tokens=4, n_kv=2,
+                       head_dim=8)                 # 1 KiB per block
+    pool = PagedKVPool(64, 4, spec=spec, default_kind="pinned_host",
+                       tenant="antagonist")
+    pred = _StubPredictor(limit_GBps)
+    sched = ContinuousBatchingScheduler(
+        pool, SchedulerConfig(max_batch=8, max_prefill_per_iter=8,
+                              gather_period_s=1e-6, **cfg_kw),
+        topology=_narrow_link_topology(100.0), predictor=pred)
+    return sched, pool, pred
+
+
+def test_qos_admission_defers_on_predicted_violation():
+    # each request gathers ~2 GB/s; the stub allows 4.5 GB/s total
+    sched, pool, pred = _qos_sched(4.5)
+    for i in range(4):
+        sched.submit(_req(i, plen=6))
+    admitted = sched.admit()
+    assert [r.rid for r in admitted] == [0, 1]
+    assert sched.qos_deferrals == 1
+    # the predictor replaces the floor entirely
+    assert sched.link_deferrals == 0
+    # own stale blame-book snapshot is excluded (live flows passed in)
+    assert set(pred.excludes) == {"antagonist"}
+
+
+def test_qos_preemption_sheds_slow_holders_until_forecast_clears():
+    sched, pool, pred = _qos_sched(10.0)
+    for prio, rid in ((1.0, 0), (0.0, 1), (2.0, 2)):
+        r = _req(rid, plen=6)
+        r.priority = prio
+        sched.submit(r)
+    admitted = sched.admit()
+    assert len(admitted) == 3
+    for r in admitted:
+        pool.alloc(r.rid, 2)         # slow-resident: 3 x ~2 GB/s live
+    # the SLO forecast tightens: only ~2 GB/s of gather is tolerable
+    pred.limit = 2.5
+    victims = sched.preempt_predicted_violation()
+    # lowest priority evicted first, then the next, until it clears
+    assert [v.rid for v in victims] == [1, 0]
+    assert sched.slo_preemptions == 2
+    assert [r.rid for r in sched.running] == [2]
+    # evicted requests lose their blocks and rejoin the queue front
+    assert pool.used_block_count() == 2
+    assert [r.rid for r in sched.waiting] == [0, 1]
+    # a second call is a no-op (forecast already clear)
+    assert sched.preempt_predicted_violation() == []
+
+
+def test_qos_preemption_noop_without_slow_holders():
+    sched, pool, pred = _qos_sched(10.0)
+    sched.submit(_req(0, plen=6))
+    (r,) = sched.admit()
+    pool.alloc(r.rid, 2, kind=FAST_KIND)   # all fast: no link traffic
+    pred.limit = 0.0
+    # running flows are empty (nothing slow-resident) -> nothing to shed
+    assert sched.preempt_predicted_violation() == []
+    assert sched.slo_preemptions == 0

@@ -98,6 +98,111 @@ def test_disjoint_flows_do_not_interfere():
 
 
 # ---------------------------------------------------------------------- #
+# class-weighted (asymmetric) interference                                #
+# ---------------------------------------------------------------------- #
+def test_interference_matrix_asymmetry_and_kind_scaling():
+    from repro.topology import InterferenceMatrix
+    m = InterferenceMatrix()
+    # same-class pairs always price at 1.0 (symmetric back-compat)
+    assert m.weight("upi", "read", "read") == 1.0
+    assert m.weight("cxl", "write", "write") == 1.0
+    # writer-on-reader hits far harder than reader-on-writer
+    assert m.weight("upi", "read", "write") == pytest.approx(1.6)
+    assert m.weight("upi", "write", "read") == pytest.approx(0.85)
+    # CXL controllers amplify the asymmetry; local links damp it
+    assert m.weight("cxl", "read", "write") > m.weight(
+        "upi", "read", "write") > m.weight("local", "read", "write")
+    # calibration pair scales multiply on top, floored at 0.05
+    scaled = m.with_pair_scales({("upi", "read", "write"): 1.5})
+    assert scaled.weight("upi", "read", "write") == pytest.approx(2.4)
+    assert scaled.weight("upi", "write", "read") == pytest.approx(0.85)
+    floored = m.with_pair_scales({("upi", "write", "read"): 1e-9})
+    assert floored.weight("upi", "write", "read") == 0.05
+
+
+def test_contention_write_class_degrades_reader_asymmetrically():
+    g = build_topology("far-socket").graph   # UPI: 230 GB/s
+    reader = Flow("socket0", "numa1", 100.0, cls="read", tenant="v")
+    # 100 GB/s of co-located readers: total 200 < 230, no sharing
+    r_read, _ = g.contended_flows(
+        [reader, Flow("socket0", "numa1", 100.0, cls="read")])
+    assert r_read.achieved_GBps == pytest.approx(100.0)
+    # the same offered load as writers weighs 1.6x on the reader's
+    # queue (260 > 230): the reader is squeezed...
+    r_vic, r_agg = g.contended_flows(
+        [reader, Flow("socket0", "numa1", 100.0, cls="write")])
+    assert r_vic.achieved_GBps == pytest.approx(230 * 100 / 260)
+    assert r_vic.raw_rho == pytest.approx(260 / 230)
+    # ...while the writer's own view (100 + 0.85*100 = 185 < 230)
+    # stays healthy — asymmetry, not fair share
+    assert r_agg.achieved_GBps == pytest.approx(100.0)
+    assert r_agg.raw_rho < 1.0
+    # and the reader's loaded latency exceeds the all-reader case
+    assert r_vic.latency_ns > r_read.latency_ns
+
+
+def test_all_read_flows_reproduce_symmetric_fair_share():
+    """Legacy call sites (no cls) must price exactly as before the
+    interference matrix existed."""
+    g = build_topology("far-socket").graph
+    flows = [Flow("socket0", "numa1", 200.0),
+             Flow("socket0", "cxl0", 100.0)]
+    r1, r2 = g.contended_flows(flows)
+    assert r1.achieved_GBps == pytest.approx(230 * 200 / 300)
+    assert r2.bottleneck == ("cxl0", "socket1")
+    # the new surfacing fields report the (pre-existing) latency clamp
+    assert r1.clamped and r1.raw_rho == pytest.approx(300 / 230)
+
+
+def test_link_saturation_counted_and_traced():
+    from repro.obs import TraceRecorder
+    g = build_topology("far-socket").graph
+    tracer = TraceRecorder(clock=lambda: 0.0)
+    flows = [Flow("socket0", "numa1", 150.0, cls="read"),
+             Flow("socket0", "numa1", 150.0, cls="write")]
+    res = g.contended_flows(flows, tracer=tracer)
+    # reader rho = (150 + 1.6*150)/230 > 0.95: clamp engages
+    assert res[0].clamped and res[0].raw_rho > 0.95
+    assert g.link_saturations[("socket0", "socket1")] == 1
+    evs = tracer.filter(name="link.saturated")
+    assert len(evs) == 1                     # once per link per call
+    assert evs[0].args["link"] == "socket0-socket1"
+    assert evs[0].args["kind"] == "upi"
+    assert evs[0].args["raw_rho"] > 0.95
+    # a second call bumps the counter again
+    g.contended_flows(flows)
+    assert g.link_saturations[("socket0", "socket1")] == 2
+    # an uncontended call records nothing
+    g.contended_flows([Flow("socket0", "numa0", 10.0)])
+    assert len(g.link_saturations) == 1
+
+
+def test_link_loads_attribute_per_tenant_and_class():
+    g = build_topology("far-socket").graph
+    loads = g.link_loads([
+        Flow("socket0", "numa1", 60.0, cls="read", tenant="a"),
+        Flow("socket0", "numa1", 40.0, cls="write", tenant="a"),
+        Flow("socket0", "cxl0", 30.0, cls="read", tenant="b"),
+    ])
+    upi = loads[("socket0", "socket1")]
+    assert upi[("a", "read")] == pytest.approx(60.0)
+    assert upi[("a", "write")] == pytest.approx(40.0)
+    assert upi[("b", "read")] == pytest.approx(30.0)   # cxl path crosses UPI
+    assert loads[("cxl0", "socket1")] == {("b", "read"): pytest.approx(30.0)}
+
+
+def test_rebuilt_graph_carries_interference_matrix():
+    from repro.topology import InterferenceMatrix
+    g = build_topology("far-socket").graph
+    g.interference = InterferenceMatrix().with_pair_scales(
+        {("upi", "read", "write"): 2.0})
+    rg = g.rebuilt({("socket0", "socket1"): (87.0, 115.0)})
+    assert rg.interference.weight("upi", "read", "write") == \
+        pytest.approx(3.2)
+    assert rg.links[("socket0", "socket1")].bw_GBps == 115.0
+
+
+# ---------------------------------------------------------------------- #
 # distance-aware costing (acceptance criteria)                            #
 # ---------------------------------------------------------------------- #
 def _cxl_resident_cost(name: str) -> float:
