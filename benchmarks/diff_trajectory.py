@@ -51,6 +51,12 @@ HEADLINE = {
         "predictive QoS preserves the victim tail the flat floor blows",
     "prediction.accuracy.violation":
         "audited tail-violation forecasts land within tolerance",
+    "moe.fused_speedup":
+        "fused tiered-gather touches fewer expert bytes than staging",
+    "moe.prefetch_hit_ratio":
+        "predicted-phase expert prefetches are routed to while fast",
+    "moe.predictive_speedup":
+        "predictive expert residency beats LRU on recurrent routing",
 }
 
 

@@ -64,4 +64,30 @@ def run():
     rows.append(("roofline.cells_ok.singlepod", len(cells), "cells"))
     rows.append(("roofline.cells_ok.multipod",
                  len(load_cells("multipod")), "cells"))
+    rows.extend(tiered_gather_rows())
     return rows
+
+
+def tiered_gather_rows():
+    """Analytic memory terms for the fused tiered-gather decode step.
+
+    The staged path moves every live KV byte and every routed expert
+    byte three times (tier-pool read, staging write, staging read); the
+    fused kernel's block-index table reads each once.  Constants model
+    a decode step of a Qwen3-MoE-ish cell: batch 32, 4k context, GQA
+    2 KV heads x hd 128, 8/128 routed experts of d_ff 768 at bf16.
+    """
+    B, S, KV, hd = 32, 4096, 2, 128
+    topk, d_model, d_ff = 8, 2048, 768
+    kv_bytes = 2 * B * S * KV * hd * 2            # K+V live, bf16
+    moe_bytes = B * topk * 3 * d_model * d_ff * 2  # gate+up+down, bf16
+    fused = kv_bytes + moe_bytes
+    staged = 3 * fused
+    return [
+        ("roofline.tiered.staged_gather_gib", staged / 2**30,
+         "decode-step KV+expert bytes, gather-then-compute"),
+        ("roofline.tiered.fused_gather_gib", fused / 2**30,
+         "decode-step KV+expert bytes, fused block-table path"),
+        ("roofline.tiered.bytes_ratio", staged / fused,
+         "staged / fused decode-step memory traffic"),
+    ]

@@ -18,6 +18,8 @@ Prints ``name,value,derived`` CSV.  Modules:
                          on a perturbed testbed vs the builder defaults
   noisy_neighbor_bench   interference-class QoS: blame attribution +
                          violation-predictive admission vs the flat floor
+  moe_expert_bench       MoE expert tier residency: predictive expert
+                         prefetch vs LRU on recurrent routing phases
   kernel_bench           Pallas kernel microbenches
   roofline               per-cell roofline from the dry-run artifacts
 
@@ -65,6 +67,7 @@ MODULES = [
     "multi_tenant_bench",
     "calibration_bench",
     "noisy_neighbor_bench",
+    "moe_expert_bench",
     "kernel_bench",
     "roofline",
 ]

@@ -3,6 +3,10 @@
 fused_adam       -- ZeRO-Offload optimizer hot loop (Sec. IV-A)
 flash_attention  -- blocked prefill attention
 decode_attention -- GQA decode over (tier-resident) KV cache (Sec. IV-B)
+tiered_gather    -- fused tiered-gather decode: paged-KV attention and
+                    top-k expert FFN indexed straight into pool layouts
+                    via scalar-prefetched block/expert tables (no
+                    contiguous staging copy)
 
 Each kernel: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper), ref.py (pure-jnp oracle used by the allclose tests).

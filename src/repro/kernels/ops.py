@@ -13,6 +13,7 @@ import jax
 from . import decode_attention as _dec
 from . import flash_attention as _fa
 from . import fused_adam as _adam
+from . import tiered_gather as _tg
 
 
 def _interpret() -> bool:
@@ -38,3 +39,18 @@ def decode_attention(q, k_cache, v_cache, kv_len, *, block_k: int = 256
                      ) -> jax.Array:
     return _dec.decode_attention(q, k_cache, v_cache, kv_len,
                                  block_k=block_k, interpret=_interpret())
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tbl, kv_len,
+                           k_new, v_new, *, block_tokens: int
+                           ) -> jax.Array:
+    return _tg.paged_decode_attention(q, k_pool, v_pool, block_tbl,
+                                      kv_len, k_new, v_new,
+                                      block_tokens=block_tokens,
+                                      interpret=_interpret())
+
+
+def fused_expert_ffn(x, w_gate, w_up, w_down, expert_ids, expert_wts
+                     ) -> jax.Array:
+    return _tg.fused_expert_ffn(x, w_gate, w_up, w_down, expert_ids,
+                                expert_wts, interpret=_interpret())

@@ -56,3 +56,50 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhk,bkhd->bhd", p, vf).astype(q.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tbl: jax.Array,
+                           kv_len: jax.Array, k_new: jax.Array,
+                           v_new: jax.Array) -> jax.Array:
+    """Gather-then-compute oracle for the fused tiered-gather kernel.
+
+    Stages the pool blocks into a contiguous (B, nb*bt, KV, hd) cache
+    (``jnp.take`` over the block table — the copy the fused kernel
+    eliminates), scatters the new token at position ``kv_len``, and
+    runs plain decode attention over ``kv_len + 1`` positions.
+    """
+    B = q.shape[0]
+    bt = k_pool.shape[1]
+    nb = block_tbl.shape[1]
+    KV, hd = k_pool.shape[2], k_pool.shape[3]
+    gather = lambda pool: jnp.take(pool, block_tbl, axis=0).reshape(
+        B, nb * bt, KV, hd)
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+    barange = jnp.arange(B)
+    k_cache = gather(k_pool).at[barange, kv_len].set(
+        k_new.astype(k_pool.dtype))
+    v_cache = gather(v_pool).at[barange, kv_len].set(
+        v_new.astype(v_pool.dtype))
+    return decode_attention(q, k_cache, v_cache,
+                            (kv_len + 1)[:, None, None])
+
+
+def expert_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+               w_down: jax.Array, expert_ids: jax.Array,
+               expert_wts: jax.Array) -> jax.Array:
+    """Gather-then-compute oracle for the fused expert FFN.
+
+    Materializes the routed experts' weights — (B, K, D, F) selections
+    out of the (E, D, F) store, the staging copy the fused kernel
+    skips — then applies the weighted silu FFN per (token, slot).
+    """
+    xf = x.astype(jnp.float32)
+    wg = jnp.take(w_gate, expert_ids, axis=0).astype(jnp.float32)
+    wu = jnp.take(w_up, expert_ids, axis=0).astype(jnp.float32)
+    wd = jnp.take(w_down, expert_ids, axis=0).astype(jnp.float32)
+    h = jax.nn.silu(jnp.einsum("bd,bkdf->bkf", xf, wg)) \
+        * jnp.einsum("bd,bkdf->bkf", xf, wu)
+    out = jnp.einsum("bkf,bkfd->bkd", h, wd)
+    return jnp.einsum("bk,bkd->bd", expert_wts.astype(jnp.float32),
+                      out).astype(x.dtype)

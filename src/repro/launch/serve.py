@@ -97,7 +97,12 @@ def run_continuous(args, cfg, params) -> None:
         slo_p95_ttft_s=args.slo_p95_ttft,
         slo_p95_decode_s=args.slo_p95_decode,
         slo_p99_decode_s=args.slo_p99_decode,
-        qos=args.qos)
+        slo_p999_decode_s=args.slo_p999_decode,
+        slo_window=args.slo_window,
+        qos=args.qos,
+        fused_gather=args.fused_gather,
+        expert_policy=args.expert_policy,
+        expert_fast_fraction=args.expert_fast_frac)
     eng = ServingEngine(cfg, params, sv)
     rs = np.random.RandomState(0)
     lens = [args.prompt_len, max(args.prompt_len // 2, 4)]
@@ -147,11 +152,20 @@ def run_continuous(args, cfg, params) -> None:
           + (f" prefetches={int(t['prefetches'])} "
              f"budget_preemptions={int(t['budget_preemptions'])}"
              if args.predictive else ""))
+    if args.expert_policy:
+        print(f"experts: policy={args.expert_policy} "
+              f"fast={int(t['expert.fast_residents'])} "
+              f"hit_ratio={t.get('expert.fast_hit_ratio', 0.0):.2f} "
+              f"promoted={int(t['expert.promoted'])} "
+              f"demoted={int(t['expert.demoted'])}"
+              + (f" prefetch_hit_ratio="
+                 f"{t['expert.prefetch_hit_ratio']:.2f}"
+                 if "expert.prefetch_hit_ratio" in t else ""))
     if rep.slo.get("targets"):
         for tgt in rep.slo["targets"]:
             rate = tgt.get("violation_rate")
             print(f"slo: {tgt['metric']} "
-                  f"p{int(tgt['quantile']*100)} <= "
+                  f"p{round(tgt['quantile']*100, 4):g} <= "
                   f"{tgt['threshold_s']*1e3:.1f} ms -> "
                   f"{tgt['violations']} violation(s) over "
                   f"{rep.slo['checks']} check(s)"
@@ -282,6 +296,30 @@ def main(argv=None):
                     help="live SLO target: p99 inter-token decode "
                          "latency threshold in seconds "
                          "(continuous only)")
+    ap.add_argument("--slo-p999-decode", type=float, default=None,
+                    help="live SLO target: p99.9 inter-token decode "
+                         "latency threshold in seconds; the monitor "
+                         "window auto-grows to hold the 1/(1-q) "
+                         "warmup (continuous only)")
+    ap.add_argument("--slo-window", type=int, default=512,
+                    help="rolling SLO window size in samples "
+                         "(continuous only)")
+    ap.add_argument("--fused-gather", action="store_true",
+                    help="fused tiered-gather decode: attention (and "
+                         "MoE expert FFN) read blocks straight from "
+                         "the pooled KV/expert layout via scalar-"
+                         "prefetched index tables — no per-iteration "
+                         "staging copy (continuous only)")
+    ap.add_argument("--expert-policy", default=None,
+                    choices=["lru", "predictive"],
+                    help="MoE expert tier residency: experts become "
+                         "tiered objects with routing-driven heat; "
+                         "predictive additionally prefetches the "
+                         "predicted next phase's hot experts "
+                         "(continuous + MoE arch only)")
+    ap.add_argument("--expert-fast-frac",
+                    type=_fraction("--expert-fast-frac"), default=0.25,
+                    help="share of experts that may be fast-resident")
     ap.add_argument("--qos", action="store_true",
                     help="interference-class QoS plane: class-tagged "
                          "flow attribution (blame ledger naming the "
@@ -314,11 +352,16 @@ def main(argv=None):
                           ("--audit-out", args.audit_out),
                           ("--slo-p95-ttft", args.slo_p95_ttft),
                           ("--slo-p95-decode", args.slo_p95_decode),
-                          ("--slo-p99-decode", args.slo_p99_decode)):
+                          ("--slo-p99-decode", args.slo_p99_decode),
+                          ("--slo-p999-decode", args.slo_p999_decode),
+                          ("--expert-policy", args.expert_policy)):
             if val is not None:
                 ap.error(f"{flag} only takes effect with --scheduler "
                          "continuous (the observability plane "
                          "instruments the paged engine)")
+    if args.fused_gather and args.scheduler != "continuous":
+        ap.error("--fused-gather only takes effect with --scheduler "
+                 "continuous (it rewires the paged decode path)")
     if args.qos:
         if args.scheduler != "continuous":
             ap.error("--qos only takes effect with --scheduler "

@@ -24,6 +24,12 @@ import numpy as np
 __all__ = ["SLOTarget", "SLOMonitor", "LagRatioMonitor"]
 
 
+def _qkey(q: float) -> str:
+    """'95' for 0.95, '99.9' for 0.999 — no collision at extreme tails
+    (int rounding would alias p99.9 to p100)."""
+    return f"{round(q * 100, 4):g}"
+
+
 @dataclass(frozen=True)
 class SLOTarget:
     """Threshold on a quantile of a latency stream (seconds)."""
@@ -34,7 +40,20 @@ class SLOTarget:
 
     @property
     def key(self) -> str:
-        return f"{self.metric}.p{int(round(self.quantile * 100))}"
+        return f"{self.metric}.p{_qkey(self.quantile)}"
+
+    def warmup_samples(self, min_samples: int) -> int:
+        """Samples the window must hold before this target can violate.
+
+        Extreme-tail targets (beyond p99) need at least 1/(1-q) samples
+        for the empirical quantile to be a tail at all — a 50-sample
+        "p99.9" is its max, an arrival artifact.  p95/p99 targets keep
+        the caller's ``min_samples`` contract unchanged.
+        """
+        if self.quantile > 0.99:
+            return max(min_samples,
+                       int(math.ceil(1.0 / (1.0 - self.quantile))))
+        return min_samples
 
 
 class SLOMonitor:
@@ -46,7 +65,7 @@ class SLOMonitor:
     violations deterministically.
     """
 
-    QUANTILES = (0.50, 0.95, 0.99)
+    QUANTILES = (0.50, 0.95, 0.99, 0.999)
 
     def __init__(self, targets: Optional[List[SLOTarget]] = None,
                  window: int = 256,
@@ -54,7 +73,12 @@ class SLOMonitor:
                  registry=None, tracer=None,
                  min_samples: int = 4) -> None:
         self.targets = list(targets or [])
-        self.window = int(window)
+        # the window must be able to hold every target's warmup — a
+        # p99.9 target inside a 256-sample window could never become
+        # eligible (and its "p99.9" would just be the window max)
+        need = max((t.warmup_samples(max(int(min_samples), 1))
+                    for t in self.targets), default=0)
+        self.window = max(int(window), need)
         self.clock = clock if clock is not None else (lambda: 0.0)
         self.registry = registry
         self.tracer = tracer
@@ -111,14 +135,15 @@ class SLOMonitor:
                 continue
             arr = np.asarray(stream, dtype=np.float64)
             for q in self.QUANTILES:
-                self.last_quantiles[f"{metric}.p{int(round(q * 100))}"] = \
+                self.last_quantiles[f"{metric}.p{_qkey(q)}"] = \
                     float(np.percentile(arr, q * 100.0))
         for t in self.targets:
             value = self.last_quantiles.get(t.key)
             if value is None:
                 continue
             stream = self._streams.get(t.metric)
-            if stream is None or len(stream) < self.min_samples:
+            if stream is None or \
+                    len(stream) < t.warmup_samples(self.min_samples):
                 continue               # warmup: too few samples to judge
             self.eligible_checks[t.key] += 1
             if value > t.threshold_s:

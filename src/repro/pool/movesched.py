@@ -34,13 +34,25 @@ scheduler collects all tenants' ``PlacementDelta``s for one round and:
      ``MigrationStats`` and invoking each submission's completion
      callback with the realized ``(move, done_bytes)`` list so a
      deferring ``AdaptiveReplanner`` adopts the residency that really
-     resulted.
+     resulted;
+  6. **preempts** — a submission whose ``submit`` lands *mid-round*
+     (reentrantly, from a client's ``move_fn``) with strictly higher
+     priority than the move about to execute interrupts the round:
+     its moves are priced and spliced ahead of everything remaining,
+     and the interrupted tenant's copy resumes afterwards.  Long
+     low-priority copies yield at block granularity — per queued
+     ``BlockMove``, or finer when the submitter opted into
+     ``chunk_bytes`` splitting (declaring its ``move_fn`` safe to
+     call with partial byte counts).  ``movesched.preemptions``
+     counts the interruptions; each emits a ``movesched.preempt``
+     trace event.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 from ..core.migration import (BlockMove, MigrationExecutor, MigrationStats,
                               PlacementDelta)
@@ -59,6 +71,7 @@ class ScheduledMove:
     start_s: float = 0.0
     finish_s: float = 0.0
     done_bytes: int = 0
+    orig_move: Optional[BlockMove] = None  # pre-chunking move (if split)
 
 
 @dataclasses.dataclass
@@ -94,6 +107,7 @@ class _Submission:
     on_done: Optional[Callable[[List[Tuple[BlockMove, int]]], None]]
     stats: Optional[MigrationStats]
     order: int                     # submission sequence (stable ties)
+    chunk_bytes: Optional[int] = None  # split long copies (opt-in)
 
 
 class MoveScheduler:
@@ -109,8 +123,10 @@ class MoveScheduler:
         self.audit = None              # optional obs.PredictionLedger
         self.calibrator = None         # optional obs.CostModelCalibrator
         self.rounds: List[MoveRound] = []
+        self.preemptions = 0           # mid-round higher-priority splices
         self._pending: List[_Submission] = []
         self._rounds_audited = 0
+        self._order_seq = 0
 
     # ------------------------------------------------------------------ #
     @property
@@ -127,13 +143,21 @@ class MoveScheduler:
                move_fn: Optional[Callable] = None,
                priority: Optional[float] = None,
                on_done: Optional[Callable] = None,
-               stats: Optional[MigrationStats] = None) -> None:
+               stats: Optional[MigrationStats] = None,
+               chunk_bytes: Optional[int] = None) -> None:
         """Queue one tenant's delta for the next ``flush``.
 
         ``priority`` defaults to the tenant's ledger weight (1.0 when
         neither is known); ``move_fn`` is the tenant's physical client
         hook (None = accounting only); ``on_done`` receives the
         realized ``[(BlockMove, done_bytes)]`` list after execution.
+        ``chunk_bytes`` opts this tenant's long copies into sub-block
+        splitting — extra preemption points mid-copy — and asserts its
+        ``move_fn`` accepts partial byte counts for one object.
+
+        Submitting from inside a ``move_fn`` while a round executes is
+        legal: a strictly-higher-priority delta preempts the round
+        (see ``flush``), anything else waits for the next one.
         """
         if priority is None:
             if self.ledger is not None and tenant in self.ledger.tenants:
@@ -142,7 +166,9 @@ class MoveScheduler:
                 priority = 1.0
         self._pending.append(_Submission(
             tenant, delta, move_fn, float(priority), on_done, stats,
-            len(self._pending)))
+            self._order_seq,
+            int(chunk_bytes) if chunk_bytes else None))
+        self._order_seq += 1
 
     # ------------------------------------------------------------------ #
     @staticmethod
@@ -176,24 +202,72 @@ class MoveScheduler:
     def _is_demotion(self, m: BlockMove, rank: Dict[str, int]) -> bool:
         return rank.get(m.dst, 0) > rank.get(m.src, 0)
 
+    def _build_sms(self, sub: _Submission) -> Tuple[List[ScheduledMove],
+                                                    int]:
+        """Coalesce one submission and price its scheduled moves,
+        splitting long copies into ``chunk_bytes`` pieces when the
+        tenant opted in (each piece is a preemption point)."""
+        ex = self.executor
+        moves, netted = self._coalesce(sub.delta)
+        sms: List[ScheduledMove] = []
+        for m in moves:
+            pieces = [m]
+            if sub.chunk_bytes and m.nbytes > sub.chunk_bytes:
+                pieces = []
+                left = m.nbytes
+                while left > 0:
+                    nb = min(left, sub.chunk_bytes)
+                    pieces.append(BlockMove(m.obj, m.src, m.dst, nb))
+                    left -= nb
+            for p in pieces:
+                sms.append(ScheduledMove(sub.tenant, p, sub.priority,
+                                         ex.move_resources(p),
+                                         ex.move_cost_s(p), orig_move=m))
+        return sms, netted
+
+    def _fluid(self, scheduled: List[ScheduledMove]) -> float:
+        """Fluid list schedule: each move's traffic queues behind all
+        earlier-scheduled traffic on every resource it occupies."""
+        busy: Dict[object, float] = {}
+        makespan = 0.0
+        for sm in scheduled:
+            res_time, overhead = self.executor.move_resource_times(sm.move)
+            start = max((busy.get(r, 0.0) for r in res_time), default=0.0)
+            finish = start + overhead
+            for r, t in res_time.items():
+                busy[r] = max(busy.get(r, 0.0), start) + t
+                finish = max(finish, busy[r] + overhead)
+            sm.start_s = start
+            sm.finish_s = finish
+            makespan = max(makespan, finish)
+        return makespan
+
     def flush(self, epoch: int = 0) -> MoveRound:
-        """Coalesce, order, schedule, and execute everything pending."""
+        """Coalesce, order, schedule, and execute everything pending.
+
+        Submissions landing *during* execution (from a client's
+        ``move_fn``) with strictly higher priority than the move about
+        to run preempt the round: their moves splice in ahead of
+        everything remaining and the interrupted copy resumes after.
+        Lower/equal-priority mid-round arrivals wait for the next
+        flush.
+        """
         ex = self.executor
         rank = ex.tier_rank()
+        # snapshot: reentrant submits during execution land in
+        # self._pending, where the preemption check watches for them
+        pending, self._pending = self._pending, []
         scheduled: List[ScheduledMove] = []
         per_sub: List[Tuple[_Submission, List[ScheduledMove]]] = []
         coalesced = 0
         independent_s = 0.0
-        for sub in self._pending:
-            moves, netted = self._coalesce(sub.delta)
+        for sub in pending:
+            sms, netted = self._build_sms(sub)
             coalesced += netted
             # uncoordinated baseline: each tenant executes its own
             # (un-netted) delta as if alone, one tenant after another
             # on the shared executor — what independent replanners do
             independent_s += ex.cost_s(sub.delta)
-            sms = [ScheduledMove(sub.tenant, m, sub.priority,
-                                 ex.move_resources(m), ex.move_cost_s(m))
-                   for m in moves]
             scheduled.extend(sms)
             per_sub.append((sub, sms))
 
@@ -205,20 +279,7 @@ class MoveScheduler:
             0 if self._is_demotion(sm.move, rank) else 1,
             order_of[id(sm)]))
 
-        # fluid schedule: each move's traffic queues behind all
-        # earlier-scheduled traffic on every resource it occupies
-        busy: Dict[object, float] = {}
-        makespan = 0.0
-        for sm in scheduled:
-            res_time, overhead = ex.move_resource_times(sm.move)
-            start = max((busy.get(r, 0.0) for r in res_time), default=0.0)
-            finish = start + overhead
-            for r, t in res_time.items():
-                busy[r] = max(busy.get(r, 0.0), start) + t
-                finish = max(finish, busy[r] + overhead)
-            sm.start_s = start
-            sm.finish_s = finish
-            makespan = max(makespan, finish)
+        makespan = self._fluid(scheduled)
 
         # audit the fluid schedule's promised makespan against the wall
         # time the batch really took — only when the clients perform
@@ -232,24 +293,75 @@ class MoveScheduler:
                                epoch=epoch, moves=len(scheduled))
             wall_t0 = time.perf_counter()
 
-        # execute in scheduled order through each tenant's client
-        done_by_sub: Dict[int, List[Tuple[BlockMove, int]]] = {}
+        # execute in scheduled order through each tenant's client,
+        # yielding to higher-priority mid-round arrivals between moves
+        done_by_sub: Dict[int, Dict[int, List]] = {}
         sub_of = {id(sm): sub for sub, sms in per_sub for sm in sms}
-        for sm in scheduled:
+        queue: Deque[ScheduledMove] = deque(scheduled)
+        executed: List[ScheduledMove] = []
+        preempted = False
+        while queue:
+            sm = queue[0]
+            urgent = [s for s in self._pending if s.priority > sm.priority]
+            if urgent:
+                preempted = True
+                self.preemptions += 1
+                new_sms: List[ScheduledMove] = []
+                for s in sorted(urgent,
+                                key=lambda s: (-s.priority, s.order)):
+                    self._pending.remove(s)
+                    sms, netted = self._build_sms(s)
+                    coalesced += netted
+                    independent_s += ex.cost_s(s.delta)
+                    per_sub.append((s, sms))
+                    for nsm in sms:
+                        sub_of[id(nsm)] = s
+                    new_sms.extend(sms)
+                new_sms.sort(key=lambda x: (
+                    -x.priority,
+                    0 if self._is_demotion(x.move, rank) else 1))
+                if self.tracer is not None:
+                    self.tracer.event(
+                        "movesched.preempt", cat="movesched", epoch=epoch,
+                        tenant=sm.tenant, obj=sm.move.obj,
+                        priority=sm.priority,
+                        urgent_tenants=sorted({s.tenant for s in urgent}),
+                        urgent_priority=max(s.priority for s in urgent),
+                        urgent_moves=len(new_sms),
+                        resumed_moves=len(queue))
+                queue.extendleft(reversed(new_sms))
+                continue
+            queue.popleft()
             sub = sub_of[id(sm)]
             m = sm.move
             done = (sub.move_fn(m.obj, m.src, m.dst, m.nbytes)
                     if sub.move_fn is not None else m.nbytes)
             sm.done_bytes = max(int(done), 0)
-            done_by_sub.setdefault(sub.order, []).append(
-                (m, sm.done_bytes))
+            executed.append(sm)
+            # chunked copies report once per original move to on_done,
+            # with their pieces' realized bytes summed
+            orig = sm.orig_move if sm.orig_move is not None else m
+            agg = done_by_sub.setdefault(sub.order, {})
+            rec = agg.get(id(orig))
+            first_progress = rec is None or rec[1] == 0
+            if rec is None:
+                agg[id(orig)] = [orig, sm.done_bytes]
+            else:
+                rec[1] += sm.done_bytes
             stats = sub.stats
             if stats is not None and sm.done_bytes > 0:
                 stats.migrated_bytes += sm.done_bytes
-                if self._is_demotion(m, rank):
-                    stats.demoted += 1
-                elif rank.get(m.dst, 0) < rank.get(m.src, 0):
-                    stats.promoted += 1
+                # count each object's tier change once, not per chunk
+                if first_progress:
+                    if self._is_demotion(m, rank):
+                        stats.demoted += 1
+                    elif rank.get(m.dst, 0) < rank.get(m.src, 0):
+                        stats.promoted += 1
+        scheduled = executed
+        if preempted:
+            # re-time the schedule over the order that actually ran so
+            # the round record and trace spans show the spliced batch
+            makespan = self._fluid(scheduled)
         if audited:
             realized = time.perf_counter() - wall_t0
             touched = sorted({t for sm in scheduled
@@ -263,12 +375,14 @@ class MoveScheduler:
 
         for sub, _ in per_sub:
             if sub.on_done is not None:
-                sub.on_done(done_by_sub.get(sub.order, []))
+                sub.on_done([(orig, done) for orig, done in
+                             done_by_sub.get(sub.order, {}).values()])
 
         round_ = MoveRound(epoch, scheduled, makespan, independent_s,
                            coalesced)
         self.rounds.append(round_)
-        self._pending = []
+        # NOT cleared: lower/equal-priority mid-round arrivals stay
+        # queued for the next flush (the snapshot emptied the rest)
         if self.tracer is not None:
             now = float(self.tracer.clock())
             self.tracer.event(
@@ -304,4 +418,5 @@ class MoveScheduler:
             "saved_s": float(sum(r.saved_s for r in self.rounds)),
             "coalesced_bytes": float(sum(r.coalesced_bytes
                                          for r in self.rounds)),
+            "preemptions": float(self.preemptions),
         }

@@ -6,10 +6,12 @@ promoting hot blocks under a capacity budget (tiering), a
 continuous-batching scheduler with admission control and
 preemption-by-recompute (scheduler), a paged decode engine over the
 Pallas decode-attention kernel (engine), and request/pool/migration
-metrics (metrics).
+metrics (metrics), and MoE expert weights as tiered objects with
+routing-driven heat and predictive prefetch (expert_pool).
 """
 from .engine import (check_paged_support, kind_tiers, ServingConfig,
                      ServingEngine, ServingReport)
+from .expert_pool import ExpertCounters, ExpertPool
 from .kv_pool import (FAST_KIND, KVBlock, KVBlockSpec, PagedKVPool,
                       PoolExhausted, spec_from_config, TieredKVCache)
 from .metrics import percentile, PoolSample, RequestMetrics, ServingMetrics
@@ -28,4 +30,5 @@ __all__ = [
     "PoolSample", "RequestMetrics", "ServingMetrics", "percentile",
     "ServingConfig", "ServingEngine", "ServingReport",
     "check_paged_support", "kind_tiers",
+    "ExpertCounters", "ExpertPool",
 ]

@@ -144,6 +144,103 @@ def _paged_decode(cfg: ModelConfig, block_k: int, params, tokens,
     return logits, new_k, new_v
 
 
+def _fused_unit_fwd(cfg: ModelConfig, up, x, k_pool, v_pool, block_tbl,
+                    lengths, block_tokens: int):
+    """One repeating unit on the fused tiered-gather path.
+
+    x: (B, 1, D); k_pool/v_pool: (n_attn, num_blocks, bt, KV, hd) — the
+    pool's *resident* layout, not a per-sequence staging copy; block_tbl
+    (B, nb) int32 names each sequence's blocks in pool order.  Attention
+    reads blocks straight from the pool via the scalar-prefetched table
+    (kernels.tiered_gather) and folds the step's K/V in-kernel, so the
+    gather+scatter the unfused path pays per iteration never happens.
+    MoE layers run the fused expert FFN indexed by routed expert ids;
+    the ids are returned (n_moe, B, K) so the ExpertPool can account
+    per-expert heat.
+    """
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    new_ks, new_vs, routed = [], [], []
+    i_attn = 0
+    for li, spec in enumerate(cfg.pattern):
+        lp = up["layers"][li]
+        h = M.apply_norm(cfg.norm, lp["norm1"], x)
+        ap = lp["attn"]
+        q = h @ ap["wq"]
+        k = h @ ap["wk"]
+        v = h @ ap["wv"]
+        if "bq" in ap:
+            q = q + ap["bq"]
+        if "bk" in ap:
+            k = k + ap["bk"]
+            v = v + ap["bv"]
+        q = q.reshape(B, 1, H, hd)
+        k = k.reshape(B, 1, KV, hd)
+        v = v.reshape(B, 1, KV, hd)
+        if cfg.pos_emb == "rope":
+            pos = lengths[:, None]
+            q = M.apply_rope(q, pos, cfg.rope_theta, cfg.rotary_pct)
+            k = M.apply_rope(k, pos, cfg.rope_theta, cfg.rotary_pct)
+        k_tok = k[:, 0].astype(k_pool.dtype)
+        v_tok = v[:, 0].astype(v_pool.dtype)
+        att = ops.paged_decode_attention(
+            q[:, 0], k_pool[i_attn], v_pool[i_attn], block_tbl,
+            lengths, k_tok, v_tok, block_tokens=block_tokens)
+        x = x + (att.reshape(B, 1, H * hd) @ ap["wo"])
+
+        h = M.apply_norm(cfg.norm, lp["norm2"], x)
+        if spec.moe:
+            mp = lp["moe"]
+            # token-choice top-k, weights renormalized over the chosen
+            # experts — the moe_fwd routing, sans capacity/drop (decode
+            # batches are far under capacity at serving scale)
+            logits = h[:, 0].astype(jnp.float32) @ mp["router"]
+            topw, topi = lax.top_k(jax.nn.softmax(logits, axis=-1),
+                                   cfg.top_k)
+            topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+            topi = topi.astype(jnp.int32)
+            out = ops.fused_expert_ffn(h[:, 0], mp["w_gate"],
+                                       mp["w_up"], mp["w_down"],
+                                       topi, topw)[:, None]
+            routed.append(topi)
+        else:
+            out = M.mlp_fwd(lp["mlp"], h, cfg.act)
+        x = x + out
+        new_ks.append(k_tok)
+        new_vs.append(v_tok)
+        i_attn += 1
+    ids = (jnp.stack(routed) if routed
+           else jnp.zeros((0, B, max(cfg.top_k, 1)), jnp.int32))
+    return x, jnp.stack(new_ks), jnp.stack(new_vs), ids
+
+
+def _fused_paged_decode(cfg: ModelConfig, block_tokens: int, params,
+                        tokens, k_store, v_store, block_tbl, lengths):
+    """tokens (B, 1) int32; k_store/v_store (U, n_attn, num_blocks, bt,
+    KV, hd) — the pooled layout itself; block_tbl (B, nb) int32;
+    lengths (B,).
+
+    Returns (logits (B, V), new_k, new_v (U, n_attn, B, KV, hd),
+    routed expert ids (U, n_moe, B, K))."""
+    x = params["embed"][tokens[:, 0]].astype(jnp.bfloat16)[:, None]
+    if cfg.pos_emb == "learned":
+        x = x + params["pos_emb"][lengths].astype(x.dtype)[:, None]
+
+    def body(carry, xs):
+        up, kp, vp = xs
+        h, nk, nv, ids = _fused_unit_fwd(cfg, up, carry, kp, vp,
+                                         block_tbl, lengths,
+                                         block_tokens)
+        return h, (nk, nv, ids)
+
+    x, (new_k, new_v, routed) = lax.scan(
+        body, x, (params["units"], k_store, v_store))
+    x = M.apply_norm(cfg.norm, params["final_norm"], x)
+    W = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, 0] @ W.T).astype(jnp.float32)
+    return logits, new_k, new_v, routed
+
+
 # ---------------------------------------------------------------------- #
 # Engine                                                                 #
 # ---------------------------------------------------------------------- #
@@ -191,6 +288,25 @@ class ServingConfig:
     slo_p95_ttft_s: Optional[float] = None
     slo_p95_decode_s: Optional[float] = None
     slo_p99_decode_s: Optional[float] = None
+    # extreme-tail decode SLO (p99.9) and the rolling SLO window size;
+    # p99.9 targets use a quantile-aware warmup (>= 1/(1-q) samples)
+    # so violation_rate() is never judged off a handful of samples
+    slo_p999_decode_s: Optional[float] = None
+    slo_window: int = 512
+    # fused tiered-gather decode: the pool keeps the pooled (stacked)
+    # KV layout and attention reads blocks straight from it through a
+    # scalar-prefetched block-index table (kernels.tiered_gather),
+    # folding the new token in-kernel — the per-iteration gather_seq
+    # staging copy and cache scatter disappear.  MoE layers run the
+    # fused expert FFN indexed by routed ids (requires silu experts).
+    fused_gather: bool = False
+    # MoE expert tier residency (serving.expert_pool): experts become
+    # tiered objects with routing-driven heat.  "lru" promotes by
+    # recency (the expert-cache baseline); "predictive" additionally
+    # prefetches the predicted next phase's hot experts.  Uses its own
+    # residency namespace so KV arbitration grants are not diluted.
+    expert_policy: Optional[str] = None
+    expert_fast_fraction: float = 0.25   # share of experts fast-resident
     # interference-class QoS plane (requires topology + a decode SLO):
     # this tenant's gather flows are published tagged with their
     # interference class into a BlameLedger (tail excursions get joined
@@ -271,14 +387,19 @@ class ServingEngine:
                            else max(1, num_blocks // 2))
             max_batch = sv.max_batch
         self.max_batch = max_batch
+        if sv.fused_gather and any(
+                s.moe for s in cfg.pattern) and cfg.act != "silu":
+            raise ValueError(f"{cfg.name}: fused MoE decode needs silu "
+                             "(gated) experts")
         spec = spec_from_config(cfg, bt)
         static = sv.policy in ("static", "none", "no_balance")
         # all tier occupancy flows through the (possibly shared)
-        # residency ledger under this engine's tenant namespace
+        # residency ledger under this engine's tenant namespace; the
+        # fused decode path needs the pooled layout it indexes into
         self.pool = PagedKVPool(
             num_blocks, bt, spec=spec, fast_block_budget=fast_budget,
             slow_kind=sv.slow_kind, default_kind=sv.slow_kind,
-            ledger=ledger, tenant=sv.tenant)
+            ledger=ledger, tenant=sv.tenant, pooled=sv.fused_gather)
         self.ledger = self.pool.ledger
         self._static_split = static
         self.tierer = KVBlockTierer(self.pool, sv.policy)
@@ -292,6 +413,7 @@ class ServingEngine:
             # and its capacity-expander (CXL-class) node
             topo.alias_tier(tb.fast, FAST_KIND)
             topo.alias_tier(tb.capacity_tier, self.pool.slow_kind)
+        self.topo = topo
         # observability plane: one tracer + registry + SLO monitor per
         # engine, all on the engine's virtual timebase (_now), created
         # before the components they instrument
@@ -318,8 +440,12 @@ class ServingEngine:
         if sv.slo_p99_decode_s is not None:
             slo_targets.append(
                 SLOTarget("decode_latency", 0.99, sv.slo_p99_decode_s))
+        if sv.slo_p999_decode_s is not None:
+            slo_targets.append(
+                SLOTarget("decode_latency", 0.999, sv.slo_p999_decode_s))
         self.slo = SLOMonitor(slo_targets, clock=self._now,
-                              registry=self.registry, tracer=self.tracer)
+                              registry=self.registry, tracer=self.tracer,
+                              window=sv.slo_window)
         self.lag = LagRatioMonitor()
         self._lag_tokens = 0          # decode tokens at last epoch close
         self._lag_time = 0.0          # _now() at last epoch close
@@ -432,8 +558,32 @@ class ServingEngine:
             self.movesched.audit = self.audit
             self.movesched.calibrator = self.calibrator
             self.replanner.move_scheduler = self.movesched
+        # MoE expert tier residency: every (layer, expert) weight block
+        # becomes a tiered object with routing-driven heat, sharing the
+        # cross-tenant move scheduler when one exists but keeping its
+        # own residency namespace (so the KV arbiter's fair-share grant
+        # is not split against expert bytes)
+        self.expert_pool = None
+        self._moe_per_unit = sum(1 for s in cfg.pattern if s.moe)
+        if sv.expert_policy:
+            from .expert_pool import (expert_nbytes_from_config,
+                                      ExpertPool, moe_layers_from_config)
+            n_moe = moe_layers_from_config(cfg)
+            if n_moe == 0:
+                raise ValueError(f"{cfg.name}: expert_policy set but "
+                                 "the model has no MoE layers")
+            total = n_moe * cfg.n_experts
+            budget = max(1, int(round(total * sv.expert_fast_fraction)))
+            self.expert_pool = ExpertPool(
+                n_moe, cfg.n_experts, expert_nbytes_from_config(cfg),
+                fast_expert_budget=budget, policy=sv.expert_policy,
+                tenant=f"{sv.tenant}.experts", slow_kind=sv.slow_kind,
+                movesched=self.movesched, tracer=self.tracer)
         self._prefill = jax.jit(steps_mod.make_prefill_step(cfg))
         self._decode = jax.jit(functools.partial(_paged_decode, cfg, bt))
+        self._decode_fused = (
+            jax.jit(functools.partial(_fused_paged_decode, cfg, bt))
+            if sv.fused_gather else None)
         self._next_rid = 0
 
     # ------------------------------------------------------------------ #
@@ -530,31 +680,64 @@ class ServingEngine:
                 continue               # preempted itself
             self.pool.alloc(req.rid, 1, kind=self._alloc_kind)
 
+    def _fused_decode_batch(self, batch):
+        """Fused tiered-gather decode: no per-sequence staging copy —
+        the jitted step reads the pooled stores through each sequence's
+        block-index table.  Routed expert ids feed per-expert heat."""
+        B = self.max_batch
+        tbl, _ = self.pool.gather_tables([r.rid for r in batch],
+                                         self.max_seq_blocks)
+        toks = [req.out_tokens[-1] for req in batch]
+        lens = [self.pool.seq_len[req.rid] for req in batch]
+        n_pad = B - len(batch)
+        if n_pad:                      # fixed batch shape: one compile
+            tbl = np.concatenate(
+                [tbl, np.zeros((n_pad, tbl.shape[1]), np.int32)])
+            toks.extend([0] * n_pad)
+            lens.extend([0] * n_pad)
+        tokens = jnp.asarray(toks, jnp.int32)[:, None]
+        lengths = jnp.asarray(lens, jnp.int32)
+        logits, new_k, new_v, routed = self._decode_fused(
+            self.params, tokens, self.pool.k_store, self.pool.v_store,
+            jnp.asarray(tbl), lengths)
+        if self.expert_pool is not None and routed.shape[1]:
+            ids = np.asarray(routed)       # (U, n_moe, B, K)
+            for u in range(ids.shape[0]):
+                for m in range(ids.shape[1]):
+                    gl = u * self._moe_per_unit + m
+                    for i in range(len(batch)):
+                        self.expert_pool.record_routing(
+                            gl, ids[u, m, i], self._step)
+        return logits, new_k, new_v
+
     def _decode_iteration(self, now: float) -> None:
         batch = list(self.sched.running)
         if not batch:
             return
         B = self.max_batch
-        kv_ks, kv_vs, toks, lens = [], [], [], []
-        for req in batch:
-            k, v = self.pool.gather_seq(req.rid, self.max_seq_blocks)
-            kv_ks.append(k)
-            kv_vs.append(v)
-            toks.append(req.out_tokens[-1])
-            lens.append(self.pool.seq_len[req.rid])
-        n_pad = B - len(batch)
-        if n_pad:                      # fixed batch shape: one compile
-            z = jnp.zeros_like(kv_ks[0])
-            kv_ks.extend([z] * n_pad)
-            kv_vs.extend([z] * n_pad)
-            toks.extend([0] * n_pad)
-            lens.extend([0] * n_pad)
-        kv_k = jnp.stack(kv_ks, axis=2)    # (U, n_attn, B, S_pad, KV, hd)
-        kv_v = jnp.stack(kv_vs, axis=2)
-        tokens = jnp.asarray(toks, jnp.int32)[:, None]
-        lengths = jnp.asarray(lens, jnp.int32)
-        logits, new_k, new_v = self._decode(self.params, tokens,
-                                            kv_k, kv_v, lengths)
+        if self._decode_fused is not None:
+            logits, new_k, new_v = self._fused_decode_batch(batch)
+        else:
+            kv_ks, kv_vs, toks, lens = [], [], [], []
+            for req in batch:
+                k, v = self.pool.gather_seq(req.rid, self.max_seq_blocks)
+                kv_ks.append(k)
+                kv_vs.append(v)
+                toks.append(req.out_tokens[-1])
+                lens.append(self.pool.seq_len[req.rid])
+            n_pad = B - len(batch)
+            if n_pad:                  # fixed batch shape: one compile
+                z = jnp.zeros_like(kv_ks[0])
+                kv_ks.extend([z] * n_pad)
+                kv_vs.extend([z] * n_pad)
+                toks.extend([0] * n_pad)
+                lens.extend([0] * n_pad)
+            kv_k = jnp.stack(kv_ks, axis=2)  # (U, n_attn, B, S_pad, ...)
+            kv_v = jnp.stack(kv_vs, axis=2)
+            tokens = jnp.asarray(toks, jnp.int32)[:, None]
+            lengths = jnp.asarray(lens, jnp.int32)
+            logits, new_k, new_v = self._decode(self.params, tokens,
+                                                kv_k, kv_v, lengths)
         next_toks = np.asarray(jnp.argmax(logits, axis=-1))
         new_k = np.asarray(new_k)          # (U, n_attn, B, KV, hd)
         new_v = np.asarray(new_v)
@@ -610,6 +793,10 @@ class ServingEngine:
         self.tracer.event("phase.update", cat="phase",
                           epoch=self._step, label=str(self.phases.label),
                           shifts=len(self.phases.shifts))
+        if self.expert_pool is not None:
+            # close the expert heat epoch and run promote/demote (and,
+            # under the predictive policy, next-phase prefetch)
+            self.expert_pool.step(self._step)
         if self.blame is not None:
             # keep this tenant's class-tagged offered flows current in
             # the shared blame book *before* the SLO check, so a firing
@@ -617,6 +804,14 @@ class ServingEngine:
             self.blame.publish_flows(self.sv.tenant,
                                      self.sched._running_flows(),
                                      now=now)
+            if self.expert_pool is not None:
+                # expert-gather traffic rides the same tier link as KV
+                # gathers; publish it class-tagged under the expert
+                # namespace so blame can split demand reads from
+                # optional prefetch bytes
+                self.blame.publish_flows(
+                    self.expert_pool.tenant,
+                    self.expert_pool.gather_flows(self.topo), now=now)
         if self.slo.targets and self._step % 16 == 0:
             self.slo.check()
             if self.predictor is not None:
@@ -696,6 +891,8 @@ class ServingEngine:
         }
         if self.replanner is not None:
             out.update(self.replanner.summary())
+        if self.expert_pool is not None:
+            out.update(self.expert_pool.summary())
         if self.movesched is not None:
             for k, v in self.movesched.summary().items():
                 out[f"movesched.{k}"] = v

@@ -28,6 +28,20 @@ preempted).  The pool therefore manages fixed-size token blocks:
 The pool also runs in *metadata-only* mode (``spec=None``): alloc/free/
 migrate bookkeeping without array payloads, which is what the
 trace-driven scheduler benchmark and the pure-logic tests use.
+
+Data mode has two layouts:
+
+  * **per-block** (default): each block owns its own (k, v) arrays,
+    ``device_put`` onto the block's memory kind — migration moves the
+    payload.  ``gather_seq`` stages a sequence into one contiguous
+    buffer (the gather-then-compute path).
+  * **pooled** (``pooled=True``): payloads live in two persistent
+    per-layer stores ``(U, n_attn, num_blocks, bt, KV, hd)`` indexed by
+    physical block id.  This is the layout the fused tiered-gather
+    kernel computes over *directly* — ``gather_tables`` hands it the
+    int32 block-index table instead of a staging copy — so tier
+    residency becomes the ledger's logical bookkeeping (the discipline
+    single-memory CPU hosts already use for every kind).
 """
 from __future__ import annotations
 
@@ -109,15 +123,26 @@ class PagedKVPool:
                  fast_block_budget: Optional[int] = None,
                  slow_kind: str = "pinned_host",
                  default_kind: Optional[str] = None,
-                 ledger=None, tenant: str = "kv"):
+                 ledger=None, tenant: str = "kv",
+                 pooled: bool = False):
         if num_blocks <= 0:
             raise ValueError("num_blocks must be positive")
         if block_tokens <= 0:
             raise ValueError("block_tokens must be positive")
         if spec is not None and spec.block_tokens != block_tokens:
             raise ValueError("spec.block_tokens != pool block_tokens")
+        if pooled and spec is None:
+            raise ValueError("pooled layout needs a data-mode spec")
         self.block_tokens = block_tokens
         self.spec = spec
+        self.pooled = pooled
+        self.k_store = self.v_store = None
+        if pooled:
+            import jax.numpy as jnp
+            shape = (spec.n_units, spec.n_attn, num_blocks,
+                     block_tokens, spec.n_kv, spec.head_dim)
+            self.k_store = jnp.zeros(shape, dtype=spec.dtype)
+            self.v_store = jnp.zeros(shape, dtype=spec.dtype)
         self.slow_kind = slow_kind
         self.default_kind = default_kind or slow_kind
         self.blocks: List[KVBlock] = [
@@ -277,6 +302,14 @@ class PagedKVPool:
         """Place (k, v) payloads on the block's current kind."""
         if self.spec is None:
             return
+        if self.pooled:
+            # pooled layout: payloads live at the block's slot in the
+            # persistent stores; residency is the ledger's (logical)
+            self.k_store = self.k_store.at[:, :, bid].set(
+                k.astype(self.k_store.dtype))
+            self.v_store = self.v_store.at[:, :, bid].set(
+                v.astype(self.v_store.dtype))
+            return
         import jax
         b = self.blocks[bid]
         sh = self._sharding(b.kind)
@@ -320,7 +353,13 @@ class PagedKVPool:
         if blk_idx >= len(tbl):
             raise PoolExhausted(
                 f"seq {seq_id}: token {n} has no tail block")
-        if self.spec is not None:
+        if self.pooled:
+            bid = tbl[blk_idx]
+            self.k_store = self.k_store.at[:, :, bid, off].set(
+                k_tok.astype(self.k_store.dtype))
+            self.v_store = self.v_store.at[:, :, bid, off].set(
+                v_tok.astype(self.v_store.dtype))
+        elif self.spec is not None:
             import jax.numpy as jnp
             b = self.blocks[tbl[blk_idx]]
             if b.k is None:            # fresh tail block
@@ -351,6 +390,33 @@ class PagedKVPool:
         assert self.spec is not None, "gather_seq needs a data-mode pool"
         dev = self._sharding(FAST_KIND)
         tbl = self.table.get(seq_id, [])
+        if self.pooled:
+            # staging copy out of the pooled stores (the baseline the
+            # fused path's gather_tables exists to avoid): take the
+            # sequence's blocks, flatten to token order, zero-pad.
+            # Positions past seq_len may hold a prior owner's stale
+            # tokens — every consumer masks by kv_len.
+            n_pad = pad_blocks - len(tbl)
+            if n_pad < 0:
+                raise ValueError(f"seq {seq_id} has {len(tbl)} blocks "
+                                 f"> pad_blocks={pad_blocks}")
+            shape = list(self.spec.kv_shape)
+            shape[2] = pad_blocks * self.block_tokens
+            if not tbl:
+                z = jnp.zeros(tuple(shape), dtype=self.spec.dtype)
+                return z, z
+            idx = jnp.asarray(tbl, jnp.int32)
+
+            def take(store):
+                g = jnp.take(store, idx, axis=2)   # (U,n_attn,nb,bt,..)
+                g = g.reshape(g.shape[0], g.shape[1], -1, *g.shape[4:])
+                if n_pad:
+                    pads = [(0, 0)] * g.ndim
+                    pads[2] = (0, n_pad * self.block_tokens)
+                    g = jnp.pad(g, pads)
+                return g
+
+            return take(self.k_store), take(self.v_store)
         zero = None
         ks, vs = [], []
         for bid in tbl:
@@ -379,6 +445,30 @@ class PagedKVPool:
             return z, z
         return jnp.concatenate(ks, axis=2), jnp.concatenate(vs, axis=2)
 
+    def gather_tables(self, seq_ids: Sequence[int], pad_blocks: int
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """Block-index tables for the fused tiered-gather kernel.
+
+        Returns ``(tables, lens)``: ``tables`` is int32
+        ``(len(seq_ids), pad_blocks)`` of physical block ids in logical
+        order (pad slots hold block 0 — masked by ``lens``), ``lens``
+        the per-sequence cached token counts.  This is the whole
+        "gather": the kernel indexes ``k_store``/``v_store`` through it
+        directly, no staging copy.
+        """
+        if not self.pooled:
+            raise ValueError("gather_tables needs a pooled-layout pool")
+        tables = np.zeros((len(seq_ids), pad_blocks), np.int32)
+        lens = np.zeros((len(seq_ids),), np.int32)
+        for i, sid in enumerate(seq_ids):
+            tbl = self.table.get(sid, [])
+            if len(tbl) > pad_blocks:
+                raise ValueError(f"seq {sid} has {len(tbl)} blocks "
+                                 f"> pad_blocks={pad_blocks}")
+            tables[i, :len(tbl)] = tbl
+            lens[i] = self.seq_len.get(sid, 0)
+        return tables, lens
+
     # ------------------------------------------------------------------ #
     # migration                                                          #
     # ------------------------------------------------------------------ #
@@ -404,7 +494,10 @@ class PagedKVPool:
                                 b.kind, kind, bn)
         b.kind = kind
         self.counters.migrated_bytes += bn
-        if self.spec is not None and b.k is not None:
+        # pooled layout keeps payloads in place: residency is logical
+        # (ledger-tracked), which is how every kind behaves on a
+        # single-memory CPU host anyway
+        if self.spec is not None and not self.pooled and b.k is not None:
             import jax
             sh = self._sharding(kind)
             b.k = jax.device_put(b.k, sh)
@@ -441,6 +534,16 @@ class PagedKVPool:
             nb.touch_count = old.touch_count
             nb.last_touch_step = old.last_touch_step
             new_table[old.seq_id].append(i)
+        if self.pooled and live:
+            # permute the store rows with the block ids so slot i still
+            # holds the payload of the block now labelled i
+            import jax.numpy as jnp
+            perm = [old.bid for old in live]
+            rest = [i for i in range(self.num_blocks)
+                    if i not in set(perm)]
+            idx = jnp.asarray(perm + rest, jnp.int32)
+            self.k_store = jnp.take(self.k_store, idx, axis=2)
+            self.v_store = jnp.take(self.v_store, idx, axis=2)
         self.blocks = new_blocks
         self.table = new_table
         self._free = list(range(self.num_blocks - 1, len(live) - 1, -1))

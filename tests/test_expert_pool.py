@@ -1,0 +1,138 @@
+"""ExpertPool: per-expert heat, tier residency, predictive prefetch."""
+import pytest
+
+from repro.core.migration import MigrationExecutor
+from repro.pool import MoveScheduler
+from repro.serving import ExpertPool, FAST_KIND, PagedKVPool
+from repro.serving.engine import kind_tiers
+
+NB = 1 << 20                           # one expert's weight bytes
+
+
+def _pool(policy="lru", budget=4, n_experts=8, n_layers=2, **kw):
+    return ExpertPool(n_layers=n_layers, n_experts=n_experts,
+                      expert_nbytes=NB, fast_expert_budget=budget,
+                      policy=policy, **kw)
+
+
+def test_expert_pool_validates_args():
+    with pytest.raises(ValueError, match="policy"):
+        _pool(policy="clock")
+    with pytest.raises(ValueError):
+        ExpertPool(0, 8, NB, fast_expert_budget=2)
+    with pytest.raises(ValueError):
+        ExpertPool(2, 8, 0, fast_expert_budget=2)
+
+
+def test_expert_pool_heat_accounting_per_expert():
+    p = _pool()
+    p.record_routing(0, [1, 1, 3], step=0)
+    p.record_routing(1, [5], step=0)
+    assert p.counters.accesses == 4
+    assert p.counters.fast_hits == 0          # everyone starts slow
+    assert p.touch_count[(0, 1)] == 2
+    assert p.touch_count[(0, 3)] == 1
+    assert p.touch_count[(1, 5)] == 1
+    assert p.last_step[(1, 5)] == 0
+    assert (0, 5) not in p.touch_count        # layers are independent
+    # each activation is one read of the expert's weight block
+    assert p.trace.total_events == 4
+    assert sum(t.total_bytes
+               for t in p.trace._current.values()) == 4 * NB
+
+
+def test_expert_pool_lru_promotes_recent_within_budget():
+    p = _pool(budget=3)
+    p.record_routing(0, [0, 1, 2, 3, 4], step=0)
+    p.step(0)
+    # only the budget's worth promoted, all on the fast tier
+    assert p.fast_residents() == 3
+    assert p.counters.promoted == 3
+    assert p.ledger.bytes_on(FAST_KIND, "experts") == 3 * NB
+    # the most recently routed experts win the slots
+    p.record_routing(0, [6, 7], step=1)
+    p.step(1)
+    assert p.kind_of(0, 6) == FAST_KIND
+    assert p.kind_of(0, 7) == FAST_KIND
+    assert p.fast_residents() == 3
+    assert p.counters.demoted == 2
+    # hits now land fast and the ratio reflects them
+    p.record_routing(0, [6, 7], step=2)
+    assert p.counters.fast_hits == 2
+    assert 0 < p.fast_hit_ratio() < 1
+
+
+def test_expert_pool_budget_never_exceeded_under_churn():
+    p = _pool(budget=2, n_experts=16, n_layers=1)
+    for s in range(12):
+        p.record_routing(0, [(s * 3 + i) % 16 for i in range(4)], step=s)
+        p.step(s)
+        assert p.fast_residents() <= 2
+        assert p.ledger.bytes_on(FAST_KIND, "experts") <= 2 * NB
+
+
+def test_expert_pool_predictive_prefetches_recurring_phase():
+    """Alternating routing phases: after the recurrence is learned, the
+    next phase's experts are promoted ahead and then hit while fast."""
+    p = _pool(policy="predictive", budget=4, n_experts=16, n_layers=1)
+    phase_a, phase_b = [0, 1, 2, 3], [8, 9, 10, 11]
+    epoch = 0
+    for _ in range(6):                 # several full A->B->A cycles
+        for phase in (phase_a, phase_b):
+            for _ in range(3):
+                for s in range(4):
+                    p.record_routing(0, phase, step=epoch)
+                p.step(epoch)
+                epoch += 1
+    assert p.counters.prefetch_promotes > 0
+    assert p.counters.prefetch_hits > 0
+    assert p.prefetch_hit_ratio() > 0.5
+    s = p.summary()
+    assert s["expert.prefetch_promotes"] == p.counters.prefetch_promotes
+    assert s["expert.prefetch_hit_ratio"] == p.prefetch_hit_ratio()
+    # predictive beats what pure recency would have served
+    assert p.fast_hit_ratio() > 0.5
+
+
+def test_expert_pool_lru_never_counts_prefetch():
+    p = _pool(policy="lru", budget=2, n_experts=8, n_layers=1)
+    for e in range(8):
+        p.record_routing(0, [e % 8, (e + 1) % 8], step=e)
+        p.step(e)
+    assert p.counters.prefetch_promotes == 0
+    assert p.prefetch_hit_ratio() is None
+    assert "expert.prefetch_hit_ratio" not in p.summary()
+
+
+def test_expert_pool_moves_flow_through_movesched():
+    ms = MoveScheduler(MigrationExecutor(kind_tiers(PagedKVPool(4, 4))))
+    p = _pool(budget=2, movesched=ms)
+    p.record_routing(0, [0, 1], step=0)
+    p.step(0)
+    assert p.fast_residents() == 2
+    assert len(ms.rounds) == 1
+    assert ms.rounds[0].moved_bytes("experts") == 2 * NB
+    objs = {sm.move.obj for sm in ms.rounds[0].moves}
+    assert objs == {"expert.L0.E0", "expert.L0.E1"}
+
+
+def test_expert_pool_gather_flows_class_tagged():
+    from repro.topology import TopologyGraph
+    g = TopologyGraph("pcie", origin="hbm")
+    g.add_node("hbm", "chip", tier=FAST_KIND)
+    g.add_node("host", "host", tier="pinned_host")
+    g.add_link("hbm", "host", 600.0, 32.0, "pcie")
+
+    p = _pool(policy="predictive", budget=2, n_experts=8, n_layers=1)
+    p.record_routing(0, [0, 1, 2], step=0)   # all slow: 3 misses
+    assert p.gather_flows(g) == []           # epoch not closed yet
+    p.step(0)
+    flows = p.gather_flows(g, period_s=0.1)
+    assert len(flows) == 1                   # no prefetch yet
+    f = flows[0]
+    assert f.cls == "read" and f.tenant == "experts"
+    assert f.offered_GBps == pytest.approx(3 * NB / 0.1 / 1e9)
+    # a second epoch with no misses publishes nothing
+    p.record_routing(0, [0, 1], step=1)
+    p.step(1)
+    assert all(fl.cls != "read" for fl in p.gather_flows(g))

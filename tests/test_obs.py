@@ -290,6 +290,56 @@ def test_slo_violation_hooks_fire_with_target_value_and_clock():
     assert mon2.check() == [] and not fired
 
 
+def test_slo_p999_key_not_aliased_to_p100():
+    t = SLOTarget("decode_latency", 0.999, threshold_s=0.1)
+    assert t.key == "decode_latency.p99.9"
+    assert SLOTarget("ttft", 0.95, 0.1).key == "ttft.p95"
+    assert SLOTarget("ttft", 0.99, 0.1).key == "ttft.p99"
+
+
+def test_slo_p999_warmup_needs_a_real_tail():
+    """An extreme-tail target needs >= 1/(1-q) samples before its
+    empirical quantile is a tail at all; p95/p99 keep the caller's
+    min_samples contract untouched."""
+    t999 = SLOTarget("decode_latency", 0.999, threshold_s=0.01)
+    assert t999.warmup_samples(4) == 1000
+    assert SLOTarget("x", 0.95, 0.1).warmup_samples(4) == 4
+    assert SLOTarget("x", 0.99, 0.1).warmup_samples(4) == 4
+
+    mon = SLOMonitor([t999], window=2048, min_samples=4)
+    key = "decode_latency.p99.9"
+    for _ in range(999):
+        mon.observe("decode_latency", 0.5)   # way over threshold
+    assert mon.check() == []                 # 999 samples: still warmup
+    assert mon.eligible_checks[key] == 0
+    mon.observe("decode_latency", 0.5)       # 1000th: eligible
+    violated = mon.check()
+    assert len(violated) == 1 and violated[0][0].key == key
+    assert mon.last_quantiles[key] == pytest.approx(0.5)
+
+
+def test_slo_window_autogrows_to_hold_p999_warmup():
+    """A p99.9 target inside a 256-sample window could never become
+    eligible — the monitor grows the window to fit the warmup."""
+    mon = SLOMonitor([SLOTarget("decode_latency", 0.999,
+                                threshold_s=0.1)], window=256)
+    assert mon.window >= 1000
+    # without extreme-tail targets the requested window is respected
+    mon2 = SLOMonitor([SLOTarget("ttft", 0.95, 0.1)], window=256)
+    assert mon2.window == 256
+
+
+def test_slo_p999_discriminates_tail_from_body():
+    """1-in-1000 spikes: p95 stays quiet, p99.9 fires."""
+    mon = SLOMonitor([SLOTarget("decode_latency", 0.95, threshold_s=0.2),
+                      SLOTarget("decode_latency", 0.999,
+                                threshold_s=0.2)])
+    for i in range(2000):
+        mon.observe("decode_latency", 2.0 if i % 500 == 499 else 0.05)
+    violated = mon.check()
+    assert [t.key for t, _ in violated] == ["decode_latency.p99.9"]
+
+
 # ===================================================================== #
 # LagRatioMonitor: online burst-entry / steady ratio                    #
 # ===================================================================== #

@@ -362,6 +362,99 @@ def test_movesched_demotions_first_at_equal_priority():
     assert [m.tenant for m in r.moves] == ["b", "a"]
 
 
+def test_movesched_preempts_for_urgent_mid_round_arrival():
+    """A strictly-higher-priority delta submitted from inside a move_fn
+    splices ahead of the interrupted tenant's remaining blocks, which
+    then resume — with the counter and round record reflecting it."""
+    tiers, graph = _far_socket()
+    ms = MoveScheduler(MigrationExecutor(tiers, topology=graph))
+    order = []
+
+    def hi_fn(obj, src, dst, nb):
+        order.append(("hi", obj))
+        return nb
+
+    def lo_fn(obj, src, dst, nb):
+        order.append(("lo", obj))
+        if obj == "lo.b0":            # emergency lands mid-copy
+            ms.submit("hi", PlacementDelta(
+                [BlockMove("hi.kv", "CXL", "LDRAM", G)]),
+                move_fn=hi_fn, priority=5.0)
+        return nb
+
+    ms.submit("lo", PlacementDelta(
+        [BlockMove(f"lo.b{i}", "CXL", "LDRAM", G) for i in range(3)]),
+        move_fn=lo_fn, priority=1.0)
+    r = ms.flush(1)
+    assert [t for t, _ in order] == ["lo", "hi", "lo", "lo"]
+    assert ms.preemptions == 1
+    assert ms.summary()["preemptions"] == 1.0
+    assert len(r.moves) == 4          # the spliced move joins the round
+    assert not ms.has_pending         # urgent delta was consumed
+
+
+def test_movesched_equal_priority_arrival_waits_for_next_flush():
+    tiers, graph = _far_socket()
+    ms = MoveScheduler(MigrationExecutor(tiers, topology=graph))
+    order = []
+
+    def lo_fn(obj, src, dst, nb):
+        order.append(obj)
+        if obj == "a.b0":
+            ms.submit("peer", PlacementDelta(
+                [BlockMove("peer.x", "CXL", "LDRAM", G)]), priority=1.0)
+        return nb
+
+    ms.submit("a", PlacementDelta(
+        [BlockMove(f"a.b{i}", "CXL", "LDRAM", G) for i in range(2)]),
+        move_fn=lo_fn, priority=1.0)
+    r1 = ms.flush(1)
+    assert ms.preemptions == 0
+    assert order == ["a.b0", "a.b1"]  # no splice at equal priority
+    assert len(r1.moves) == 2
+    assert ms.has_pending             # queued for the next round
+    r2 = ms.flush(2)
+    assert [m.move.obj for m in r2.moves] == ["peer.x"]
+
+
+def test_movesched_chunked_copy_preempts_inside_one_block():
+    """chunk_bytes gives preemption points inside a single long copy;
+    on_done still reports the original move with its bytes summed and
+    stats count the object's promotion once."""
+    from repro.core.migration import MigrationStats
+    tiers, graph = _far_socket()
+    ms = MoveScheduler(MigrationExecutor(tiers, topology=graph))
+    order, realized = [], []
+    stats = MigrationStats()
+
+    def hi_fn(obj, src, dst, nb):
+        order.append(("hi", nb))
+        return nb
+
+    def lo_fn(obj, src, dst, nb):
+        order.append(("lo", nb))
+        if len(order) == 1:
+            ms.submit("hi", PlacementDelta(
+                [BlockMove("hi.kv", "CXL", "LDRAM", G)]),
+                move_fn=hi_fn, priority=9.0)
+        return nb
+
+    ms.submit("lo", PlacementDelta(
+        [BlockMove("lo.big", "CXL", "LDRAM", 4 * G)]),
+        move_fn=lo_fn, priority=1.0, chunk_bytes=2 * G,
+        on_done=lambda moves: realized.extend(moves), stats=stats)
+    ms.flush(1)
+    # first 2G chunk, then the urgent move, then the copy's remainder
+    assert order == [("lo", 2 * G), ("hi", G), ("lo", 2 * G)]
+    assert ms.preemptions == 1
+    assert len(realized) == 1
+    move, done = realized[0]
+    assert move == BlockMove("lo.big", "CXL", "LDRAM", 4 * G)
+    assert done == 4 * G
+    assert stats.promoted == 1        # once per object, not per chunk
+    assert stats.migrated_bytes == 4 * G
+
+
 def test_movesched_runs_deferred_replanner_callbacks():
     tiers = _tiers()
     led = ResidencyLedger(tiers, capacity_bytes={"LDRAM": 64 * G})

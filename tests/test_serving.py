@@ -8,9 +8,10 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.models import lm
 from repro.serving import (ContinuousBatchingScheduler, FAST_KIND,
-                           KVBlockTierer, PagedKVPool, plan_admission,
-                           PoolExhausted, Request, RequestState,
-                           SchedulerConfig, ServingConfig, ServingEngine)
+                           KVBlockSpec, KVBlockTierer, PagedKVPool,
+                           plan_admission, PoolExhausted, Request,
+                           RequestState, SchedulerConfig, ServingConfig,
+                           ServingEngine)
 
 
 def _meta_pool(num_blocks=16, block_tokens=4, fast_budget=None, **kw):
@@ -96,6 +97,76 @@ def test_pool_defrag_compacts_and_preserves():
     pool.alloc(4, 7)
     with pytest.raises(PoolExhausted):
         pool.alloc(5, 1)
+
+
+# ===================================================================== #
+# gather_seq / gather_tables edge cases (data mode, both layouts)       #
+# ===================================================================== #
+def _data_pool(pooled=False, num_blocks=6, bt=4):
+    spec = KVBlockSpec(n_units=1, n_attn=2, block_tokens=bt, n_kv=2,
+                       head_dim=8, dtype="float32")
+    return PagedKVPool(num_blocks, bt, spec=spec, pooled=pooled), spec
+
+
+def test_gather_seq_requires_data_mode():
+    pool = _meta_pool(8)                      # metadata-only: no spec
+    pool.alloc(1, 2)
+    with pytest.raises(AssertionError, match="data-mode"):
+        pool.gather_seq(1, 4)
+
+
+@pytest.mark.parametrize("pooled", [False, True])
+def test_gather_seq_empty_sequence_is_zero_padded(pooled):
+    pool, spec = _data_pool(pooled)
+    k, v = pool.gather_seq(99, 3)             # unknown seq: no blocks
+    assert k.shape == (1, 2, 3 * 4, 2, 8)
+    assert float(jnp.abs(k).sum()) == 0.0
+    assert float(jnp.abs(v).sum()) == 0.0
+
+
+@pytest.mark.parametrize("pooled", [False, True])
+def test_gather_seq_rejects_pad_shorter_than_live_blocks(pooled):
+    pool, spec = _data_pool(pooled)
+    pool.alloc(1, 3)
+    with pytest.raises(ValueError, match="pad_blocks"):
+        pool.gather_seq(1, 2)
+
+
+@pytest.mark.parametrize("pooled", [False, True])
+def test_gather_seq_roundtrips_written_payload(pooled):
+    pool, spec = _data_pool(pooled)
+    rs = np.random.RandomState(0)
+    kv_k = jnp.asarray(rs.randn(1, 2, 6, 2, 8), jnp.float32)
+    kv_v = jnp.asarray(rs.randn(1, 2, 6, 2, 8), jnp.float32)
+    pool.write_prefill(7, kv_k, kv_v, n_tokens=6)
+    k, v = pool.gather_seq(7, 3)              # 2 live blocks + 1 pad
+    np.testing.assert_allclose(np.asarray(k[:, :, :6]),
+                               np.asarray(kv_k), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(v[:, :, :6]),
+                               np.asarray(kv_v), rtol=1e-6)
+    assert float(jnp.abs(k[:, :, 8:]).sum()) == 0.0   # pad block zero
+
+
+def test_gather_tables_requires_pooled_layout():
+    pool, _ = _data_pool(pooled=False)
+    pool.alloc(1, 2)
+    with pytest.raises(ValueError, match="pooled"):
+        pool.gather_tables([1], 4)
+
+
+def test_gather_tables_block_ids_and_lens():
+    pool, _ = _data_pool(pooled=True)
+    pool.alloc(1, 2)
+    pool.seq_len[1] = 7
+    pool.alloc(2, 1)
+    pool.seq_len[2] = 3
+    tbl, lens = pool.gather_tables([1, 2, 99], 3)
+    assert tbl.shape == (3, 3) and tbl.dtype == np.int32
+    assert list(tbl[0, :2]) == list(pool.table[1])
+    assert tbl[0, 2] == 0                     # pad slot masked by lens
+    assert list(lens) == [7, 3, 0]
+    with pytest.raises(ValueError, match="pad_blocks"):
+        pool.gather_tables([1], 1)
 
 
 # ===================================================================== #
@@ -301,6 +372,85 @@ def test_engine_rejects_hybrid_arch():
     cfg = get_smoke_config("jamba-1.5-large-398b")
     with pytest.raises(ValueError, match="attention-only"):
         ServingEngine(cfg, params=None)
+
+
+# ===================================================================== #
+# Fused tiered-gather decode path                                       #
+# ===================================================================== #
+def _run_engine(cfg, params, prompts, new_tokens=4, **sv_kw):
+    eng = ServingEngine(cfg, params, ServingConfig(
+        block_tokens=8, max_batch=3, max_context=32, policy="tiering08",
+        **sv_kw))
+    for p in prompts:
+        eng.submit(p, max_new_tokens=new_tokens)
+    eng.run()
+    return eng
+
+
+def test_fused_gather_matches_staged_decode(tiny):
+    """fused_gather=True must emit the same greedy tokens as the
+    staged gather_seq path — the layouts differ, the math must not."""
+    cfg, params = tiny
+    rs = np.random.RandomState(2)
+    prompts = [rs.randint(0, cfg.vocab, (n,)).astype(np.int32)
+               for n in (12, 7, 9)]
+    staged = _run_engine(cfg, params, prompts)
+    fused = _run_engine(cfg, params, prompts, fused_gather=True)
+    assert fused.pool.pooled and not staged.pool.pooled
+    for rid in range(3):
+        assert (fused.sched.finished[rid].out_tokens
+                == staged.sched.finished[rid].out_tokens)
+
+
+@pytest.fixture(scope="module")
+def tiny_moe():
+    cfg = get_smoke_config("qwen3-moe-30b-a3b")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_fused_gather_moe_matches_staged(tiny_moe):
+    cfg, params = tiny_moe
+    rs = np.random.RandomState(3)
+    prompts = [rs.randint(0, cfg.vocab, (n,)).astype(np.int32)
+               for n in (10, 6)]
+    staged = _run_engine(cfg, params, prompts)
+    fused = _run_engine(cfg, params, prompts, fused_gather=True)
+    for rid in range(2):
+        assert (fused.sched.finished[rid].out_tokens
+                == staged.sched.finished[rid].out_tokens)
+
+
+def test_fused_gather_moe_expert_telemetry(tiny_moe):
+    """The fused path feeds routed expert ids into the ExpertPool:
+    heat accumulates, residency stays within budget, and the summary
+    surfaces the expert.* counters."""
+    cfg, params = tiny_moe
+    rs = np.random.RandomState(4)
+    prompts = [rs.randint(0, cfg.vocab, (8,)).astype(np.int32)
+               for _ in range(2)]
+    eng = _run_engine(cfg, params, prompts, new_tokens=6,
+                      fused_gather=True, expert_policy="lru",
+                      expert_fast_fraction=0.25)
+    ep = eng.expert_pool
+    assert ep is not None
+    # 2 requests x 5 decode iterations (the first output token comes
+    # from prefill) x top_k activations x n_moe layers
+    n_moe = ep.n_layers
+    assert ep.counters.accesses == 2 * 5 * cfg.top_k * n_moe
+    assert ep.fast_residents() <= ep.fast_expert_budget
+    assert ep.counters.promoted > 0
+    s = eng.telemetry_summary()
+    assert s["expert.accesses"] == float(ep.counters.accesses)
+    assert "expert.fast_hit_ratio" in s
+
+
+def test_expert_policy_requires_moe_model(tiny):
+    cfg, params = tiny
+    with pytest.raises(ValueError, match="no MoE"):
+        ServingEngine(cfg, params, ServingConfig(
+            block_tokens=8, max_batch=2, max_context=32,
+            expert_policy="lru"))
 
 
 # ===================================================================== #
