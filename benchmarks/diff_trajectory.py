@@ -57,6 +57,10 @@ HEADLINE = {
         "predicted-phase expert prefetches are routed to while fast",
     "moe.predictive_speedup":
         "predictive expert residency beats LRU on recurrent routing",
+    "cluster.routing_speedup":
+        "headroom+distance session routing beats round-robin",
+    "cluster.victim_p95_improvement":
+        "topology-aware routing shrinks the victim-session p95",
 }
 
 

@@ -20,6 +20,9 @@ Prints ``name,value,derived`` CSV.  Modules:
                          violation-predictive admission vs the flat floor
   moe_expert_bench       MoE expert tier residency: predictive expert
                          prefetch vs LRU on recurrent routing phases
+  multi_host_bench       multi-host plane: headroom+distance session
+                         routing vs capacity-blind baselines, namespace
+                         conservation, per-replica budget caps
   kernel_bench           Pallas kernel microbenches
   roofline               per-cell roofline from the dry-run artifacts
 
@@ -68,6 +71,7 @@ MODULES = [
     "calibration_bench",
     "noisy_neighbor_bench",
     "moe_expert_bench",
+    "multi_host_bench",
     "kernel_bench",
     "roofline",
 ]

@@ -1,0 +1,219 @@
+"""Named-axis sharding for the multi-host serving plane.
+
+Two idioms from the ecosystem, adapted to the repo's plain-pytree
+models:
+
+* **axis mapping** (haliax): model code names *logical* axes
+  ("embed", "vocab", "experts"); a thread-local :class:`AxisMapping`
+  resolves them to *physical* mesh axes at placement time, so the
+  same model runs replicated, tensor-sharded, or expert-sharded by
+  swapping one context, never editing model code.
+* **shard_map adapter** (equinox ``filter_shard_map``): a thin
+  wrapper that partitions array args over the mesh and leaves
+  non-arrays alone, version-adaptive across the
+  ``jax.experimental.shard_map`` -> ``jax.shard_map`` migration.
+
+The meshes themselves come from :func:`replica_meshes`, which
+partitions the process's devices into per-replica groups.  Under the
+tier-1 test environment (one CPU device) every replica degrades to a
+1-device mesh sharing that device — placement semantics are exercised,
+parallel speed is not.  CI's cluster-smoke step forces 8 host-platform
+devices to exercise real multi-device placement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from contextlib import contextmanager
+from typing import List, Mapping, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+try:                                      # jax >= 0.4.35 path
+    from jax.experimental.shard_map import shard_map as _shard_map
+except ImportError:                       # pragma: no cover - newer jax
+    _shard_map = getattr(jax, "shard_map", None)
+
+__all__ = ["AxisMapping", "axis_mapping", "current_axis_mapping",
+           "replica_meshes", "replica_shard_map", "shard_lm_params"]
+
+# logical axis names the LM param tree exposes, by leaf dimension:
+# embed/lm_head are (vocab, d_model); per-unit stacks lead with "unit"
+MODEL_AXIS = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisMapping:
+    """Logical-axis -> physical-mesh-axis resolution table.
+
+    ``mapping["vocab"] == "model"`` means "partition logical axis
+    *vocab* over mesh axis *model*"; a logical axis absent from the
+    table (or mapped to None) is replicated.  Immutable so it can be
+    stacked on the thread-local context without aliasing surprises.
+    """
+
+    mapping: Mapping[str, Optional[str]] = dataclasses.field(
+        default_factory=dict)
+
+    def __post_init__(self):
+        object.__setattr__(self, "mapping", dict(self.mapping))
+
+    def physical(self, logical: str) -> Optional[str]:
+        return self.mapping.get(logical)
+
+    def spec(self, *logical: Optional[str]) -> PartitionSpec:
+        """PartitionSpec for a leaf whose dims carry these logical
+        names (None = unnamed dim, always replicated)."""
+        return PartitionSpec(*(self.physical(ax) if ax else None
+                               for ax in logical))
+
+    def merged(self, other: "AxisMapping") -> "AxisMapping":
+        out = dict(self.mapping)
+        out.update(other.mapping)
+        return AxisMapping(out)
+
+
+# replicate-everything default: correctness-first, matches the paper's
+# observation that capacity (tiering) not FLOPs is the serving binder
+_DEFAULT = AxisMapping({})
+_tls = threading.local()
+
+
+def current_axis_mapping() -> AxisMapping:
+    stack = getattr(_tls, "stack", None)
+    return stack[-1] if stack else _DEFAULT
+
+
+@contextmanager
+def axis_mapping(mapping: "AxisMapping | Mapping[str, Optional[str]]"):
+    """Install an axis mapping for the dynamic extent, haliax-style.
+
+    Nested contexts merge (inner wins per logical axis), so a replica
+    can overlay ``{"experts": "model"}`` on a plane-wide base.
+    """
+    if not isinstance(mapping, AxisMapping):
+        mapping = AxisMapping(mapping)
+    stack = getattr(_tls, "stack", None)
+    if stack is None:
+        stack = _tls.stack = []
+    merged = (stack[-1].merged(mapping) if stack else
+              _DEFAULT.merged(mapping))
+    stack.append(merged)
+    try:
+        yield merged
+    finally:
+        stack.pop()
+
+
+def replica_meshes(n_replicas: int,
+                   axis_name: str = MODEL_AXIS,
+                   devices: Optional[List] = None) -> List[Mesh]:
+    """Partition the process's devices into ``n_replicas`` 1-D meshes.
+
+    With ``d`` devices and ``n`` replicas each mesh gets ``d // n``
+    devices (remainder unused, keeping replicas symmetric).  With
+    fewer devices than replicas, replicas *share* devices round-robin
+    — 1-device meshes that keep every placement code path alive on the
+    single-CPU tier-1 environment.
+    """
+    if n_replicas < 1:
+        raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+    devs = list(devices if devices is not None else jax.devices())
+    per = len(devs) // n_replicas
+    meshes = []
+    for r in range(n_replicas):
+        if per >= 1:
+            group = devs[r * per:(r + 1) * per]
+        else:
+            group = [devs[r % len(devs)]]
+        meshes.append(Mesh(np.array(group), (axis_name,)))
+    return meshes
+
+
+def _leaf_logical_axes(path: Tuple[str, ...], ndim: int) -> List[Optional[str]]:
+    """Logical axis names for an LM param leaf, by its tree path.
+
+    Only axes we ever shard get names; everything else is None
+    (replicated).  ``embed``/``lm_head`` are (vocab, d_model) and
+    vocab is the one big, cleanly-partitionable dimension of the
+    decode path; MoE expert stacks lead with an ``experts`` dim.
+    """
+    axes: List[Optional[str]] = [None] * ndim
+    if path and path[-1] in ("embed", "lm_head") and ndim >= 1:
+        axes[0] = "vocab"
+    if "moe" in path and ndim >= 2:
+        # unit-stacked MoE leaves are (n_units, n_experts, ...)
+        axes[1 if "units" in path else 0] = "experts"
+    return axes
+
+
+def _iter_with_path(tree, path=()):
+    if isinstance(tree, Mapping):
+        for k in tree:
+            yield from _iter_with_path(tree[k], path + (k,))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _iter_with_path(v, path + (str(i),))
+    else:
+        yield path, tree
+
+
+def shard_lm_params(params, mesh: Mesh,
+                    mapping: Optional[AxisMapping] = None):
+    """Place an LM param pytree on ``mesh`` under the axis mapping.
+
+    Each leaf gets a :class:`NamedSharding`: dims whose logical axis
+    the mapping routes to a mesh axis are partitioned *when evenly
+    divisible* (otherwise silently replicated — a 50k vocab on a
+    3-device mesh should not crash serving), all other dims
+    replicated.  With the default empty mapping this is pure
+    replication: every leaf committed to the mesh's device set, which
+    is exactly what makes replica params and pool blocks jit-compatible.
+    """
+    mapping = mapping or current_axis_mapping()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def place(path, leaf):
+        if not hasattr(leaf, "ndim"):
+            return leaf
+        spec_axes: List[Optional[str]] = []
+        for dim, logical in zip(
+                leaf.shape, _leaf_logical_axes(path, leaf.ndim)):
+            phys = mapping.physical(logical) if logical else None
+            ok = phys in sizes and dim % sizes[phys] == 0
+            spec_axes.append(phys if ok else None)
+        sh = NamedSharding(mesh, PartitionSpec(*spec_axes))
+        return jax.device_put(leaf, sh)
+
+    flat = {path: place(path, leaf)
+            for path, leaf in _iter_with_path(params)}
+
+    def rebuild(tree, path=()):
+        if isinstance(tree, Mapping):
+            return {k: rebuild(tree[k], path + (k,)) for k in tree}
+        if isinstance(tree, tuple):
+            return tuple(rebuild(v, path + (str(i),))
+                         for i, v in enumerate(tree))
+        if isinstance(tree, list):
+            return [rebuild(v, path + (str(i),))
+                    for i, v in enumerate(tree)]
+        return flat[path]
+
+    return rebuild(params)
+
+
+def replica_shard_map(fn, mesh: Mesh, in_specs, out_specs,
+                      check_rep: bool = False):
+    """``shard_map`` adapter: partition ``fn`` over a replica mesh.
+
+    Wraps whichever shard_map this jax exposes; ``check_rep=False``
+    because the serving kernels freely mix replicated scalars with
+    partitioned blocks.  Mirrors equinox's ``filter_shard_map`` shape:
+    specs may be prefix pytrees.
+    """
+    if _shard_map is None:           # pragma: no cover - ancient jax
+        raise RuntimeError("this jax exposes no shard_map")
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_rep)

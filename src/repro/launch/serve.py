@@ -86,23 +86,10 @@ def run_oneshot(args, cfg, params) -> None:
 def run_continuous(args, cfg, params) -> None:
     from ..serving import ServingConfig, ServingEngine
 
-    sv = ServingConfig(
-        block_tokens=args.block_tokens, max_batch=args.batch,
-        max_context=args.prompt_len + args.new_tokens + args.block_tokens,
-        policy=args.policy, num_blocks=args.num_blocks,
-        fast_block_budget=args.fast_blocks, adaptive=args.adaptive,
-        replan_every=args.replan_every, sample_rate=args.sample_rate,
-        predictive=args.predictive, calibrate=args.calibrate,
-        topology=args.topology, tenant=args.tenant,
-        slo_p95_ttft_s=args.slo_p95_ttft,
-        slo_p95_decode_s=args.slo_p95_decode,
-        slo_p99_decode_s=args.slo_p99_decode,
-        slo_p999_decode_s=args.slo_p999_decode,
-        slo_window=args.slo_window,
-        qos=args.qos,
-        fused_gather=args.fused_gather,
-        expert_policy=args.expert_policy,
-        expert_fast_fraction=args.expert_fast_frac)
+    # the one builder both the CLI and programmatic callers share:
+    # cross-field validation + flat->section migration live in
+    # repro.serving.config, not in per-flag parser.error calls here
+    sv = ServingConfig.from_args(args)
     eng = ServingEngine(cfg, params, sv)
     rs = np.random.RandomState(0)
     lens = [args.prompt_len, max(args.prompt_len // 2, 4)]
@@ -189,6 +176,61 @@ def run_continuous(args, cfg, params) -> None:
               f"ttft={ttft_str} decode={dec_str} "
               f"preempted={int(row['preemptions'])}x")
     _write_obs_artifacts(args, eng)
+
+
+def run_cluster(args, cfg, params) -> None:
+    """Multi-host plane: route the trace across ``--replicas`` engines."""
+    from ..cluster import ClusterPlane
+    from ..serving import ServingConfig
+
+    sv = ServingConfig.from_args(args)
+    plane = ClusterPlane(
+        cfg, params, serving=sv, n_replicas=args.replicas,
+        router_policy=args.router or "headroom-distance")
+    for line in plane.testbed.describe():
+        print(line)
+    rs = np.random.RandomState(0)
+    lens = [args.prompt_len, max(args.prompt_len // 2, 4)]
+    for i in range(args.num_requests):
+        plen = lens[i % len(lens)]
+        plane.submit(rs.randint(0, cfg.vocab, (plen,)).astype(np.int32),
+                     args.new_tokens, arrival_s=i * args.arrival_gap_s)
+    t0 = time.perf_counter()
+    rep = plane.run()
+    wall = time.perf_counter() - t0
+    s = rep.summary
+    print(f"cluster: replicas={int(s['replicas'])} "
+          f"router={plane.router.policy} "
+          f"requests={int(s['requests'])} "
+          f"finished={int(s['finished'])} wall={wall:.2f} s")
+    print(f"aggregate: throughput={s['throughput_tok_s']:.1f} tok/s "
+          f"worst_p95_latency={s['worst_p95_latency_s']*1e3:.1f} ms "
+          f"preemptions={int(s['preemptions'])}")
+    for host, n in sorted(rep.routed.items()):
+        rsum = getattr(rep.per_replica.get(host), "summary", {})
+        print(f"  {host}: routed={n} "
+              f"throughput={rsum.get('throughput_tok_s', 0.0):.1f} tok/s "
+              f"fast_headroom={plane.replicas[host].fast_headroom_bytes()}"
+              f" B dist={plane.testbed.distance_ns('router', host):.0f} ns")
+    cons = plane.namespace_conservation()
+    total = cons.pop("total")
+    assert sum(cons.values()) == total, "namespace aggregation leaked"
+    print(f"ledger: tenants={sorted(str(t) for t in plane.ledger.tenants)}"
+          f" fast_bytes_by_replica={cons} (sum == replica/* aggregate)")
+    if args.trace_out:
+        import json
+
+        events = [ev.to_dict() for ev in plane.merged_trace()]
+        with open(args.trace_out, "w") as fh:
+            for ev in events:
+                fh.write(json.dumps(ev, sort_keys=True) + "\n")
+        print(f"trace: wrote {len(events)} merged events -> "
+              f"{args.trace_out}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as fh:
+            fh.write(plane.registry.to_prometheus_text())
+        print(f"metrics: wrote {len(plane.registry.names())} series "
+              f"(prometheus text) -> {args.metrics_out}")
 
 
 def _write_obs_artifacts(args, eng) -> None:
@@ -327,59 +369,31 @@ def main(argv=None):
                          "violation-predictive admission in place of "
                          "the flat link-efficiency floor (requires "
                          "--topology and a decode SLO)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="multi-host serving plane: shard the model "
+                         "over this many replica meshes, one paged "
+                         "engine each, sharing one namespaced "
+                         "residency ledger (continuous only)")
+    from ..serving.config import ROUTER_POLICIES
+    ap.add_argument("--router", default=None,
+                    choices=list(ROUTER_POLICIES),
+                    help="session-placement policy for --replicas > 1 "
+                         "(default: headroom-distance — fast-tier "
+                         "headroom first, front-end ICI distance as "
+                         "the tiebreak)")
     args = ap.parse_args(argv)
 
-    if args.predictive and not args.adaptive:
-        ap.error("--predictive requires --adaptive (prediction "
-                 "pre-stages the adaptive replanner's phase-cached "
-                 "plans)")
-    if args.calibrate and not args.adaptive:
-        ap.error("--calibrate requires --adaptive (the corrections "
-                 "feed the adaptive replanner's cost model)")
-    if args.calibrate and args.scheduler != "continuous":
-        ap.error("--calibrate only takes effect with --scheduler "
-                 "continuous (the calibrator corrects the paged "
-                 "engine's planning tiers)")
-    if args.tenant is not None and args.scheduler != "continuous":
-        ap.error("--tenant only takes effect with --scheduler "
-                 "continuous (the paged pool is what registers a "
-                 "ledger tenant)")
+    # every cross-field rule lives in repro.serving.config now; the
+    # CLI just maps ConfigError onto argparse's exit-with-usage
+    from ..serving.config import ConfigError, validate_args
+    try:
+        validate_args(args)
+    except ConfigError as e:
+        ap.error(str(e))
     if args.tenant is None:
         args.tenant = "serving"
-    if args.scheduler != "continuous":
-        for flag, val in (("--trace-out", args.trace_out),
-                          ("--metrics-out", args.metrics_out),
-                          ("--audit-out", args.audit_out),
-                          ("--slo-p95-ttft", args.slo_p95_ttft),
-                          ("--slo-p95-decode", args.slo_p95_decode),
-                          ("--slo-p99-decode", args.slo_p99_decode),
-                          ("--slo-p999-decode", args.slo_p999_decode),
-                          ("--expert-policy", args.expert_policy)):
-            if val is not None:
-                ap.error(f"{flag} only takes effect with --scheduler "
-                         "continuous (the observability plane "
-                         "instruments the paged engine)")
-    if args.fused_gather and args.scheduler != "continuous":
-        ap.error("--fused-gather only takes effect with --scheduler "
-                 "continuous (it rewires the paged decode path)")
-    if args.qos:
-        if args.scheduler != "continuous":
-            ap.error("--qos only takes effect with --scheduler "
-                     "continuous (the QoS plane instruments the paged "
-                     "engine's admission path)")
-        if not args.topology:
-            ap.error("--qos requires --topology (blame attribution "
-                     "joins violations to topology links)")
-        if args.slo_p99_decode is None and args.slo_p95_decode is None:
-            ap.error("--qos requires a decode SLO (--slo-p99-decode "
-                     "or --slo-p95-decode) to predict violations "
-                     "against")
 
     if args.topology:
-        if args.scheduler != "continuous":
-            ap.error("--topology only takes effect with --scheduler "
-                     "continuous (contention-aware admission; add "
-                     "--adaptive to also price replans over it)")
         from ..topology import build_topology
         for line in build_topology(args.topology).describe():
             print(line)
@@ -387,7 +401,9 @@ def main(argv=None):
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(
         args.arch)
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    if args.scheduler == "continuous":
+    if args.scheduler == "continuous" and args.replicas > 1:
+        run_cluster(args, cfg, params)
+    elif args.scheduler == "continuous":
         run_continuous(args, cfg, params)
     else:
         run_oneshot(args, cfg, params)

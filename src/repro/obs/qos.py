@@ -37,8 +37,19 @@ from collections import deque
 from typing import (Any, Callable, Deque, Dict, List, Mapping, Optional,
                     Sequence, Tuple)
 
+from ..cluster.namespace import Namespace
+
 __all__ = ["BlameLedger", "Excursion", "ViolationPredictor",
            "QOS_VIOLATION_MODEL", "QOS_VIOLATION_TOLERANCE"]
+
+
+def _norm(tenant: Any) -> str:
+    """Canonical short-form tenant key (``"a"``, ``"replica0/serving"``).
+
+    The blame book and predictor key every structure by this form, so a
+    caller passing ``Namespace("replica0", "serving")`` and one passing
+    the equivalent string blame/score the same tenant."""
+    return str(Namespace.of(tenant).tenant_key())
 
 # the audit model name every qos.violation forecast files under, and
 # the accuracy tolerance it is judged at (tail latency under queueing
@@ -111,6 +122,7 @@ class BlameLedger:
         previous snapshot).  Flows are re-tagged with the publishing
         tenant so attribution cannot be spoofed by a stale tag."""
         now = float(self.clock() if now is None else now)
+        tenant = _norm(tenant)
         tagged = [dataclasses.replace(f, tenant=tenant) for f in flows]
         self._snapshots[tenant] = _FlowSnapshot(now, tagged)
         if self.registry is not None:
@@ -127,6 +139,8 @@ class BlameLedger:
         scheduler merging its *live* flows must drop its own possibly
         stale snapshot)."""
         out: List[Any] = []
+        if exclude is not None:
+            exclude = _norm(exclude)
         for tenant, snap in sorted(self._snapshots.items()):
             if tenant == exclude:
                 continue
@@ -152,7 +166,8 @@ class BlameLedger:
         for f in victim_flows:
             for link in g.path(f.src, f.dst):
                 per = loads.get(link.key, {})
-                wtotal = sum(m.weight(link.kind, f.cls, cls) * gbps
+                wtotal = sum(m.weight(link.kind, f.cls, cls,
+                                      link=link.key) * gbps
                              for (_t, cls), gbps in per.items())
                 rho = wtotal / link.bw_GBps
                 if rho > worst[2]:
@@ -167,6 +182,7 @@ class BlameLedger:
         Returns the recorded :class:`Excursion` (None when the victim
         has no published flows to attribute against)."""
         now = float(self.clock() if now is None else now)
+        victim = _norm(victim)
         snap = self._snapshots.get(victim)
         if snap is None or not snap.flows:
             return None
@@ -187,7 +203,8 @@ class BlameLedger:
             for (tenant, cls), gbps in per.items():
                 if tenant == victim:
                     continue
-                w = max(m.weight(kind, vc, cls) for vc in victim_classes)
+                w = max(m.weight(kind, vc, cls, link=key)
+                        for vc in victim_classes)
                 ex.pressure[tenant] = ex.pressure.get(tenant, 0.0) \
                     + w * gbps
             if ex.pressure:
@@ -238,7 +255,7 @@ class BlameLedger:
         every tail excursion."""
         if self.total_excursions <= 0:
             return 0.0
-        return min(self._blame_mass.get(tenant, 0.0)
+        return min(self._blame_mass.get(_norm(tenant), 0.0)
                    / self.total_excursions, 1.0)
 
     def blame_report(self) -> Dict[str, Any]:
@@ -312,10 +329,11 @@ class ViolationPredictor:
 
     # ------------------------------------------------------------------ #
     def set_target(self, tenant: str, threshold_s: float) -> None:
-        self.targets[tenant] = float(threshold_s)
+        self.targets[_norm(tenant)] = float(threshold_s)
 
     def set_baseline(self, tenant: str, p99_s: float,
                      base_slowdown: float = 1.0) -> None:
+        tenant = _norm(tenant)
         self.baselines[tenant] = float(p99_s)
         self._base_slowdown[tenant] = max(float(base_slowdown), 1e-9)
 
@@ -324,6 +342,7 @@ class ViolationPredictor:
         tail as the tenant's uncontended anchor."""
         if not p99_s > 0.0:
             return
+        tenant = _norm(tenant)
         cur = self.baselines.get(tenant)
         if cur is None or p99_s < cur:
             self.baselines[tenant] = float(p99_s)
@@ -351,7 +370,7 @@ class ViolationPredictor:
                            if unloaded > 0 else 1.0)
             bw_stretch = f.offered_GBps / max(r.achieved_GBps, 1e-12)
             s = max(lat_stretch, bw_stretch, 1.0)
-            a = agg.setdefault(f.tenant, [0.0, 0.0])
+            a = agg.setdefault(_norm(f.tenant), [0.0, 0.0])
             a[0] += s * f.offered_GBps
             a[1] += f.offered_GBps
         return {t: n / max(d, 1e-12) for t, (n, d) in agg.items()}
@@ -372,7 +391,7 @@ class ViolationPredictor:
 
     def predict_p99(self, tenant: str, extra_flows: Sequence[Any] = (),
                     exclude: Optional[str] = None) -> Optional[float]:
-        return self.predict_p99s(extra_flows, exclude).get(tenant)
+        return self.predict_p99s(extra_flows, exclude).get(_norm(tenant))
 
     def violations(self, extra_flows: Sequence[Any] = (),
                    exclude: Optional[str] = None
@@ -404,6 +423,7 @@ class ViolationPredictor:
         """File the tenant's predicted tail under ``key`` for a later
         ``realize`` join; returns the predicted value (None when the
         tenant has no baseline or no live flows)."""
+        tenant = _norm(tenant)
         pred = self.predict_p99(tenant, extra_flows, exclude)
         if pred is not None and self.audit is not None:
             self.audit.predict(QOS_VIOLATION_MODEL, (tenant, key), pred,
@@ -414,5 +434,5 @@ class ViolationPredictor:
         """Join a filed prediction with the measured tail latency."""
         if self.audit is None:
             return None
-        return self.audit.realize(QOS_VIOLATION_MODEL, (tenant, key),
+        return self.audit.realize(QOS_VIOLATION_MODEL, (_norm(tenant), key),
                                   float(observed_s))

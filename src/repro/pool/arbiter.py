@@ -41,6 +41,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Hashable, List, Mapping, Optional
 
+from ..cluster.namespace import Namespace
 from .ledger import ResidencyLedger
 
 OBJECTIVES = ("fair_share", "throughput", "priority")
@@ -147,7 +148,8 @@ class TierBudgetArbiter:
                  predictive: bool = False,
                  signature_ttl_epochs: int = 256,
                  tracer=None, audit=None,
-                 blame=None, blame_debit: float = 0.5):
+                 blame=None, blame_debit: float = 0.5,
+                 replica_capacity: Optional[Mapping[str, int]] = None):
         if objective not in OBJECTIVES:
             raise ValueError(f"unknown objective {objective!r}; "
                              f"choose from {OBJECTIVES}")
@@ -187,6 +189,14 @@ class TierBudgetArbiter:
         self.blame = blame
         self.blame_debit = float(blame_debit)
         self.blame_debited_bytes = 0
+        # multi-host plane: each replica's *physical* fast-tier capacity
+        # (keyed by replica name).  The split water-fills across replica
+        # groups first — a tenant on host A can never be granted host
+        # B's DRAM — then per-tenant within each group's grant.  With
+        # every tenant in the "default" replica and no capacities given
+        # this degenerates exactly to the single-pool split.
+        self.replica_capacity: Dict[str, int] = \
+            {r: int(c) for r, c in (replica_capacity or {}).items()}
         # last next-phase signature filed with the audit, per tenant —
         # joined (hit/miss) when the next rebalance sees the actual one
         self._predicted_sigs: Dict[str, Hashable] = {}
@@ -199,12 +209,14 @@ class TierBudgetArbiter:
         """Read one tenant's demand from its trace namespace: hot bytes
         are the footprints of objects with traffic in the window; with
         no trace attached the whole residency counts as hot."""
-        info = self.ledger.tenants[tenant]
-        nbytes = self.ledger.nbytes_by_obj(tenant)
+        ns = Namespace.of(tenant).tenant_key()
+        name = str(ns)
+        info = self.ledger.tenants[ns]
+        nbytes = self.ledger.nbytes_by_obj(ns)
         resident = sum(nbytes.values())
         trace = info.trace
         if trace is None:
-            return TenantDemand(tenant, resident, resident, float(resident),
+            return TenantDemand(name, resident, resident, float(resident),
                                 info.weight)
         traffic = trace.object_traffic(
             self.window_epochs if window is None else window)
@@ -218,14 +230,17 @@ class TierBudgetArbiter:
             size = nbytes.get(obj, 0)
             if size > 0 and per_epoch >= self.hot_threshold * size:
                 hot += size
-        return TenantDemand(tenant, resident, min(hot, resident), rate,
+        return TenantDemand(name, resident, min(hot, resident), rate,
                             info.weight)
 
     def demands(self, epoch: int = 0) -> List[TenantDemand]:
+        # sorted Namespace order groups each replica's tenants together;
+        # downstream state (detectors, tables, audit, budgets) keys on
+        # the short display string
+        names = [str(ns) for ns in sorted(self.ledger.tenants)]
         if not self.predictive:
-            return [self.demand(t) for t in sorted(self.ledger.tenants)]
-        return [self._predicted_demand(t, epoch)
-                for t in sorted(self.ledger.tenants)]
+            return [self.demand(t) for t in names]
+        return [self._predicted_demand(t, epoch) for t in names]
 
     # ------------------------------------------------------------------ #
     # prediction                                                         #
@@ -354,6 +369,27 @@ class TierBudgetArbiter:
                 break
         return grant
 
+    def _split_group(self, demands: List[TenantDemand],
+                     asks: Mapping[str, int],
+                     capacity: int) -> Dict[str, int]:
+        """Objective-specific per-tenant split within one capacity pool."""
+        if self.objective == "fair_share":
+            w = {d.tenant: 1.0 for d in demands}
+            return self._water_fill({d.tenant: asks[d.tenant]
+                                     for d in demands}, w, capacity)
+        if self.objective == "priority":
+            w = {d.tenant: max(d.weight, 1e-9) for d in demands}
+            return self._water_fill({d.tenant: asks[d.tenant]
+                                     for d in demands}, w, capacity)
+        # throughput: fill hot sets in traffic-intensity order
+        grant = {d.tenant: 0 for d in demands}
+        left = capacity
+        for d in sorted(demands, key=lambda d: -d.intensity):
+            take = min(asks[d.tenant], left)
+            grant[d.tenant] = take
+            left -= take
+        return grant
+
     def split(self, demands: List[TenantDemand]) -> Dict[str, int]:
         cap = self.capacity_bytes
         floors = {d.tenant: min(self.floor_bytes, d.resident_bytes)
@@ -361,19 +397,35 @@ class TierBudgetArbiter:
         cap_after_floor = max(cap - sum(floors.values()), 0)
         asks = {d.tenant: max(d.hot_bytes - floors[d.tenant], 0)
                 for d in demands}
-        if self.objective == "fair_share":
-            w = {d.tenant: 1.0 for d in demands}
-            grant = self._water_fill(asks, w, cap_after_floor)
-        elif self.objective == "priority":
-            w = {d.tenant: max(d.weight, 1e-9) for d in demands}
-            grant = self._water_fill(asks, w, cap_after_floor)
-        else:  # throughput: fill hot sets in traffic-intensity order
-            grant = {d.tenant: 0 for d in demands}
-            left = cap_after_floor
-            for d in sorted(demands, key=lambda d: -d.intensity):
-                take = min(asks[d.tenant], left)
-                grant[d.tenant] = take
-                left -= take
+        # group tenants by replica: a replica's tenants share that
+        # host's physical fast tier, so the split is hierarchical —
+        # water-fill capacity across replica groups first (each capped
+        # by its physical capacity), then the objective split within
+        # each group's grant
+        groups: Dict[str, List[TenantDemand]] = {}
+        for d in demands:
+            groups.setdefault(Namespace.of(d.tenant).replica,
+                              []).append(d)
+        if len(groups) <= 1 and not self.replica_capacity:
+            # single pool (every tenant in one replica, no physical
+            # per-host caps): identical to the pre-cluster split
+            grant = self._split_group(demands, asks, cap_after_floor)
+        else:
+            group_ask: Dict[str, int] = {}
+            group_cap: Dict[str, int] = {}
+            for r, ds in groups.items():
+                rc = self.replica_capacity.get(r)
+                rc_after_floor = cap_after_floor if rc is None else \
+                    max(int(rc) - sum(floors[d.tenant] for d in ds), 0)
+                group_cap[r] = rc_after_floor
+                group_ask[r] = min(sum(asks[d.tenant] for d in ds),
+                                   rc_after_floor)
+            group_grant = self._water_fill(
+                group_ask, {r: 1.0 for r in groups}, cap_after_floor)
+            grant = {}
+            for r, ds in sorted(groups.items()):
+                grant.update(self._split_group(
+                    ds, asks, min(group_grant[r], group_cap[r])))
         # capacity beyond measured demand stays free: handing it out by
         # footprint would just re-enable hoarding by idle tenants — the
         # next rebalance grants it the moment demand shows up

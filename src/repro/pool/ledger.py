@@ -23,6 +23,13 @@ the ledger unifies them:
     (topology-aware when one is attached), so every layer prices a byte
     move identically.
 
+Tenant keys are hierarchical ``repro.cluster.Namespace`` values
+(``replica/tenant``): the multi-host plane registers each replica's
+pool under its own replica component, and glob patterns
+(``bytes_on(tier, "replica0/*")``, ``aggregate("*/*")``) roll per-replica
+views up to the fleet exactly.  Bare strings keep working — they
+normalize to ``default/<tenant>`` through the deprecation shim.
+
 Ownership rule for recording: whoever *physically* moves bytes records
 the move (``PagedKVPool.migrate``, ``TieredStateStore.move_fn``).
 Objects registered by a planner (``origin="plan"``) have no physical
@@ -33,12 +40,15 @@ never overwrites client-owned residency.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple, Union
 
+from ..cluster.namespace import Namespace, is_pattern
 from ..core.migration import BlockMove, MigrationExecutor, PlacementDelta
 from ..core.tiers import MemoryTier
 
 Share = Tuple[str, float]
+# every public entry point accepts either form
+TenantKey = Union[str, Namespace]
 
 # effectively-unlimited headroom when neither budget nor capacity binds
 UNBOUNDED = 1 << 62
@@ -56,6 +66,7 @@ class Tenant:
     name: str
     weight: float = 1.0
     trace: Optional[object] = None     # telemetry.AccessTrace
+    ns: Optional[Namespace] = None     # the structured key
 
 
 @dataclasses.dataclass
@@ -81,48 +92,62 @@ class ResidencyLedger:
         self.capacity_bytes: Dict[str, int] = dict(capacity_bytes or {})
         self.executor = executor or MigrationExecutor(self.tiers,
                                                       topology=topology)
-        self.tenants: Dict[str, Tenant] = {}
-        # (tenant, obj) -> {tier: bytes}
-        self._res: Dict[Tuple[str, str], Dict[str, int]] = {}
-        # (tenant, obj) -> "client" | "plan"
-        self._origin: Dict[Tuple[str, str], str] = {}
-        # tenant -> {tier: budget bytes} (arbiter-assigned)
-        self._budget: Dict[str, Dict[str, int]] = {}
+        self.tenants: Dict[Namespace, Tenant] = {}
+        # (tenant namespace, obj) -> {tier: bytes}
+        self._res: Dict[Tuple[Namespace, str], Dict[str, int]] = {}
+        # (tenant namespace, obj) -> "client" | "plan"
+        self._origin: Dict[Tuple[Namespace, str], str] = {}
+        # tenant namespace -> {tier: budget bytes} (arbiter-assigned)
+        self._budget: Dict[Namespace, Dict[str, int]] = {}
         self.counters = LedgerCounters()
 
     # ------------------------------------------------------------------ #
     # tenants                                                            #
     # ------------------------------------------------------------------ #
-    def register_tenant(self, name: str, weight: float = 1.0,
+    def register_tenant(self, name: TenantKey, weight: float = 1.0,
                         trace=None) -> Tenant:
-        if name in self.tenants:
-            t = self.tenants[name]
+        ns = Namespace.of(name).tenant_key()
+        if ns in self.tenants:
+            t = self.tenants[ns]
             if trace is not None:
                 t.trace = trace
             return t
-        t = Tenant(name, weight, trace)
-        self.tenants[name] = t
+        t = Tenant(str(ns), weight, trace, ns=ns)
+        self.tenants[ns] = t
         return t
 
-    def attach_trace(self, tenant: str, trace) -> None:
+    def attach_trace(self, tenant: TenantKey, trace) -> None:
         self.register_tenant(tenant).trace = trace
 
-    def trace(self, tenant: str):
-        t = self.tenants.get(tenant)
+    def trace(self, tenant: TenantKey):
+        t = self.tenants.get(Namespace.of(tenant).tenant_key())
         return t.trace if t is not None else None
 
-    def _check_tenant(self, tenant: str) -> None:
-        if tenant not in self.tenants:
-            raise LedgerError(f"unknown tenant {tenant!r}; "
+    def tenant_info(self, tenant: TenantKey) -> Optional[Tenant]:
+        """The Tenant record under any key form (None when absent)."""
+        return self.tenants.get(Namespace.of(tenant).tenant_key())
+
+    def _check_tenant(self, ns: Namespace) -> None:
+        if ns not in self.tenants:
+            raise LedgerError(f"unknown tenant {str(ns)!r}; "
                               f"register_tenant first")
+
+    def tenants_matching(self, pattern: str) -> List[Namespace]:
+        """Tenant namespaces matching a glob pattern, in sorted order
+        (``"replica0/*"`` — one replica; ``"*/*"`` — the fleet)."""
+        return sorted(ns for ns in self.tenants if ns.matches(pattern))
+
+    def replicas(self) -> List[str]:
+        """Replica components present among registered tenants."""
+        return sorted({ns.replica for ns in self.tenants})
 
     # ------------------------------------------------------------------ #
     # object registration / accounting                                   #
     # ------------------------------------------------------------------ #
-    def has(self, tenant: str, obj: str) -> bool:
-        return (tenant, obj) in self._res
+    def has(self, tenant: TenantKey, obj: str) -> bool:
+        return (Namespace.of(tenant).tenant_key(), obj) in self._res
 
-    def register(self, tenant: str, obj: str,
+    def register(self, tenant: TenantKey, obj: str,
                  placement: Mapping[str, int],
                  origin: str = "client") -> None:
         """Register an object with its initial bytes-per-tier placement.
@@ -130,18 +155,19 @@ class ResidencyLedger:
         Registration is allocation, not migration — no move is priced or
         gated (first touch put the bytes wherever the allocator chose).
         """
-        self._check_tenant(tenant)
-        key = (tenant, obj)
+        ns = Namespace.of(tenant).tenant_key()
+        self._check_tenant(ns)
+        key = (ns, obj)
         if key in self._res:
-            raise LedgerError(f"{tenant}/{obj} already registered")
+            raise LedgerError(f"{ns.with_obj(obj)} already registered")
         self._res[key] = {t: int(b) for t, b in placement.items()
                           if int(b) > 0}
         self._origin[key] = origin
         self.counters.allocs += 1
 
-    def retire(self, tenant: str, obj: str) -> int:
+    def retire(self, tenant: TenantKey, obj: str) -> int:
         """Drop an object entirely; returns the bytes released."""
-        key = (tenant, obj)
+        key = (Namespace.of(tenant).tenant_key(), obj)
         res = self._res.pop(key, None)
         self._origin.pop(key, None)
         if res is None:
@@ -149,16 +175,17 @@ class ResidencyLedger:
         self.counters.frees += 1
         return sum(res.values())
 
-    def origin_of(self, tenant: str, obj: str) -> Optional[str]:
-        return self._origin.get((tenant, obj))
+    def origin_of(self, tenant: TenantKey, obj: str) -> Optional[str]:
+        return self._origin.get((Namespace.of(tenant).tenant_key(), obj))
 
-    def record_alloc(self, tenant: str, obj: str, tier: str,
+    def record_alloc(self, tenant: TenantKey, obj: str, tier: str,
                      nbytes: int) -> None:
         """Grow an object on ``tier`` (client allocated more there)."""
-        self._check_tenant(tenant)
+        ns = Namespace.of(tenant).tenant_key()
+        self._check_tenant(ns)
         if nbytes <= 0:
             return
-        key = (tenant, obj)
+        key = (ns, obj)
         if key not in self._res:
             self._res[key] = {}
             self._origin[key] = "client"
@@ -166,10 +193,11 @@ class ResidencyLedger:
         res = self._res[key]
         res[tier] = res.get(tier, 0) + int(nbytes)
 
-    def record_free(self, tenant: str, obj: str, tier: str,
+    def record_free(self, tenant: TenantKey, obj: str, tier: str,
                     nbytes: int) -> None:
         """Shrink an object on ``tier`` (client released bytes there)."""
-        key = (tenant, obj)
+        ns = Namespace.of(tenant).tenant_key()
+        key = (ns, obj)
         res = self._res.get(key)
         if res is None:
             return
@@ -180,16 +208,16 @@ class ResidencyLedger:
         else:
             res[tier] = have - take
         if not res:
-            self.retire(tenant, obj)
+            self.retire(ns, obj)
 
-    def record_move(self, tenant: str, obj: str, src: str, dst: str,
+    def record_move(self, tenant: TenantKey, obj: str, src: str, dst: str,
                     nbytes: int) -> int:
         """Account a move that already physically happened.
 
         Clamped to the bytes the object actually has on ``src`` (the
         ledger never goes negative); returns the bytes recorded.
         """
-        key = (tenant, obj)
+        key = (Namespace.of(tenant).tenant_key(), obj)
         res = self._res.get(key)
         if res is None or nbytes <= 0 or src == dst:
             return 0
@@ -204,26 +232,27 @@ class ResidencyLedger:
         self.counters.migrated_bytes += moved
         return moved
 
-    def set_residency(self, tenant: str, obj: str,
+    def set_residency(self, tenant: TenantKey, obj: str,
                       placement: Mapping[str, int]) -> None:
         """Overwrite an object's bytes-per-tier (planner realizing a
         replan for a plan-origin object; clients use record_*)."""
-        self._check_tenant(tenant)
-        key = (tenant, obj)
+        ns = Namespace.of(tenant).tenant_key()
+        self._check_tenant(ns)
+        key = (ns, obj)
         if key not in self._res:
-            self.register(tenant, obj, placement, origin="plan")
+            self.register(ns, obj, placement, origin="plan")
             return
         self._res[key] = {t: int(b) for t, b in placement.items()
                           if int(b) > 0}
 
-    def resize(self, tenant: str, obj: str, new_total: int,
+    def resize(self, tenant: TenantKey, obj: str, new_total: int,
                grow_tier: Optional[str] = None) -> None:
         """Adjust an object's footprint to ``new_total`` bytes
         (plan-origin objects whose inventory drifted).  Growth lands on
         ``grow_tier`` (where a first-touch allocator puts fresh bytes —
         never silently inflating a budgeted fast tier); shrink removes
         proportionally across the current tiers."""
-        key = (tenant, obj)
+        key = (Namespace.of(tenant).tenant_key(), obj)
         res = self._res.get(key)
         if res is None:
             return
@@ -245,36 +274,66 @@ class ResidencyLedger:
     # ------------------------------------------------------------------ #
     # queries                                                            #
     # ------------------------------------------------------------------ #
-    def bytes_on(self, tier: str, tenant: Optional[str] = None) -> int:
-        """Bytes resident on ``tier`` (one tenant, or all)."""
+    def bytes_on(self, tier: str, tenant: Optional[TenantKey] = None) -> int:
+        """Bytes resident on ``tier`` — one tenant, a glob pattern
+        (``"replica0/*"``), or all tenants when omitted."""
+        if tenant is None:
+            return sum(res.get(tier, 0) for res in self._res.values())
+        if isinstance(tenant, str) and is_pattern(tenant):
+            return sum(res.get(tier, 0)
+                       for (tn, _), res in self._res.items()
+                       if tn.matches(tenant))
+        ns = Namespace.of(tenant).tenant_key()
         return sum(res.get(tier, 0) for (tn, _), res in self._res.items()
-                   if tenant is None or tn == tenant)
+                   if tn == ns)
 
-    def tenant_bytes(self, tenant: str) -> int:
+    def aggregate(self, pattern: str = "*/*") -> Dict[str, int]:
+        """Bytes-per-tier rolled up over every tenant matching a glob
+        pattern — the fleet view (``"*/*"``), one replica
+        (``"replica0/*"``), or one logical tenant across replicas
+        (``"*/serving"``)."""
+        out: Dict[str, int] = {}
+        for (tn, _), res in self._res.items():
+            if not tn.matches(pattern):
+                continue
+            for tier, b in res.items():
+                out[tier] = out.get(tier, 0) + b
+        return out
+
+    def tenant_bytes(self, tenant: TenantKey) -> int:
+        if isinstance(tenant, str) and is_pattern(tenant):
+            return sum(sum(res.values())
+                       for (tn, _), res in self._res.items()
+                       if tn.matches(tenant))
+        ns = Namespace.of(tenant).tenant_key()
         return sum(sum(res.values()) for (tn, _), res in self._res.items()
-                   if tn == tenant)
+                   if tn == ns)
 
-    def object_bytes(self, tenant: str, obj: str,
+    def object_bytes(self, tenant: TenantKey, obj: str,
                      tier: Optional[str] = None) -> int:
-        res = self._res.get((tenant, obj), {})
+        res = self._res.get((Namespace.of(tenant).tenant_key(), obj), {})
         return res.get(tier, 0) if tier is not None else sum(res.values())
 
-    def objects(self, tenant: str) -> List[str]:
-        return [o for (tn, o) in self._res if tn == tenant]
+    def objects(self, tenant: TenantKey) -> List[str]:
+        ns = Namespace.of(tenant).tenant_key()
+        return [o for (tn, o) in self._res if tn == ns]
 
-    def nbytes_by_obj(self, tenant: str) -> Dict[str, int]:
+    def nbytes_by_obj(self, tenant: TenantKey) -> Dict[str, int]:
+        ns = Namespace.of(tenant).tenant_key()
         return {o: sum(res.values()) for (tn, o), res in self._res.items()
-                if tn == tenant}
+                if tn == ns}
 
-    def placement(self, tenant: str, obj: str) -> Dict[str, int]:
-        return dict(self._res.get((tenant, obj), {}))
+    def placement(self, tenant: TenantKey, obj: str) -> Dict[str, int]:
+        return dict(self._res.get(
+            (Namespace.of(tenant).tenant_key(), obj), {}))
 
-    def shares(self, tenant: str) -> Dict[str, List[Share]]:
+    def shares(self, tenant: TenantKey) -> Dict[str, List[Share]]:
         """Fractional per-object shares — the ``PlacementPlan.shares``
         view planners and executors consume."""
+        ns = Namespace.of(tenant).tenant_key()
         out: Dict[str, List[Share]] = {}
         for (tn, obj), res in self._res.items():
-            if tn != tenant:
+            if tn != ns:
                 continue
             total = sum(res.values())
             if total <= 0:
@@ -283,44 +342,52 @@ class ResidencyLedger:
         return out
 
     def tier_occupancy(self, tier: str) -> Dict[str, int]:
-        """Per-tenant bytes on one tier (the arbiter's realized view)."""
-        out: Dict[str, int] = {t: 0 for t in self.tenants}
+        """Per-tenant bytes on one tier (the arbiter's realized view).
+
+        Keys are the short display form (``"a"``, ``"replica0/serving"``).
+        """
+        out: Dict[str, int] = {str(t): 0 for t in self.tenants}
         for (tn, _), res in self._res.items():
-            out[tn] = out.get(tn, 0) + res.get(tier, 0)
+            key = str(tn)
+            out[key] = out.get(key, 0) + res.get(tier, 0)
         return out
 
     # ------------------------------------------------------------------ #
     # budgets & admission                                                #
     # ------------------------------------------------------------------ #
-    def set_budget(self, tenant: str, tier: str, nbytes: int) -> None:
-        self._check_tenant(tenant)
-        self._budget.setdefault(tenant, {})[tier] = max(int(nbytes), 0)
+    def set_budget(self, tenant: TenantKey, tier: str, nbytes: int) -> None:
+        ns = Namespace.of(tenant).tenant_key()
+        self._check_tenant(ns)
+        self._budget.setdefault(ns, {})[tier] = max(int(nbytes), 0)
 
-    def budget(self, tenant: str, tier: str) -> Optional[int]:
-        return self._budget.get(tenant, {}).get(tier)
+    def budget(self, tenant: TenantKey, tier: str) -> Optional[int]:
+        return self._budget.get(
+            Namespace.of(tenant).tenant_key(), {}).get(tier)
 
-    def headroom(self, tenant: str, tier: str) -> int:
+    def headroom(self, tenant: TenantKey, tier: str) -> int:
         """Bytes ``tenant`` may still place on ``tier`` before its
         budget or the tier's capacity binds (can be negative after an
         arbiter shrinks a budget below current usage)."""
+        ns = Namespace.of(tenant).tenant_key()
         room = UNBOUNDED
-        b = self.budget(tenant, tier)
+        b = self.budget(ns, tier)
         if b is not None:
-            room = min(room, b - self.bytes_on(tier, tenant))
+            room = min(room, b - self.bytes_on(tier, ns))
         cap = self.capacity_bytes.get(tier)
         if cap is not None:
             room = min(room, cap - self.bytes_on(tier))
         return room
 
-    def can_place(self, tenant: str, tier: str, nbytes: int) -> bool:
+    def can_place(self, tenant: TenantKey, tier: str, nbytes: int) -> bool:
         return self.headroom(tenant, tier) >= nbytes
 
-    def over_budget(self, tenant: str, tier: str) -> int:
+    def over_budget(self, tenant: TenantKey, tier: str) -> int:
         """Bytes above the tenant's budget on ``tier`` (0 if within)."""
-        b = self.budget(tenant, tier)
+        ns = Namespace.of(tenant).tenant_key()
+        b = self.budget(ns, tier)
         if b is None:
             return 0
-        return max(self.bytes_on(tier, tenant) - b, 0)
+        return max(self.bytes_on(tier, ns) - b, 0)
 
     def over_budget_tenants(self, tier: str) -> Dict[str, int]:
         """Every tenant currently above its budget on ``tier`` — the
@@ -330,23 +397,24 @@ class ResidencyLedger:
         for t in self.tenants:
             over = self.over_budget(t, tier)
             if over > 0:
-                out[t] = over
+                out[str(t)] = over
         return out
 
     # ------------------------------------------------------------------ #
     # priced, gated moves                                                #
     # ------------------------------------------------------------------ #
-    def move(self, tenant: str, obj: str, src: str, dst: str, nbytes: int,
-             move_fn=None) -> Tuple[int, float]:
+    def move(self, tenant: TenantKey, obj: str, src: str, dst: str,
+             nbytes: int, move_fn=None) -> Tuple[int, float]:
         """Move bytes of one object between tiers through the shared
         executor: gate on ``can_place``, price over the topology, apply
         through ``move_fn`` (physical) or account directly, and record.
 
         Returns (bytes moved, priced seconds).
         """
-        self._check_tenant(tenant)
-        want = min(int(nbytes), self.object_bytes(tenant, obj, src))
-        grant = min(want, max(self.headroom(tenant, dst), 0))
+        ns = Namespace.of(tenant).tenant_key()
+        self._check_tenant(ns)
+        want = min(int(nbytes), self.object_bytes(ns, obj, src))
+        grant = min(want, max(self.headroom(ns, dst), 0))
         if grant <= 0:
             self.counters.denied_moves += 1
             return 0, 0.0
@@ -362,7 +430,7 @@ class ResidencyLedger:
             return 0, 0.0
         if move_fn is None:
             # no physical client: the ledger itself is the record
-            self.record_move(tenant, obj, src, dst, done)
+            self.record_move(ns, obj, src, dst, done)
         return done, cost
 
     # ------------------------------------------------------------------ #
@@ -382,16 +450,19 @@ class ResidencyLedger:
     def publish(self, registry, prefix: str = "ledger") -> int:
         """Publish the summary plus per-tenant residency and budgets
         into a repro.obs.MetricsRegistry as gauges; returns the number
-        of gauges set."""
+        of gauges set.  Gauge names use the short tenant form, so
+        cluster tenants publish under ``<prefix>.<replica>/<tenant>.*``
+        while single-host names are unchanged."""
         n = registry.set_gauges(self.summary(), prefix=prefix)
         tiers = sorted({t for res in self._res.values() for t in res})
-        for tenant in sorted(self.tenants):
+        for ns in sorted(self.tenants):
+            tenant = str(ns)
             for tier in tiers:
                 registry.gauge(
                     f"{prefix}.{tenant}.bytes_on.{tier}").set(
-                        float(self.bytes_on(tier, tenant)))
+                        float(self.bytes_on(tier, ns)))
                 n += 1
-            for tier, b in sorted(self._budget.get(tenant, {}).items()):
+            for tier, b in sorted(self._budget.get(ns, {}).items()):
                 registry.gauge(
                     f"{prefix}.{tenant}.budget.{tier}").set(float(b))
                 n += 1

@@ -160,10 +160,9 @@ class MoveScheduler:
         (see ``flush``), anything else waits for the next one.
         """
         if priority is None:
-            if self.ledger is not None and tenant in self.ledger.tenants:
-                priority = self.ledger.tenants[tenant].weight
-            else:
-                priority = 1.0
+            info = self.ledger.tenant_info(tenant) \
+                if self.ledger is not None else None
+            priority = info.weight if info is not None else 1.0
         self._pending.append(_Submission(
             tenant, delta, move_fn, float(priority), on_done, stats,
             self._order_seq,

@@ -9,6 +9,8 @@ Pallas decode-attention kernel (engine), and request/pool/migration
 metrics (metrics), and MoE expert weights as tiered objects with
 routing-driven heat and predictive prefetch (expert_pool).
 """
+from .config import (ClusterOptions, ConfigError, ExpertOptions,
+                     QoSOptions, ROUTER_POLICIES, TieringOptions)
 from .engine import (check_paged_support, kind_tiers, ServingConfig,
                      ServingEngine, ServingReport)
 from .expert_pool import ExpertCounters, ExpertPool
@@ -31,4 +33,6 @@ __all__ = [
     "ServingConfig", "ServingEngine", "ServingReport",
     "check_paged_support", "kind_tiers",
     "ExpertCounters", "ExpertPool",
+    "ClusterOptions", "ConfigError", "ExpertOptions", "QoSOptions",
+    "ROUTER_POLICIES", "TieringOptions",
 ]

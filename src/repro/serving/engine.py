@@ -35,6 +35,7 @@ from ..core.tiers import GiB, MemoryTier, tpu_v5e_tiers
 from ..kernels import ops
 from ..launch import steps as steps_mod
 from ..models import modules as M
+from . import config as config_mod
 from ..telemetry import (AccessSampler, AccessTrace, AdaptiveReplanner,
                          PhaseDetector, ReplanConfig, SamplerConfig)
 from .kv_pool import FAST_KIND, PagedKVPool, spec_from_config
@@ -323,6 +324,61 @@ class ServingConfig:
     # keep correcting the planning tiers online from audit residuals,
     # so replan verdicts and migration pricing run on measured numbers
     calibrate: bool = False
+    # ------------------------------------------------------------------
+    # nested sections (serving.config): the grouped view of the flat
+    # fields above.  Pass a section to configure by concern; pass the
+    # flat kwargs and __post_init__ populates the sections — both
+    # surfaces stay coherent either way.  ``cluster`` is new with the
+    # multi-host plane and has no flat mirror.
+    tiering: Optional["config_mod.TieringOptions"] = None
+    qos_options: Optional["config_mod.QoSOptions"] = None
+    experts: Optional["config_mod.ExpertOptions"] = None
+    cluster: Optional["config_mod.ClusterOptions"] = None
+
+    def __post_init__(self):
+        config_mod.sync_sections(self)
+
+    @classmethod
+    def from_args(cls, args) -> "ServingConfig":
+        """Build from a serve-CLI-shaped namespace, running every
+        cross-field validation (``config.validate_args``) first.
+        Raises :class:`~repro.serving.config.ConfigError` on any
+        violated constraint — the CLI maps that to ``parser.error``.
+        """
+        config_mod.validate_args(args)
+        get = lambda name, default=None: getattr(args, name, default)  # noqa: E731
+        replicas = int(get("replicas", 1) or 1)
+        cluster = None
+        if replicas > 1 or get("router") is not None:
+            cluster = config_mod.ClusterOptions(
+                replicas=replicas,
+                router=get("router") or "headroom-distance",
+                shard_model=bool(get("shard_model", True)))
+        return cls(
+            block_tokens=get("block_tokens", 16),
+            max_batch=get("batch", 4),
+            max_context=(get("prompt_len", 32) + get("new_tokens", 16)
+                         + get("block_tokens", 16)),
+            policy=get("policy", "tiering08"),
+            num_blocks=get("num_blocks"),
+            fast_block_budget=get("fast_blocks"),
+            adaptive=bool(get("adaptive")),
+            replan_every=get("replan_every", 8),
+            sample_rate=get("sample_rate", 1.0),
+            predictive=bool(get("predictive")),
+            calibrate=bool(get("calibrate")),
+            topology=get("topology"),
+            tenant=get("tenant") or "serving",
+            slo_p95_ttft_s=get("slo_p95_ttft"),
+            slo_p95_decode_s=get("slo_p95_decode"),
+            slo_p99_decode_s=get("slo_p99_decode"),
+            slo_p999_decode_s=get("slo_p999_decode"),
+            slo_window=get("slo_window", 512),
+            qos=bool(get("qos")),
+            fused_gather=bool(get("fused_gather")),
+            expert_policy=get("expert_policy"),
+            expert_fast_fraction=get("expert_fast_frac", 0.25),
+            cluster=cluster)
 
 
 @dataclasses.dataclass
@@ -366,7 +422,7 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params,
                  serving: Optional[ServingConfig] = None,
                  clock: Callable[[], float] = time.perf_counter,
-                 ledger=None):
+                 ledger=None, pool_sharding=None):
         check_paged_support(cfg)
         self.cfg = cfg
         self.sv = sv = serving or ServingConfig()
@@ -399,7 +455,8 @@ class ServingEngine:
         self.pool = PagedKVPool(
             num_blocks, bt, spec=spec, fast_block_budget=fast_budget,
             slow_kind=sv.slow_kind, default_kind=sv.slow_kind,
-            ledger=ledger, tenant=sv.tenant, pooled=sv.fused_gather)
+            ledger=ledger, tenant=sv.tenant, pooled=sv.fused_gather,
+            sharding_fn=pool_sharding)
         self.ledger = self.pool.ledger
         self._static_split = static
         self.tierer = KVBlockTierer(self.pool, sv.policy)

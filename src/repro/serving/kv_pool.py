@@ -124,7 +124,7 @@ class PagedKVPool:
                  slow_kind: str = "pinned_host",
                  default_kind: Optional[str] = None,
                  ledger=None, tenant: str = "kv",
-                 pooled: bool = False):
+                 pooled: bool = False, sharding_fn=None):
         if num_blocks <= 0:
             raise ValueError("num_blocks must be positive")
         if block_tokens <= 0:
@@ -136,6 +136,10 @@ class PagedKVPool:
         self.block_tokens = block_tokens
         self.spec = spec
         self.pooled = pooled
+        # cluster replicas pin payloads to their replica mesh instead
+        # of the process-default device, so block arrays and the
+        # replica's sharded params share one device set under jit
+        self.sharding_fn = sharding_fn
         self.k_store = self.v_store = None
         if pooled:
             import jax.numpy as jnp
@@ -295,6 +299,8 @@ class PagedKVPool:
     # payload I/O (data mode)                                            #
     # ------------------------------------------------------------------ #
     def _sharding(self, kind: str):
+        if self.sharding_fn is not None:
+            return self.sharding_fn(kind)
         from ..core.tiered_array import sharding_for_kind
         return sharding_for_kind(kind)
 

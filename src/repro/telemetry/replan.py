@@ -451,7 +451,7 @@ class AdaptiveReplanner:
             d.deferred = True
             d.moved_bytes = 0        # real bytes land at the flush
             self._deferred_pending = True
-            weight = self.ledger.tenants[self.tenant].weight
+            weight = self.ledger.tenant_info(self.tenant).weight
             self.move_scheduler.submit(
                 self.tenant, delta,
                 move_fn=self.executor.move_fn, priority=weight,

@@ -8,15 +8,16 @@ plus the TPU adaptation.  ``effective_tiers`` is the bridge into the
 analytic layer: distance-adjusted MemoryTier copies that the cost
 model, migration executor, and adaptive replanner price against.
 """
-from .builders import (build_topology, Testbed, TOPOLOGY_CHOICES,
-                       tpu_pod, two_socket_system)
+from .builders import (build_topology, ClusterTestbed, multi_host_pod,
+                       ROUTER_NODE, Testbed, TOPOLOGY_CHOICES, tpu_pod,
+                       two_socket_system)
 from .graph import (Flow, FlowResult, INTERFERENCE_CLASSES,
                     InterferenceMatrix, LinkKey, TopoLink, TopologyGraph,
                     TopoNode)
 
 __all__ = [
-    "Flow", "FlowResult", "INTERFERENCE_CLASSES", "InterferenceMatrix",
-    "LinkKey", "TopologyGraph", "TopoLink", "TopoNode",
-    "TOPOLOGY_CHOICES", "Testbed", "build_topology", "tpu_pod",
-    "two_socket_system",
+    "ClusterTestbed", "Flow", "FlowResult", "INTERFERENCE_CLASSES",
+    "InterferenceMatrix", "LinkKey", "ROUTER_NODE", "TopologyGraph",
+    "TopoLink", "TopoNode", "TOPOLOGY_CHOICES", "Testbed",
+    "build_topology", "multi_host_pod", "tpu_pod", "two_socket_system",
 ]

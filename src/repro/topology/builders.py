@@ -28,6 +28,10 @@ from .graph import TopologyGraph
 TOPOLOGY_CHOICES = ("vendor-a", "vendor-b", "vendor-c", "far-socket",
                     "tpu-pod")
 
+# the multi-host pod's front-end node: sessions enter here, so a
+# replica's routing distance is the ICI path from this node to its host
+ROUTER_NODE = "router"
+
 # cross-socket interconnect bandwidth per system (GB/s): A is EPYC xGMI,
 # B/C are SPR/EMR UPI 2.0 at 3-4 links
 _XSOCKET_BW = {"A": 230.0, "B": 125.0, "C": 160.0}
@@ -128,6 +132,96 @@ def tpu_pod() -> Testbed:
     return Testbed("tpu-pod", g, tiers, fast="HBM", capacity_tier="HOST",
                    description="TPU v5e host: HBM + host-over-PCIe + "
                                "one ICI peer")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterTestbed:
+    """A fleet of hosts: one global inter-host graph for routing and
+    budget arbitration, plus a *local* per-replica ``Testbed`` each
+    serving engine plans against.
+
+    The split mirrors the multi-host plane's ownership rule: a replica
+    prices its own promotions over its local graph; the router and the
+    cluster arbiter price placement over the global one (ICI distance
+    from the front-end, per-host fast capacity).
+    """
+
+    name: str
+    graph: TopologyGraph            # hosts + per-host tiers + ICI links
+    hosts: List[str]                # replica host nodes, host0..hostN-1
+    replicas: Dict[str, Testbed]    # replica name -> local testbed
+    tiers: Dict[str, MemoryTier]    # global-graph tier inventory
+    fast_tier: Dict[str, str]       # host -> its fast tier name
+    capacity_tier: Dict[str, str]   # host -> its CXL-class tier name
+    description: str = ""
+
+    def distance_ns(self, src: str, dst: str) -> float:
+        """Unloaded path latency between two nodes of the global graph."""
+        if src == dst:
+            return 0.0
+        return sum(l.latency_ns for l in self.graph.path(src, dst))
+
+    def describe(self) -> List[str]:
+        head = [f"cluster {self.name}: {self.description}"] \
+            if self.description else []
+        return head + self.graph.describe(self.tiers)
+
+
+def multi_host_pod(n_hosts: int = 2) -> ClusterTestbed:
+    """A TPU-style pod of ``n_hosts`` hosts on an ICI ring.
+
+    Each host carries its own fast tier (``FAST<i>``, HBM-class) and
+    CXL-class expander (``CXL<i>``) behind a per-host link — the
+    capacities the cluster arbiter splits per replica.  Hosts connect
+    to ring neighbors over ICI, and the front-end :data:`ROUTER_NODE`
+    attaches at host0, so routing distance grows with ring hops — the
+    asymmetry the session router prices against headroom.
+    """
+    if n_hosts < 1:
+        raise ValueError(f"n_hosts must be >= 1, got {n_hosts}")
+    base = tpu_v5e_tiers()
+    hbm, host_dram, ici = base["HBM"], base["HOST"], base["ICI_PEER"]
+    ici_lat = ici.unloaded_latency_ns - hbm.unloaded_latency_ns
+    cxl_lat = 700.0            # same PCIe/CXL hop the tpu-pod models
+    g = TopologyGraph(f"multi-host-{n_hosts}", origin=ROUTER_NODE)
+    g.add_node(ROUTER_NODE, kind="host")
+    tiers: Dict[str, MemoryTier] = {}
+    fast_tier: Dict[str, str] = {}
+    capacity_tier: Dict[str, str] = {}
+    hosts: List[str] = []
+    replicas: Dict[str, Testbed] = {}
+    for i in range(n_hosts):
+        h, fast, cap = f"host{i}", f"FAST{i}", f"CXL{i}"
+        hosts.append(h)
+        tiers[fast] = dataclasses.replace(hbm, name=fast)
+        tiers[cap] = dataclasses.replace(
+            host_dram, name=cap,
+            unloaded_latency_ns=host_dram.unloaded_latency_ns - cxl_lat)
+        fast_tier[h], capacity_tier[h] = fast, cap
+        g.add_node(h, kind="host")
+        g.add_node(f"fast{i}", kind="chip", tier=fast)
+        g.add_node(f"cxl{i}", kind="cxl", tier=cap)
+        g.add_link(h, f"fast{i}", 0.0, hbm.peak_bw_GBps, kind="local")
+        g.add_link(h, f"cxl{i}", cxl_lat, host_dram.peak_bw_GBps,
+                   kind="cxl")
+        # each replica plans its local promotions over its own graph —
+        # the per-replica topology the namespace scheme keys blame on
+        local = tpu_pod()
+        replicas[h] = dataclasses.replace(
+            local, name=f"{local.name}/{h}",
+            description=f"{local.description} (replica {h})")
+    for i in range(n_hosts):
+        j = (i + 1) % n_hosts
+        if j != i and (n_hosts > 2 or i < j):
+            g.add_link(f"host{i}", f"host{j}", ici_lat,
+                       ici.peak_bw_GBps, kind="ici")
+    g.add_link(ROUTER_NODE, "host0", ici_lat, ici.peak_bw_GBps,
+               kind="ici")
+    return ClusterTestbed(
+        f"multi-host-{n_hosts}", g, hosts, replicas, tiers,
+        fast_tier, capacity_tier,
+        description=f"{n_hosts}-host ICI ring, per-host HBM fast tier "
+                    f"+ CXL-class expander, front-end at host0")
 
 
 def build_topology(name: str) -> Testbed:

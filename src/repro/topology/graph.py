@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 from ..core.tiers import MemoryTier
 
@@ -117,6 +117,12 @@ class InterferenceMatrix:
     exactly.  ``pair_scale`` carries calibration: per
     ``(kind, victim, aggressor)`` multiplicative corrections fitted by
     the ``CostModelCalibrator`` from measured slowdown ratios.
+    ``link_scale`` refines that to one *physical* link: keyed by
+    ``(LinkKey, victim, aggressor)``, it takes precedence over the
+    kind-level ``pair_scale`` when pricing that exact link — two CXL
+    hops of the same kind can now carry different measured interference
+    (the PR 8 follow-on).  Both survive ``TopologyGraph.rebuilt()``
+    because the whole matrix is carried over.
     """
 
     class_weights: Mapping[Tuple[str, str], float] = dataclasses.field(
@@ -125,15 +131,25 @@ class InterferenceMatrix:
         default_factory=lambda: dict(DEFAULT_KIND_SCALE))
     pair_scale: Mapping[Tuple[str, str, str], float] = dataclasses.field(
         default_factory=dict)
+    # (LinkKey, victim, aggressor) -> scale; overrides pair_scale on
+    # that physical link
+    link_scale: Mapping[Tuple[LinkKey, str, str], float] = \
+        dataclasses.field(default_factory=dict)
 
-    def weight(self, link_kind: str, victim: str, aggressor: str) -> float:
+    def weight(self, link_kind: str, victim: str, aggressor: str,
+               link: Optional[LinkKey] = None) -> float:
         if victim == aggressor:
             w = 1.0
         else:
             base = self.class_weights.get((victim, aggressor), 1.0)
             scale = self.kind_scale.get(link_kind, 1.0)
             w = 1.0 + (base - 1.0) * scale
-        w *= self.pair_scale.get((link_kind, victim, aggressor), 1.0)
+        s = None
+        if link is not None:
+            s = self.link_scale.get((_key(*link), victim, aggressor))
+        if s is None:
+            s = self.pair_scale.get((link_kind, victim, aggressor), 1.0)
+        w *= s
         return max(w, 0.05)
 
     def with_pair_scales(self, scales: Mapping[Tuple[str, str, str], float]
@@ -141,6 +157,27 @@ class InterferenceMatrix:
         merged = dict(self.pair_scale)
         merged.update(scales)
         return dataclasses.replace(self, pair_scale=merged)
+
+    def with_link_scales(self, link: Union[LinkKey, str],
+                         scales: Mapping[Tuple[str, str], float]
+                         ) -> "InterferenceMatrix":
+        """Override interference scales on one physical link.
+
+        ``link`` is a LinkKey tuple or an ``"a-b"`` string; ``scales``
+        maps ``(victim, aggressor)`` class pairs to multipliers that
+        replace the kind-level ``pair_scale`` on that link only.
+        """
+        if isinstance(link, str):
+            a, _, b = link.partition("-")
+            if not b:
+                raise ValueError(f"link id {link!r} is not 'a-b' or a "
+                                 f"(a, b) tuple")
+            link = (a, b)
+        lk = _key(*link)
+        merged = dict(self.link_scale)
+        for (victim, aggressor), s in scales.items():
+            merged[(lk, victim, aggressor)] = float(s)
+        return dataclasses.replace(self, link_scale=merged)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -460,7 +497,7 @@ class TopologyGraph:
             clamped = False
             for l in links:
                 loads = offered[l.key]
-                wtotal = sum(m.weight(l.kind, f.cls, c) * v
+                wtotal = sum(m.weight(l.kind, f.cls, c, link=l.key) * v
                              for c, v in loads.items())
                 share = (l.bw_GBps * f.offered_GBps / wtotal
                          if wtotal > l.bw_GBps else f.offered_GBps)
